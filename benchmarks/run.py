@@ -1,0 +1,79 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  accuracy  — paper Fig. 3 / §5.1 (covariance errors, KL parameter sweep)
+  speed     — paper Fig. 4 / §5.2 (forward pass: ICR vs KISS-GP)
+  scaling   — paper Eq. 13 (O(N) check, log-log slope)
+  vi        — §3.2 end-to-end: standardized GP regression (MAP)
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--quick`` trims sizes for
+CI; ``--only <name>`` runs one table.
+"""
+import argparse
+import sys
+import time
+
+
+def _report(name: str, value: float, derived: str = ""):
+    print(f"{name},{value:.6g},{derived}", flush=True)
+
+
+def run_vi(report):
+    """End-to-end §3.2: MAP GP regression with the ICR prior (no kernel
+    inversion anywhere); reports wall time per optimization step + recon
+    quality."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (
+        ICR, gaussian_log_likelihood, map_fit, matern32, regular_chart,
+    )
+    from repro.data import charted_gp_dataset
+
+    c = regular_chart(64, 4, boundary="reflect")  # 1024 points
+    icr = ICR(chart=c, kernel=matern32.with_defaults(rho=40.0))
+    truth, obs_idx, y = charted_gp_dataset(icr, jax.random.PRNGKey(0))
+    mats = icr.matrices()
+    ll = gaussian_log_likelihood(0.05, obs_idx)
+    fwd = lambda xi: icr.apply_sqrt(mats, xi)
+    t0 = time.perf_counter()
+    steps = 200
+    xi, losses = map_fit(jax.random.PRNGKey(1), ll, fwd, icr.zero_xi(), y,
+                         steps=steps)
+    jax.block_until_ready(xi)
+    dt = time.perf_counter() - t0
+    rec = np.asarray(fwd(xi).reshape(-1))
+    rmse = float(np.sqrt(np.mean((rec - np.asarray(truth)) ** 2)))
+    report("vi/map_step", dt / steps * 1e6,
+           f"N={c.size} rmse={rmse:.3f} loss {float(losses[0]):.0f}->"
+           f"{float(losses[-1]):.0f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from . import accuracy, speed
+
+    tables = {
+        "accuracy": lambda: accuracy.run(_report),
+        "speed": lambda: speed.run(
+            _report, sizes=(256, 1024, 4096) if args.quick
+            else (256, 1024, 4096, 16384, 65536)),
+        "scaling": lambda: speed.run_scaling(
+            _report, sizes=(1024, 4096, 16384) if args.quick
+            else (1024, 4096, 16384, 65536, 262144)),
+        "vi": lambda: run_vi(_report),
+    }
+    print("name,us_per_call,derived")
+    for name, fn in tables.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        fn()
+        _report(f"{name}/_table_wall_s", (time.time() - t0) * 1e6, "")
+
+
+if __name__ == "__main__":
+    main()

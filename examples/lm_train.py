@@ -1,0 +1,39 @@
+"""Train a small LM from the assigned-architecture zoo on CPU.
+
+Uses the full production substrate — sharded step, deterministic pipeline,
+async checkpoints, fault supervisor — on a reduced config (~1-10M params).
+Every one of the 10 assigned archs works: try --arch zamba2-7b or
+--arch deepseek-v2-236b to train a tiny hybrid/MoE.
+
+Run:  PYTHONPATH=src python examples/lm_train.py --arch gemma3-4b --steps 100
+"""
+import argparse
+
+from repro.configs import arch_names, get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-15b",
+                    choices=arch_names())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    mesh = make_host_mesh()
+    res = train_loop(cfg, mesh, steps=args.steps, global_batch=args.batch,
+                     seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+                     log_every=10)
+    first = res.losses[0] if res.losses else float("nan")
+    print(f"\n{args.arch} (reduced): loss {first:.3f} -> "
+          f"{res.final_loss:.3f} over {res.steps_done} steps")
+    assert res.final_loss < first, "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

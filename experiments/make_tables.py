@@ -1,0 +1,53 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.json."""
+import json
+import sys
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "sample"]
+
+
+def fmt_row(r):
+    if r["status"] == "SKIP":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | — | — "
+                f"| — | — | — | {r.get('reason', '')[:46]} |")
+    if r["status"] != "OK":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']} | — | — | — | — | — | |")
+    mem = r.get("memory_per_device") or {}
+    fits = "Y" if mem.get("fits_hbm") else "OVER"
+    note = ""
+    if r.get("accum"):
+        note = f"accum={r['accum']}"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+        f"{r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} | "
+        f"{r['t_collective_s']:.3f} | {r['dominant'][:4]} | "
+        f"{r['roofline_fraction']:.3f} | "
+        f"{mem.get('total_bytes', 0)/1e9:.1f}GB {fits} {note} |")
+
+
+def main(path="experiments/dryrun/dryrun.json"):
+    rows = json.load(open(path))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r.get("shape",
+                                                                "sample")),
+                             r["mesh"] != "pod"))
+    print("| arch | shape | mesh | status | t_comp(s) | t_mem(s) | "
+          "t_coll(s) | dom | roofline frac | mem/device |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(fmt_row(r))
+    ok = sum(r["status"] == "OK" for r in rows)
+    skip = sum(r["status"] == "SKIP" for r in rows)
+    print(f"\n{ok} OK, {skip} SKIP (documented), "
+          f"{len(rows) - ok - skip} FAIL of {len(rows)} cells")
+    over = [r for r in rows if r["status"] == "OK"
+            and r.get("memory_per_device")
+            and not r["memory_per_device"]["fits_hbm"]]
+    print(f"cells over 16 GiB HBM: {len(over)}")
+    for r in over:
+        print(f"  {r['arch']}:{r['shape']}:{r['mesh']} "
+              f"{r['memory_per_device']['total_bytes']/1e9:.1f}GB")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

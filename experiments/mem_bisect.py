@@ -1,0 +1,47 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_arch, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_train_step, data_model_axes
+from repro.distributed.sharding import batch_spec, param_specs, shardings_for
+from repro.models import build_model, shard_ctx
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "gemma3-4b"
+cfg = get_arch(arch)
+cell = SHAPES["train_4k"]
+mesh = make_production_mesh()
+data_axes, model_axes = data_model_axes(mesh)
+shard_ctx.set_axes(mesh, data_axes, model_axes)
+model = build_model(cfg)
+specs = input_specs(cfg, cell)
+p_spec = model.params_spec()
+p_specs = param_specs(p_spec, mesh, data_axes, model_axes)
+p_sh = shardings_for(p_specs, mesh)
+b_sh = shardings_for(batch_spec(specs, mesh, data_axes), mesh)
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+rep = NamedSharding(mesh, P())
+
+
+def report(tag, lowered):
+    c = lowered.compile()
+    ma = c.memory_analysis()
+    print(f"{tag}: temp={ma.temp_size_in_bytes/1e9:.1f}GB "
+          f"args={ma.argument_size_in_bytes/1e9:.1f}GB", flush=True)
+
+
+# (a) forward loss only
+fwd = jax.jit(lambda p, b: model.loss_fn(p, b)[0],
+              in_shardings=(p_sh, b_sh), out_shardings=rep)
+report("fwd-only", fwd.lower(p_spec, specs))
+
+# (b) loss + grad
+grad = jax.jit(lambda p, b: jax.value_and_grad(
+    lambda pp: model.loss_fn(pp, b)[0])(p),
+    in_shardings=(p_sh, b_sh), out_shardings=(rep, p_sh))
+report("fwd+grad", grad.lower(p_spec, specs))

@@ -1,0 +1,31 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_dump_to=/tmp/xladump "
+                           "--xla_dump_hlo_as_text")
+import sys
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_arch, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import data_model_axes
+from repro.distributed.sharding import batch_spec, param_specs, shardings_for
+from repro.models import build_model, shard_ctx
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+cfg = get_arch("gemma3-4b")
+cell = SHAPES["train_4k"]
+mesh = make_production_mesh()
+da, ma = data_model_axes(mesh)
+shard_ctx.set_axes(mesh, da, ma)
+model = build_model(cfg)
+specs = input_specs(cfg, cell)
+p_spec = model.params_spec()
+p_sh = shardings_for(param_specs(p_spec, mesh, da, ma), mesh)
+b_sh = shardings_for(batch_spec(specs, mesh, da), mesh)
+rep = NamedSharding(mesh, P())
+fwd = jax.jit(lambda p, b: model.loss_fn(p, b)[0],
+              in_shardings=(p_sh, b_sh), out_shardings=rep)
+fwd.lower(p_spec, specs).compile()
+print("done")

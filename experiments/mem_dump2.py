@@ -1,0 +1,27 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_dump_to=/tmp/xladump2 "
+                           "--xla_dump_hlo_as_text")
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import SHAPES, get_arch, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import data_model_axes
+from repro.distributed.sharding import batch_spec, param_specs, shardings_for
+from repro.models import build_model, shard_ctx
+from jax.sharding import NamedSharding, PartitionSpec as P
+cfg = get_arch("gemma3-4b")
+cell = SHAPES["train_4k"]
+mesh = make_production_mesh()
+da, ma = data_model_axes(mesh)
+shard_ctx.set_axes(mesh, da, ma)
+model = build_model(cfg)
+specs = input_specs(cfg, cell)
+p_spec = model.params_spec()
+p_sh = shardings_for(param_specs(p_spec, mesh, da, ma), mesh)
+b_sh = shardings_for(batch_spec(specs, mesh, da), mesh)
+rep = NamedSharding(mesh, P())
+g = jax.jit(lambda p, b: jax.value_and_grad(
+    lambda pp: model.loss_fn(pp, b)[0])(p),
+    in_shardings=(p_sh, b_sh), out_shardings=(rep, p_sh))
+g.lower(p_spec, specs).compile()
+print("done")

@@ -1,0 +1,25 @@
+import os, sys
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_dump_to=/tmp/xladump3 "
+                           "--xla_dump_hlo_as_text")
+import jax
+from repro.configs import SHAPES, get_arch, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_train_step, choose_accum
+from repro.models import build_model
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "command-r-35b"
+cfg = get_arch(arch)
+cell = SHAPES["train_4k"]
+mesh = make_production_mesh()
+model = build_model(cfg)
+accum = choose_accum(model, cell, mesh)
+print("accum:", accum)
+ts = make_train_step(cfg, mesh, accum=accum)
+specs = input_specs(cfg, cell)
+jit_fn, _ = ts.fn(specs)
+p = ts.model.params_spec()
+o = jax.eval_shape(ts.optimizer.init, p)
+c = jit_fn.lower(p, o, specs).compile()
+ma = c.memory_analysis()
+print(f"temp={ma.temp_size_in_bytes/1e9:.1f} args={ma.argument_size_in_bytes/1e9:.1f} alias={ma.alias_size_in_bytes/1e9:.1f}")

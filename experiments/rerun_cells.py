@@ -1,0 +1,34 @@
+import json, sys
+sys.path.insert(0, 'src')
+from repro.launch.dryrun import _run_in_subprocess
+from concurrent.futures import ThreadPoolExecutor
+
+cells = []
+for mesh in ("pod", "multipod"):
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        cells.append(f"llama4-maverick-400b-a17b:{shape}:{mesh}")
+    cells += [
+        f"command-r-35b:train_4k:{mesh}",
+        f"deepseek-v2-236b:train_4k:{mesh}",
+        f"whisper-base:train_4k:{mesh}",
+        f"zamba2-7b:decode_32k:{mesh}",
+        f"internvl2-2b:prefill_32k:{mesh}",
+        f"gemma3-4b:train_4k:{mesh}",
+        f"gemma3-4b:prefill_32k:{mesh}",
+        f"icr-dust122b:sample:{mesh}",
+        f"icr-dust-pod:sample:{mesh}",
+        f"icr-log1d:sample:{mesh}",
+    ]
+
+path = 'experiments/dryrun/dryrun.json'
+rows = json.load(open(path))
+by_key = {(r['arch'], r.get('shape'), r['mesh']): i for i, r in enumerate(rows)}
+with ThreadPoolExecutor(max_workers=2) as pool:
+    for new in pool.map(_run_in_subprocess, cells):
+        key = (new['arch'], new.get('shape'), new['mesh'])
+        rows[by_key[key]] = new
+        mem = new.get('memory_per_device') or {}
+        print(key, new['status'], new.get('dominant'),
+              f"mem={mem.get('total_bytes',0)/1e9:.1f}GB fits={mem.get('fits_hbm')}",
+              (new.get('error') or '')[:100], flush=True)
+        json.dump(rows, open(path, 'w'), indent=1)

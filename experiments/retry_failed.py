@@ -1,0 +1,17 @@
+import json, os, sys
+sys.path.insert(0, 'src')
+from repro.launch.dryrun import _run_in_subprocess
+
+path = 'experiments/dryrun/dryrun.json'
+rows = json.load(open(path))
+failed = [r for r in rows if r['status'] not in ('OK', 'SKIP')]
+print(f"retrying {len(failed)} cells")
+by_key = {(r['arch'], r.get('shape'), r['mesh']): i for i, r in enumerate(rows)}
+from concurrent.futures import ThreadPoolExecutor
+cells = [f"{r['arch']}:{r.get('shape')}:{r['mesh']}" for r in failed]
+with ThreadPoolExecutor(max_workers=2) as pool:
+    for new in pool.map(_run_in_subprocess, cells):
+        key = (new['arch'], new.get('shape'), new['mesh'])
+        rows[by_key[key]] = new
+        print(key, new['status'], new.get('dominant'), (new.get('error') or '')[:150], flush=True)
+        json.dump(rows, open(path, 'w'), indent=1)

@@ -1,0 +1,14 @@
+"""repro — Sparse Kernel Gaussian Processes through Iterative Charted
+Refinement (ICR), as a production multi-pod JAX framework.
+
+  repro.core        — the paper (O(N) generative GP sampling + DistributedICR)
+  repro.kernels     — Pallas TPU kernels for the refinement hot-spot
+  repro.models      — the 10 assigned LM-family architectures
+  repro.configs     — --arch registry (exact configs + reduced smoke variants)
+  repro.distributed — FSDP x TP sharding rules, compression, elastic, fault
+  repro.launch      — production meshes, multi-pod dry-run, train/serve
+  repro.roofline    — loop-aware HLO cost model -> 3-term roofline
+
+See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+from .base import ArchConfig, MLAConfig, MoEConfig, SSMConfig, SHAPES, \
+    ShapeCell, input_specs
+from .registry import ARCHS, ICR_ARCHS, arch_names, get_arch
+
+__all__ = [
+    "ArchConfig", "MLAConfig", "MoEConfig", "SSMConfig", "SHAPES",
+    "ShapeCell", "input_specs", "ARCHS", "ICR_ARCHS", "arch_names",
+    "get_arch",
+]

@@ -1,0 +1,51 @@
+"""ICR — the paper's primary contribution (generative O(N) GP sampling).
+
+Public API:
+  Chart / regular_chart / log_chart / galactic_dust_chart — paper §4.3 charts
+  Kernel zoo (matern32, ...) — paper §3.1
+  ICR — sqrt(K_ICR) application, paper §4 / Alg. 1
+  DistributedICR — shard_map spatial sharding + halo exchange (multi-pod)
+  KissGP — baseline, paper §5.2
+  map_fit / advi_fit — standardized inference, paper §3.2
+"""
+from .charts import (
+    Chart,
+    galactic_dust_chart,
+    log_chart,
+    log_polar_chart,
+    regular_chart,
+)
+from .kernels import KERNELS, Kernel, exponential, kernel_matrix, matern32, matern52, rbf
+from .refine import LevelGeom, refine_level, refinement_matrices_level, level0_sqrt
+from .icr import ICR
+from .exact import cov_errors, exact_cov, exact_posterior, exact_sample, gauss_kl
+from .kissgp import KissGP
+from .standardize import (
+    Prior,
+    StandardizedModel,
+    lognormal_prior,
+    normal_prior,
+    uniform_prior,
+)
+from .vi import (
+    advi_fit,
+    gaussian_log_likelihood,
+    map_fit,
+    neg_log_joint,
+    poisson_log_likelihood,
+)
+
+__all__ = [
+    "Chart", "regular_chart", "log_chart", "log_polar_chart",
+    "galactic_dust_chart",
+    "Kernel", "KERNELS", "matern32", "matern52", "rbf", "exponential",
+    "kernel_matrix",
+    "LevelGeom", "refine_level", "refinement_matrices_level", "level0_sqrt",
+    "ICR",
+    "cov_errors", "exact_cov", "exact_posterior", "exact_sample", "gauss_kl",
+    "KissGP",
+    "Prior", "StandardizedModel", "lognormal_prior", "normal_prior",
+    "uniform_prior",
+    "map_fit", "advi_fit", "neg_log_joint", "gaussian_log_likelihood",
+    "poisson_log_likelihood",
+]

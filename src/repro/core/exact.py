@@ -1,0 +1,72 @@
+"""Exact (dense) GP reference — the oracle ICR is validated against (§5.1).
+
+Everything here is O(N^3)/O(N^2) and only used for small N in tests and the
+accuracy benchmarks (paper Fig. 3), never in the production path.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .charts import Chart
+from .kernels import kernel_matrix
+
+Array = jnp.ndarray
+
+
+def exact_cov(chart: Chart, kernel_fn: Callable, level: int | None = None) -> Array:
+    """Dense K_XX at the finest (or given) level's charted positions."""
+    level = chart.n_levels if level is None else level
+    pos = chart.grid_positions(level)
+    return kernel_matrix(kernel_fn, pos)
+
+
+def exact_sample(key, cov: Array, jitter: float = 1e-10) -> Array:
+    n = cov.shape[0]
+    chol = jnp.linalg.cholesky(cov + jitter * jnp.eye(n, dtype=cov.dtype))
+    return chol @ jax.random.normal(key, (n,), cov.dtype)
+
+
+def cov_errors(approx: Array, exact: Array) -> dict:
+    """Error metrics used in paper §5.1/§5.2 (MAE, max err, diag err)."""
+    diff = jnp.abs(approx - exact)
+    return {
+        "mae": jnp.mean(diff),
+        "max_abs_err": jnp.max(diff),
+        "max_diag_err": jnp.max(jnp.abs(jnp.diag(approx) - jnp.diag(exact))),
+        "rel_fro": jnp.linalg.norm(approx - exact) / jnp.linalg.norm(exact),
+    }
+
+
+def gauss_kl(cov_p: Array, cov_q: Array, jitter: float = 1e-10) -> Array:
+    """KL( N(0, cov_q) || N(0, cov_p) ) — the paper's §5.1 model-selection
+    measure for picking (n_csz, n_fsz): information lost when using the
+    approximation q (ICR) in place of the truth p (exact kernel).
+    """
+    n = cov_p.shape[0]
+    eye = jnp.eye(n, dtype=cov_p.dtype)
+    chol_p = jnp.linalg.cholesky(cov_p + jitter * eye)
+    chol_q = jnp.linalg.cholesky(cov_q + jitter * eye)
+    # tr(P^-1 Q) via triangular solves
+    a = jax.scipy.linalg.solve_triangular(chol_p, chol_q, lower=True)
+    tr = jnp.sum(a * a)
+    logdet_p = 2.0 * jnp.sum(jnp.log(jnp.diag(chol_p)))
+    logdet_q = 2.0 * jnp.sum(jnp.log(jnp.diag(chol_q)))
+    return 0.5 * (tr - n + logdet_p - logdet_q)
+
+
+def exact_posterior(cov: Array, obs_idx: Array, y: Array,
+                    noise_var: float) -> tuple:
+    """Exact GP regression posterior (mean, cov) on all points given noisy
+    observations of a subset. Oracle for the VI driver tests.
+    """
+    k_oo = cov[obs_idx][:, obs_idx]
+    k_xo = cov[:, obs_idx]
+    n = k_oo.shape[0]
+    g = k_oo + noise_var * jnp.eye(n, dtype=cov.dtype)
+    sol = jnp.linalg.solve(g, y)
+    mean = k_xo @ sol
+    post_cov = cov - k_xo @ jnp.linalg.solve(g, k_xo.T)
+    return mean, post_cov

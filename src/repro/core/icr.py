@@ -1,0 +1,153 @@
+"""Iterative Charted Refinement — the paper's core algorithm (§4, Alg. 1).
+
+``ICR`` is a *generative* representation of a GP: it applies an O(N)
+approximate square root of the kernel matrix to a standard-normal excitation
+vector ξ (paper §3.2):
+
+    s = sqrt(K_ICR)(ξ)  with  <s sᵀ> ≈ K_XX.
+
+There is no inversion and no log-determinant anywhere — evaluating the model
+(and its VJP) is two applications of the square root (paper §1).
+
+The excitation ξ is a list of arrays, one per level:
+  ξ[0]: (prod(shape0),)           — exact coarse-grid excitation
+  ξ[l]: (F_l, n_fsz^d), l=1..L    — per-family fine corrections
+
+Matrices depend on the kernel parameters θ and are (re)computed *inside* the
+jitted step when θ is learned; they are a pytree so they can also be
+precomputed and donated for fixed-θ sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Mapping, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .charts import Chart
+from .kernels import Kernel
+from .refine import (
+    LevelGeom,
+    level0_sqrt,
+    refine_level,
+    refinement_matrices_level,
+)
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ICR:
+    """Iterative Charted Refinement model over `chart` with `kernel`."""
+
+    chart: Chart
+    kernel: Kernel
+    jitter: float = 1e-6
+    use_pallas: bool = False  # route stationary levels through repro.kernels
+
+    # -- shapes ---------------------------------------------------------------
+    def xi_shapes(self) -> List[tuple]:
+        nd = self.chart.ndim
+        shapes = [(int(np.prod(self.chart.shape0)),)]
+        for lvl in range(self.chart.n_levels):
+            t = tuple(
+                self.chart.family_count(lvl, a) for a in range(nd)
+            )
+            shapes.append((int(np.prod(t)), self.chart.n_fsz**nd))
+        return shapes
+
+    def xi_size(self) -> int:
+        return sum(int(np.prod(s)) for s in self.xi_shapes())
+
+    @property
+    def out_shape(self) -> tuple:
+        return self.chart.final_shape
+
+    # -- parameters -----------------------------------------------------------
+    def init_xi(self, key, dtype=jnp.float32) -> List[Array]:
+        keys = jax.random.split(key, self.chart.n_levels + 1)
+        return [
+            jax.random.normal(k, s, dtype)
+            for k, s in zip(keys, self.xi_shapes())
+        ]
+
+    def zero_xi(self, dtype=jnp.float32) -> List[Array]:
+        return [jnp.zeros(s, dtype) for s in self.xi_shapes()]
+
+    # -- matrices (functions of theta) ----------------------------------------
+    def matrices(self, theta: Mapping[str, Array] | None = None) -> dict:
+        """Refinement matrices for kernel parameters theta (paper Eq. 7/8).
+
+        O(n_csz^{3d} · N) work, dominated by the finest level; differentiable
+        w.r.t. theta.
+        """
+        k = self.kernel(theta)
+        out = {
+            "sqrt0": level0_sqrt(self.chart, k, jitter=self.jitter),
+            "R": [],
+            "sqrtD": [],
+        }
+        for lvl in range(self.chart.n_levels):
+            r, sd = refinement_matrices_level(
+                self.chart, k, lvl, jitter=self.jitter
+            )
+            out["R"].append(r)
+            out["sqrtD"].append(sd)
+        return out
+
+    # -- forward --------------------------------------------------------------
+    def apply_sqrt(self, mats: dict, xi: Sequence[Array]) -> Array:
+        """Apply sqrt(K_ICR) to ξ (paper Alg. 1). Returns the finest field."""
+        field = (mats["sqrt0"] @ xi[0]).reshape(self.chart.shape0)
+        for lvl in range(self.chart.n_levels):
+            geom = LevelGeom.for_level(self.chart, lvl)
+            if self.use_pallas and self._stationary_level(lvl):
+                from repro.kernels import ops as kops
+
+                field = kops.refine_stationary(
+                    field, xi[lvl + 1], mats["R"][lvl], mats["sqrtD"][lvl],
+                    geom,
+                )
+            else:
+                field = refine_level(
+                    field, xi[lvl + 1], mats["R"][lvl], mats["sqrtD"][lvl],
+                    geom,
+                )
+        return field
+
+    def _stationary_level(self, lvl: int) -> bool:
+        return all(self.chart.invariant)
+
+    def __call__(self, xi: Sequence[Array],
+                 theta: Mapping[str, Array] | None = None) -> Array:
+        return self.apply_sqrt(self.matrices(theta), xi)
+
+    def sample(self, key, theta=None, dtype=jnp.float32) -> Array:
+        """Draw one approximate GP sample (paper Alg. 1)."""
+        return self(self.init_xi(key, dtype), theta)
+
+    # -- diagnostics ----------------------------------------------------------
+    def implicit_sqrt(self, theta=None, dtype=jnp.float64) -> Array:
+        """Dense sqrt(K_ICR) as an (N, n_xi) matrix via one jacobian.
+
+        Only for small N (validation vs. the exact kernel, paper §5.1).
+        """
+        mats = self.matrices(theta)
+        shapes = self.xi_shapes()
+        sizes = [int(np.prod(s)) for s in shapes]
+
+        def flat_apply(xi_flat):
+            xs, o = [], 0
+            for s, n in zip(shapes, sizes):
+                xs.append(xi_flat[o : o + n].reshape(s))
+                o += n
+            return self.apply_sqrt(mats, xs).reshape(-1)
+
+        return jax.jacfwd(flat_apply)(jnp.zeros(sum(sizes), dtype))
+
+    def implicit_cov(self, theta=None, dtype=jnp.float64) -> Array:
+        """Dense K_ICR = sqrt(K_ICR) sqrt(K_ICR)ᵀ (paper Fig. 3)."""
+        a = self.implicit_sqrt(theta, dtype)
+        return a @ a.T

@@ -1,0 +1,100 @@
+"""Stationary covariance kernels (paper §3.1, Eq. 14).
+
+Kernels are represented as factories: ``kernel(theta) -> k`` where ``k`` is a
+callable acting on *distances* ``d >= 0``. All kernels are isotropic on the
+modeled space ``D`` — anisotropy/irregularity is supplied by the coordinate
+chart (paper §4.3), not the kernel.
+
+theta is a flat dict of scalars so it can be standardized (core.standardize)
+and learned jointly with the field (paper Eq. 2/3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+KernelFn = Callable[[Array], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Kernel:
+    """A stationary kernel family ``k_theta(d)``."""
+
+    name: str
+    fn: Callable[[Mapping[str, Array]], KernelFn]
+    default_theta: Mapping[str, float]
+
+    def __call__(self, theta: Mapping[str, Array] | None = None) -> KernelFn:
+        theta = dict(self.default_theta) if theta is None else dict(theta)
+        return self.fn(theta)
+
+    def with_defaults(self, **kw) -> "Kernel":
+        d = dict(self.default_theta)
+        d.update(kw)
+        return dataclasses.replace(self, default_theta=d)
+
+
+def _matern32_fn(theta):
+    rho, sigma = theta["rho"], theta.get("sigma", 1.0)
+
+    def k(d):
+        z = jnp.sqrt(3.0) * d / rho
+        return sigma**2 * (1.0 + z) * jnp.exp(-z)
+
+    return k
+
+
+def _matern52_fn(theta):
+    rho, sigma = theta["rho"], theta.get("sigma", 1.0)
+
+    def k(d):
+        z = jnp.sqrt(5.0) * d / rho
+        return sigma**2 * (1.0 + z + z**2 / 3.0) * jnp.exp(-z)
+
+    return k
+
+
+def _rbf_fn(theta):
+    rho, sigma = theta["rho"], theta.get("sigma", 1.0)
+
+    def k(d):
+        return sigma**2 * jnp.exp(-0.5 * (d / rho) ** 2)
+
+    return k
+
+
+def _exponential_fn(theta):
+    rho, sigma = theta["rho"], theta.get("sigma", 1.0)
+
+    def k(d):
+        return sigma**2 * jnp.exp(-d / rho)
+
+    return k
+
+
+#: Matérn-3/2 — the paper's experimental kernel (Eq. 14).
+matern32 = Kernel("matern32", _matern32_fn, {"rho": 1.0, "sigma": 1.0})
+matern52 = Kernel("matern52", _matern52_fn, {"rho": 1.0, "sigma": 1.0})
+rbf = Kernel("rbf", _rbf_fn, {"rho": 1.0, "sigma": 1.0})
+exponential = Kernel("exponential", _exponential_fn, {"rho": 1.0, "sigma": 1.0})
+
+KERNELS = {k.name: k for k in (matern32, matern52, rbf, exponential)}
+
+
+def kernel_matrix(k: KernelFn, x: Array, y: Array | None = None) -> Array:
+    """Dense kernel matrix ``K[i, j] = k(||x_i - y_j||)``.
+
+    x: (N, dim) or (N,) points in the modeled space D.
+    """
+    y = x if y is None else y
+    x = jnp.atleast_2d(x.T).T if x.ndim == 1 else x
+    y = jnp.atleast_2d(y.T).T if y.ndim == 1 else y
+    if x.ndim == 1:
+        x = x[:, None]
+    if y.ndim == 1:
+        y = y[:, None]
+    d = jnp.linalg.norm(x[:, None, :] - y[None, :, :], axis=-1)
+    return k(d)

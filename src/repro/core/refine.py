@@ -1,0 +1,218 @@
+"""Refinement matrices and one refinement step (paper §4.1–4.4).
+
+A refinement family conditions ``n_fsz^d`` fine pixels on their ``n_csz^d``
+nearest coarse pixels:
+
+    R      = K_fc K_cc^{-1}                      (paper Eq. 7)
+    D      = K_ff − K_fc K_cc^{-1} K_cf          (paper Eq. 8)
+    s_f    = R s_c + sqrt(D) ξ_f                 (paper Eq. 9)
+
+On chart-invariant axes the matrices are identical for every family along
+that axis and are broadcast (paper §4.3). The reference apply path below is
+pure jnp; the TPU hot path lives in repro.kernels (Pallas).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .charts import Chart
+from .kernels import kernel_matrix
+
+Array = jnp.ndarray
+
+
+def _family_positions(chart: Chart, level: int):
+    """Per-axis chart coords of family windows, collapsed on invariant axes.
+
+    Returns (coarse_axes, fine_axes, full_T, kept_T):
+      coarse_axes[a]: (T'_a, n_csz) chart coords (T'_a == 1 if invariant)
+      fine_axes[a]:   (T'_a, n_fsz)
+      full_T: true family counts per axis; kept_T: materialized counts.
+    """
+    coarse_axes, fine_axes, full_T, kept_T = [], [], [], []
+    for a in range(chart.ndim):
+        cw = chart.axis_coarse_windows(level, a)
+        fw = chart.axis_fine_windows(level, a)
+        full_T.append(cw.shape[0])
+        if chart.invariant[a]:
+            # representative family: interior one (away from reflect boundary)
+            rep = min(cw.shape[0] - 1, chart.b)
+            cw, fw = cw[rep : rep + 1], fw[rep : rep + 1]
+        coarse_axes.append(cw)
+        fine_axes.append(fw)
+        kept_T.append(cw.shape[0])
+    return coarse_axes, fine_axes, tuple(full_T), tuple(kept_T)
+
+
+def _psd_sqrt(mat: Array, eps: Array) -> Array:
+    """Square root of a (nearly) PSD matrix via eigh with eigenvalue clipping.
+
+    The paper only requires SOME sqrt with sqrt·sqrtᵀ = D (§3.2: "the
+    square-root ... is not uniquely defined"). For strongly correlated fine
+    points D is numerically semi-definite in f32; eigh+clip is robust where
+    Cholesky NaNs.
+    """
+    evals, evecs = jnp.linalg.eigh(mat)
+    evals = jnp.maximum(evals, eps)
+    return evecs * jnp.sqrt(evals)[..., None, :]
+
+
+def _nd_points(axes_windows: Sequence[Array]) -> Array:
+    """Tensor-product of per-axis window coords -> (..., W^d, ndim).
+
+    axes_windows[a]: (w_a,) chart coords along axis a for ONE family.
+    Returns (prod(w_a), ndim).
+    """
+    grids = jnp.meshgrid(*axes_windows, indexing="ij")
+    return jnp.stack([g.reshape(-1) for g in grids], axis=-1)
+
+
+def refinement_matrices_level(chart: Chart, kernel_fn: Callable, level: int,
+                              *, jitter: float = 1e-6):
+    """Refinement matrices (R, sqrt(D)) for all families refining `level`.
+
+    Returns (R, sqrtD) with leading dims = kept_T (invariant axes collapsed
+    to 1): R: (*kept_T, n_fsz^d, n_csz^d), sqrtD: (*kept_T, n_fsz^d, n_fsz^d).
+    """
+    coarse_axes, fine_axes, full_T, kept_T = _family_positions(chart, level)
+    nd = chart.ndim
+    csz, fsz = chart.n_csz**nd, chart.n_fsz**nd
+
+    def one_family(cws, fws):
+        # cws[a]: (n_csz,), fws[a]: (n_fsz,) chart coords
+        cpos = chart.map_to_D(_nd_points(cws))  # (csz, dim_D)
+        fpos = chart.map_to_D(_nd_points(fws))  # (fsz, dim_D)
+        k_cc = kernel_matrix(kernel_fn, cpos)
+        k_fc = kernel_matrix(kernel_fn, fpos, cpos)
+        k_ff = kernel_matrix(kernel_fn, fpos)
+        eps = jitter * jnp.mean(jnp.diag(k_cc))
+        k_cc = k_cc + eps * jnp.eye(csz, dtype=k_cc.dtype)
+        r = jnp.linalg.solve(k_cc, k_fc.T).T              # (fsz, csz), Eq. 7
+        d = k_ff - r @ k_fc.T                             # Eq. 8
+        d = 0.5 * (d + d.T)
+        sqrt_d = _psd_sqrt(d, jitter * jnp.mean(jnp.diag(k_ff)))
+        return r, sqrt_d
+
+    fn = one_family
+    # vmap over each axis' family dimension (size 1 on invariant axes)
+    for a in reversed(range(nd)):
+        in_axes = ([0 if i == a else None for i in range(nd)],
+                   [0 if i == a else None for i in range(nd)])
+        fn = jax.vmap(fn, in_axes=in_axes)
+    cws = [jnp.asarray(coarse_axes[a]) for a in range(nd)]
+    fws = [jnp.asarray(fine_axes[a]) for a in range(nd)]
+    r, sqrt_d = fn(cws, fws)
+    return r, sqrt_d
+
+
+def level0_sqrt(chart: Chart, kernel_fn: Callable, *, jitter: float = 1e-6):
+    """Exact Cholesky sqrt of the level-0 kernel matrix (small by design)."""
+    pos = chart.grid_positions(0)
+    k = kernel_matrix(kernel_fn, pos)
+    return _psd_sqrt(0.5 * (k + k.T), jitter * jnp.mean(jnp.diag(k)))
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelGeom:
+    """Static geometry of one refinement application (trace-time constants)."""
+
+    coarse_shape: tuple
+    fine_shape: tuple
+    T: tuple          # families per axis
+    kept_T: tuple     # materialized matrix counts per axis (1 on invariant)
+    n_csz: int
+    n_fsz: int
+    stride: int
+    b: int
+    boundary: str
+
+    @classmethod
+    def for_level(cls, chart: Chart, level: int) -> "LevelGeom":
+        _, _, full_T, kept_T = _family_positions(chart, level)
+        return cls(
+            coarse_shape=chart.shape(level),
+            fine_shape=chart.shape(level + 1),
+            T=full_T,
+            kept_T=kept_T,
+            n_csz=chart.n_csz,
+            n_fsz=chart.n_fsz,
+            stride=chart.stride,
+            b=chart.b,
+            boundary=chart.boundary,
+        )
+
+
+def _axis_windows(arr: Array, axis: int, geom: LevelGeom) -> Array:
+    """Extract per-family coarse windows along `axis` with shifted strided
+    slices (TPU-friendly: no gather). Appends a window dim at the end.
+
+    arr: (..., N_axis, ...) -> (..., T_axis, ..., n_csz) with the window dim
+    appended as the new last dimension.
+    """
+    t = geom.T[axis]
+    if geom.boundary == "reflect":
+        b = geom.b
+        pad = [(0, 0)] * arr.ndim
+        pad[axis] = (b, b)
+        arr = jnp.pad(arr, pad, mode="reflect")
+    slices = []
+    for k in range(geom.n_csz):
+        limit = k + geom.stride * (t - 1) + 1
+        slices.append(
+            lax.slice_in_dim(arr, k, limit, stride=geom.stride, axis=axis)
+        )
+    return jnp.stack(slices, axis=-1)
+
+
+def refine_level(coarse: Array, xi: Array, r: Array, sqrt_d: Array,
+                 geom: LevelGeom) -> Array:
+    """One refinement application (paper Eq. 9 / Alg. 1 inner loop).
+
+    coarse: (*coarse_shape); xi: (prod(T), n_fsz^d)
+    r: (*kept_T, fsz^d, csz^d); sqrt_d: (*kept_T, fsz^d, fsz^d)
+    Returns fine field (*fine_shape).
+    """
+    nd = len(geom.coarse_shape)
+    w = coarse
+    for a in range(nd):
+        w = _axis_windows(w, a, geom)
+    # w: (T_0..T_{nd-1}, csz, csz, ...) -> (*T, csz^d)
+    csz, fsz = geom.n_csz**nd, geom.n_fsz**nd
+    f_total = int(np.prod(geom.T))
+    w = w.reshape(geom.T + (csz,))
+
+    # Batched GEMM over the NON-invariant family dims only: invariant axes
+    # become the GEMM row dim, so the shared matrices are NEVER broadcast-
+    # materialized to (F, fsz, csz) — at dust-map scale that expansion is
+    # ~100 GB/device (EXPERIMENTS.md §Perf iteration 4).
+    kept_axes = [a for a in range(nd) if geom.kept_T[a] > 1]
+    inv_axes = [a for a in range(nd) if geom.kept_T[a] == 1]
+    perm = kept_axes + inv_axes
+    k_tot = int(np.prod([geom.T[a] for a in kept_axes])) or 1
+    i_tot = int(np.prod([geom.T[a] for a in inv_axes])) or 1
+
+    w_p = w.transpose(perm + [nd]).reshape(k_tot, i_tot, csz)
+    xi_p = xi.reshape(geom.T + (fsz,)).transpose(perm + [nd]) \
+        .reshape(k_tot, i_tot, fsz)
+    r_b = r.reshape(k_tot, fsz, csz)
+    d_b = sqrt_d.reshape(k_tot, fsz, fsz)
+
+    fine = jnp.einsum("kic,kfc->kif", w_p, r_b)
+    fine = fine + jnp.einsum("kif,kgf->kig", xi_p, d_b)
+
+    # back to (*T, fsz^d), then interleave family and child dims
+    t_perm = [geom.T[a] for a in perm]
+    inv_perm = [perm.index(a) for a in range(nd)]
+    fine = fine.reshape(t_perm + [fsz]).transpose(inv_perm + [nd])
+    fine = fine.reshape(geom.T + (geom.n_fsz,) * nd)
+    interleave = []
+    for a in range(nd):
+        interleave += [a, nd + a]
+    fine = fine.transpose(interleave)
+    return fine.reshape(geom.fine_shape)

@@ -1,0 +1,4 @@
+from .pipeline import SyntheticLMData, make_batch_iterator
+from .gp_data import charted_gp_dataset
+
+__all__ = ["SyntheticLMData", "make_batch_iterator", "charted_gp_dataset"]

@@ -1,0 +1,107 @@
+"""Deterministic synthetic data pipeline.
+
+Production shape: per-host sharded loading (each host materializes only its
+addressable slice), double-buffered prefetch on a background thread, and
+step-indexed determinism — batch(step) is a pure function of (seed, step),
+so restarts from a checkpoint resume the exact data order with no persisted
+iterator state (the same property real pipelines get from deterministic
+sharded file indexes).
+
+The token stream is a mixture of Zipf-distributed unigrams and short
+repeated motifs, giving next-token structure a model can actually learn in
+a few hundred steps (examples/lm_train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMData:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    motif_len: int = 8
+    n_motifs: int = 64
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+
+    def _motifs(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + 7)
+        return rng.integers(0, self.vocab_size,
+                            (self.n_motifs, self.motif_len))
+
+    def batch(self, step: int, *, host_id: int = 0,
+              host_count: int = 1) -> dict:
+        """Batch for `step`; hosts materialize disjoint row slices."""
+        assert self.global_batch % host_count == 0
+        rows = self.global_batch // host_count
+        rng = self._rng(step * host_count + host_id)
+        motifs = self._motifs()
+        # Zipf-ish unigram floor
+        ranks = np.arange(1, self.vocab_size + 1)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        toks = rng.choice(self.vocab_size, size=(rows, self.seq_len + 1),
+                          p=probs)
+        # plant motifs: ~25% of positions covered by copyable patterns
+        n_plant = max((self.seq_len // self.motif_len) // 4, 1)
+        for r in range(rows):
+            for _ in range(n_plant):
+                m = motifs[rng.integers(0, self.n_motifs)]
+                at = rng.integers(0, self.seq_len + 1 - self.motif_len)
+                toks[r, at : at + self.motif_len] = m
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+
+def make_batch_iterator(source: SyntheticLMData, *, start_step: int = 0,
+                        prefetch: int = 2, host_id: int = 0,
+                        host_count: int = 1,
+                        shardings=None) -> Iterator[dict]:
+    """Double-buffered iterator: batch N+1 is built (and device_put) while
+    the model runs step N. Restart-safe: pass the checkpointed step as
+    `start_step` and the stream resumes exactly."""
+    q: queue.Queue = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def put(step):
+        b = source.batch(step, host_id=host_id, host_count=host_count)
+        if shardings is not None:
+            b = jax.tree.map(jax.device_put, b, shardings)
+        return b
+
+    def worker():
+        step = start_step
+        while not stop.is_set():
+            try:
+                q.put(put(step), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+
+    class _Iter:
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            return q.get()
+
+        def close(self):
+            stop.set()
+
+    return _Iter()

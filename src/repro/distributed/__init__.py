@@ -1,0 +1,17 @@
+from .sharding import (
+    batch_spec,
+    cache_specs,
+    param_specs,
+    shardings_for,
+    with_batch_constraint,
+)
+from .compression import compressed_psum, make_error_feedback_state
+from .elastic import remesh
+from .fault import FaultSupervisor, StragglerMonitor
+
+__all__ = [
+    "param_specs", "batch_spec", "cache_specs", "shardings_for",
+    "with_batch_constraint",
+    "compressed_psum", "make_error_feedback_state",
+    "remesh", "FaultSupervisor", "StragglerMonitor",
+]

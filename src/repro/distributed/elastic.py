@@ -1,0 +1,44 @@
+"""Elastic re-meshing: move a sharded pytree onto a different mesh.
+
+When the fleet shrinks (node failure, preemption) or grows (nodes return),
+the supervisor rebuilds the mesh and calls ``remesh`` on params + optimizer
+state; training resumes at the same step with the new device count — only
+the per-device batch slice changes. Resharding is a device_put with the new
+NamedShardings (XLA moves only the bytes that must move).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def remesh(tree: PyTree, new_mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    """Re-shard `tree` onto `new_mesh` with `spec_tree` PartitionSpecs.
+
+    Specs whose axes don't divide on the new mesh degrade to replication
+    (same graceful rule as sharding.py).
+    """
+    def fit(spec, leaf):
+        dims = []
+        for i, axes in enumerate(tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            if axes is None:
+                dims.append(None)
+                continue
+            ax = (axes,) if isinstance(axes, str) else tuple(axes)
+            size = 1
+            ok = True
+            for a in ax:
+                if a not in new_mesh.shape:
+                    ok = False
+                    break
+                size *= new_mesh.shape[a]
+            dims.append(axes if ok and leaf.shape[i] % size == 0 else None)
+        return NamedSharding(new_mesh, P(*dims))
+
+    return jax.tree.map(
+        lambda leaf, spec: jax.device_put(leaf, fit(spec, leaf)),
+        tree, spec_tree)

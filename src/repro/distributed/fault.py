@@ -1,0 +1,78 @@
+"""Fault tolerance & straggler mitigation for the training driver.
+
+On a real fleet the runtime signals failures as exceptions from the jitted
+step (device halt, DCN timeout) or through the coordination service. The
+driver policy implemented here (launch/train.py):
+
+  1. every step runs under the FaultSupervisor; an exception triggers
+     restore-from-latest-checkpoint and (optionally) an elastic re-mesh to
+     the surviving device set;
+  2. the StragglerMonitor tracks a robust step-time estimate (median + MAD);
+     a step slower than ``threshold`` MADs is counted against the culprit —
+     on TPU fleets, persistent stragglers get the host marked for hot-spare
+     swap at the next checkpoint boundary (here: reported via callback);
+  3. checkpoint cadence adapts: after a failure the next checkpoint is
+     immediate, then cadence decays back to the configured interval.
+
+Tests inject synthetic failures/stragglers (tests/test_fault.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold_mads: float = 6.0
+    window: int = 64
+    min_samples: int = 8
+    _times: list = dataclasses.field(default_factory=list)
+    stragglers: int = 0
+
+    def observe(self, step_time: float) -> bool:
+        """Record a step time; returns True if it was a straggler step."""
+        times = self._times
+        is_straggler = False
+        if len(times) >= self.min_samples:
+            med = float(np.median(times))
+            mad = float(np.median(np.abs(np.asarray(times) - med))) + 1e-9
+            if step_time > med + self.threshold_mads * mad and \
+                    step_time > 1.5 * med:
+                is_straggler = True
+                self.stragglers += 1
+        times.append(step_time)
+        if len(times) > self.window:
+            times.pop(0)
+        return is_straggler
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self._times)) if self._times else 0.0
+
+
+@dataclasses.dataclass
+class FaultSupervisor:
+    """Wraps the train step with restore-and-retry semantics."""
+
+    restore_fn: Callable[[], tuple]        # () -> (step, state)
+    max_restarts: int = 5
+    on_failure: Optional[Callable] = None  # (exc, restart_count) -> None
+    restarts: int = 0
+
+    def run(self, step_fn: Callable, state, step: int):
+        """Run one step; on failure restore from checkpoint and signal the
+        caller to rebuild (returns (state, step, failed=True))."""
+        try:
+            return step_fn(state), step + 1, False
+        except Exception as exc:  # noqa: BLE001 — any device/runtime error
+            self.restarts += 1
+            if self.on_failure is not None:
+                self.on_failure(exc, self.restarts)
+            if self.restarts > self.max_restarts:
+                raise
+            step, state = self.restore_fn()
+            return state, step, True

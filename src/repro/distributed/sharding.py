@@ -1,0 +1,205 @@
+"""Sharding rules: param/optimizer/activation/cache PartitionSpecs.
+
+Strategy (DESIGN.md §5) — FSDP x TP hybrid:
+  * column-parallel weights (in -> heads/ff/experts): last dim over 'model',
+    second-to-last over data axes (FSDP slice; GSPMD all-gathers at use and
+    reduce-scatters the gradient — ZeRO-3 semantics for free);
+  * row-parallel weights (wo / down): 'model' on the input dim, data on the
+    output dim;
+  * MoE expert stacks: experts over 'model' (expert parallelism), FSDP over
+    the next dim;
+  * embedding (V, D): V over 'model', D over data; lm_head (D, V): V over
+    'model' so logits are vocab-sharded (the chunked loss relies on it);
+  * optimizer state inherits its parameter's spec leaf-by-leaf (moments have
+    identical shapes; adafactor row/col stats drop the factored-away axis);
+  * KV caches: heads over 'model' when divisible, else the *sequence* dim
+    (distributed flash-decode: GSPMD inserts the softmax psums);
+  * every rule degrades gracefully: a dim that doesn't divide its mesh axes
+    is replicated instead.
+
+Multi-pod: pass data_axes=("pod", "data") — batch and FSDP shards then span
+pods; gradient all-reduces become hierarchical (ICI within pod, DCN across).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Sequence
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# leaf-name -> role tables (names come from models/*.py init functions)
+_COL = {
+    "wq", "wk", "wv", "gate", "up", "w_in", "wqkv", "w_gates", "w_dq",
+    "w_uq", "w_dkv", "w_uk", "w_uv", "wo_gate", "wif", "router", "r_gates",
+    "lm_head", "frontend", "pos_embed",
+}
+_ROW = {"wo", "down", "w_out"}
+_EMBED = {"table"}
+# always replicated (tiny, used every layer; stacked variants included)
+_REPLICATE = {"scale", "b_up", "b_down", "bq", "bk", "bv", "bo",
+              "a_log", "dt_bias", "d_skip"}
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if not axes:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else axes
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """Return axes if dim divides their product, else None (replicate)."""
+    return axes if axes and dim % _axes_size(mesh, axes) == 0 else None
+
+
+def _leaf_spec(path_names, shape, mesh, data_axes, model_axes) -> P:
+    name = path_names[-1] if path_names else ""
+    nd = len(shape)
+    spec = [None] * nd
+    in_moe = "moe" in path_names
+    if nd == 0 or name in _REPLICATE:
+        return P()
+    if name in _EMBED and nd >= 2:
+        # vocab over model ONLY — data-sharding d_model would put the FSDP
+        # slice on the unembed contraction dim and bait GSPMD into a
+        # partial-sum + giant all-reduce strategy (see §Perf log)
+        spec[-2] = _fit(mesh, shape[-2], model_axes)   # vocab
+        spec[-1] = None
+    elif in_moe and name in ("gate", "up") and nd >= 3:
+        spec[-3] = _fit(mesh, shape[-3], model_axes)   # experts (EP)
+        spec[-2] = _fit(mesh, shape[-2], data_axes)    # FSDP
+    elif in_moe and name == "down" and nd >= 3:
+        spec[-3] = _fit(mesh, shape[-3], model_axes)
+        spec[-1] = _fit(mesh, shape[-1], data_axes)
+    elif name in _ROW and nd >= 2:
+        spec[-2] = _fit(mesh, shape[-2], model_axes)
+        spec[-1] = _fit(mesh, shape[-1], data_axes)
+    elif name in _COL and nd >= 2:
+        spec[-2] = _fit(mesh, shape[-2], data_axes)
+        spec[-1] = _fit(mesh, shape[-1], model_axes)
+    elif nd >= 2:
+        # unknown 2D+ leaf: FSDP the last dim only
+        spec[-1] = _fit(mesh, shape[-1], data_axes)
+    else:
+        # 1-D (norm scales, biases): replicate (tiny, used every layer)
+        return P()
+    return P(*spec)
+
+
+def _path_names(path) -> tuple:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(str(e.idx))
+    return tuple(names)
+
+
+def param_specs(params_shape: PyTree, mesh: Mesh,
+                data_axes=("data",), model_axes=("model",)) -> PyTree:
+    """PartitionSpec tree matching a params (or ShapeDtypeStruct) tree."""
+    def one(path, leaf):
+        return _leaf_spec(_path_names(path), leaf.shape, mesh,
+                          data_axes, model_axes)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_specs(opt_state_shape: PyTree, mesh: Mesh,
+                    data_axes=("data",), model_axes=("model",)) -> PyTree:
+    """Optimizer state: same rules (moments mirror params; factored stats
+    match by name so vr/vc get the surviving parameter dims' specs)."""
+    def one(path, leaf):
+        names = _path_names(path)
+        # strip the optimizer-state wrapper names (m/v/vr/vc/inner/step)
+        core = tuple(n for n in names if n not in
+                     ("m", "v", "vr", "vc", "inner"))
+        if names and names[-1] in ("vr", "vc"):
+            # factored stats lost one dim; FSDP the last dim if it fits
+            spec = [None] * len(leaf.shape)
+            if len(leaf.shape) >= 1:
+                spec[-1] = _fit(mesh, leaf.shape[-1], data_axes)
+            return P(*spec)
+        return _leaf_spec(core, leaf.shape, mesh, data_axes, model_axes)
+
+    return jax.tree_util.tree_map_with_path(one, opt_state_shape)
+
+
+def batch_spec(batch_shape: PyTree, mesh: Mesh,
+               data_axes=("data",)) -> PyTree:
+    """Input batches: leading (batch) dim over the data axes."""
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1:
+            spec[0] = _fit(mesh, leaf.shape[0], data_axes)
+        return P(*spec)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cache_shape: PyTree, mesh: Mesh,
+                data_axes=("data",), model_axes=("model",)) -> PyTree:
+    """Decode caches. Leaves look like:
+      attention k/v:     (B, S, Hkv, Dh)   [stacked: (G, B, S, Hkv, Dh)]
+      MLA latent:        (B, S, R)
+      mamba state:       (B, H, P, N)
+      mlstm C/n/m:       (B, H, Dh[, Dh])
+    Batch over data; heads over model when divisible, else sequence over
+    model (flash-decode; softmax psums inserted by GSPMD)."""
+    def one(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        # find the batch dim: first dim whose size matches nothing stacked —
+        # heuristically: stacked caches have a small leading group dim; we
+        # shard the first dim that divides the data axes and is >= their size
+        dsz = _axes_size(mesh, data_axes)
+        bdim = None
+        for i, s in enumerate(shape[: max(nd - 2, 1)]):
+            if s % dsz == 0 and s >= dsz:
+                bdim = i
+                break
+        if bdim is not None:
+            spec[bdim] = data_axes
+        start = (bdim + 1) if bdim is not None else 0
+        if bdim is None:
+            # batch too small (long_500k: B=1): put the data axes on the
+            # largest divisible dim instead (the sequence for KV caches) so
+            # a 500k-deep cache still spreads across the whole pod
+            cand_d = [i for i in range(nd - 1)
+                      if shape[i] % dsz == 0 and shape[i] >= dsz]
+            if cand_d:
+                best_d = max(cand_d, key=lambda i: shape[i])
+                spec[best_d] = data_axes
+        # model axis: prefer a heads-like dim (not the last), else the
+        # largest remaining divisible dim (sequence)
+        msz = _axes_size(mesh, model_axes)
+        cand = [i for i in range(start, nd)
+                if spec[i] is None and shape[i] % msz == 0
+                and shape[i] >= msz]
+        if cand:
+            # prefer the heads-like dim (second-to-last) when it divides,
+            # else the biggest remaining (sequence, for long KV caches)
+            best = max(cand, key=lambda i: (i == nd - 2, shape[i]))
+            spec[best] = model_axes
+        return P(*spec)
+
+    return jax.tree.map(one, cache_shape)
+
+
+def shardings_for(spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_batch_constraint(x, data_axes=("data",)):
+    """Constrain an activation's leading dim onto the data axes."""
+    spec = [None] * x.ndim
+    spec[0] = data_axes
+    return jax.lax.with_sharding_constraint(x, P(*spec))

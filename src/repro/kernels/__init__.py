@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the ICR refinement hot-spot.
+
+  icr_refine.py — pl.pallas_call kernels (stationary + charted variants)
+  ops.py        — jit'd wrappers (auto interpret=True off-TPU)
+  ref.py        — pure-jnp oracles the kernels are validated against
+"""
+from . import ops, ref
+from .icr_refine import refine_charted_pallas, refine_stationary_pallas
+
+__all__ = ["ops", "ref", "refine_stationary_pallas", "refine_charted_pallas"]

@@ -1,0 +1,197 @@
+"""Pallas TPU kernels for the ICR refinement hot-spot (paper Eq. 11–12).
+
+Why a kernel: one refinement level reads the coarse field once, builds
+overlapping ``n_csz``-windows, contracts them with the stencil(s) and adds the
+correlated correction ``sqrt(D) ξ``. Done naively in XLA this materializes the
+(T, n_csz) window tensor in HBM (n_csz-fold read amplification) and runs the
+noise add as a separate elementwise pass. The fused kernel keeps the window
+construction in VMEM/VREGs and feeds the MXU directly:
+
+  HBM traffic per level  : read L + read T·n_fsz (ξ) + write T·n_fsz
+  naive XLA              : + read/write T·n_csz (window tensor materialized)
+
+TPU adaptation (DESIGN.md §3): windows are built from *contiguous reshapes*
+plus static row-shifted slices — element ``t·s + k`` (s = n_fsz//2) equals
+``buf.reshape(-1, s)[t + k//s, k % s]`` — so there is NO gather; TPUs hate
+gathers and love static slices. Halo across family blocks is handled by a
+second (shifted) view of the same coarse array, a standard Pallas stencil
+trick that keeps every BlockSpec a plain Blocked map.
+
+Two variants:
+  * ``_stationary_kernel``  — one shared (n_fsz, n_csz) stencil (regular
+    chart axes, paper Eq. 11–12).
+  * ``_charted_kernel``     — per-family matrices (irregular/charted axes,
+    paper §4.3), a batched small-matmul.
+
+Both carry arbitrary leading batch dims (chart-invariant axes broadcast,
+paper §4.3 symmetry optimization).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jnp.ndarray
+
+
+def _window_cols(buf: Array, b_f: int, s: int, n_csz: int) -> Array:
+    """(B_f, n_csz) window matrix from a (B_f + q_max)*s element buffer.
+
+    Element (t, k) = buf[t*s + k] built with static slices of the (rows, s)
+    reshape — no gather, no strided access.
+    """
+    q_max = (n_csz - 1) // s
+    resh = buf[: (b_f + q_max) * s].reshape(b_f + q_max, s)
+    cols = []
+    for k in range(n_csz):
+        q, r = divmod(k, s)
+        cols.append(resh[q : q + b_f, r])
+    return jnp.stack(cols, axis=-1)
+
+
+def _stationary_kernel(coarse_ref, halo_ref, xi_ref, r_ref, d_ref, out_ref,
+                       *, b_f: int, s: int, n_csz: int, n_fsz: int):
+    q_max = (n_csz - 1) // s
+    buf = jnp.concatenate(
+        [coarse_ref[0], halo_ref[0, : q_max * s]], axis=-1
+    )
+    w = _window_cols(buf, b_f, s, n_csz)                  # (B_f, n_csz)
+    r = r_ref[...]                                        # (n_fsz, n_csz)
+    d = d_ref[...]                                        # (n_fsz, n_fsz)
+    xi = xi_ref[0]                                        # (B_f, n_fsz)
+    fine = jnp.dot(w, r.T, preferred_element_type=jnp.float32)
+    fine = fine + jnp.dot(xi, d.T, preferred_element_type=jnp.float32)
+    out_ref[0] = fine.reshape(b_f * n_fsz).astype(out_ref.dtype)
+
+
+def _charted_kernel(coarse_ref, halo_ref, xi_ref, r_ref, d_ref, out_ref,
+                    *, b_f: int, s: int, n_csz: int, n_fsz: int):
+    q_max = (n_csz - 1) // s
+    buf = jnp.concatenate(
+        [coarse_ref[0], halo_ref[0, : q_max * s]], axis=-1
+    )
+    w = _window_cols(buf, b_f, s, n_csz)                  # (B_f, n_csz)
+    r = r_ref[...]                                        # (B_f, n_fsz, n_csz)
+    d = d_ref[...]                                        # (B_f, n_fsz, n_fsz)
+    xi = xi_ref[0]                                        # (B_f, n_fsz)
+    # batched matvec on the MXU: (B_f; n_fsz, n_csz) x (B_f; n_csz)
+    fine = jax.lax.dot_general(
+        r, w, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                     # (B_f, n_fsz)
+    fine = fine + jax.lax.dot_general(
+        d, xi, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[0] = fine.reshape(b_f * n_fsz).astype(out_ref.dtype)
+
+
+def _common_shapes(coarse, xi, n_csz, n_fsz, block_families):
+    if xi.ndim < 2:
+        raise ValueError("xi must be (..., T, n_fsz)")
+    t = xi.shape[-2]
+    s = n_fsz // 2
+    b_f = min(block_families, t)
+    nblk = -(-t // b_f)  # ceil
+    return t, s, b_f, nblk
+
+
+def _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz):
+    """Pad coarse so every block's main+halo view is in bounds, xi to a
+    whole number of blocks. Garbage families are sliced off by the caller."""
+    b_c = b_f * s
+    need = (nblk + 1) * b_c  # +1 block: the shifted halo view of the last blk
+    pad_c = need - coarse.shape[-1]
+    if pad_c > 0:
+        coarse = jnp.pad(coarse, [(0, 0)] * (coarse.ndim - 1) + [(0, pad_c)])
+    pad_t = nblk * b_f - t
+    if pad_t > 0:
+        xi = jnp.pad(
+            xi, [(0, 0)] * (xi.ndim - 2) + [(0, pad_t), (0, 0)]
+        )
+    return coarse, xi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_csz", "n_fsz", "block_families", "interpret"),
+)
+def refine_stationary_pallas(coarse: Array, xi: Array, r: Array, d: Array,
+                             *, n_csz: int, n_fsz: int,
+                             block_families: int = 256,
+                             interpret: bool = False) -> Array:
+    """Fused stationary refinement. See module docstring.
+
+    coarse: (B, L) halo-padded (L >= T*s + n_csz - s); xi: (B, T, n_fsz)
+    r: (n_fsz, n_csz); d: (n_fsz, n_fsz)  ->  fine: (B, T*n_fsz)
+    """
+    t, s, b_f, nblk = _common_shapes(coarse, xi, n_csz, n_fsz, block_families)
+    coarse, xi = _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz)
+    batch = coarse.shape[0]
+    b_c = b_f * s
+
+    kern = functools.partial(
+        _stationary_kernel, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(batch, nblk),
+        in_specs=[
+            pl.BlockSpec((1, b_c), lambda b, i: (b, i)),        # main
+            pl.BlockSpec((1, b_c), lambda b, i: (b, i + 1)),    # halo view
+            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((n_fsz, n_csz), lambda b, i: (0, 0)),
+            pl.BlockSpec((n_fsz, n_fsz), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b_f * n_fsz), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, nblk * b_f * n_fsz),
+                                       coarse.dtype),
+        interpret=interpret,
+    )(coarse, coarse, xi, r, d)
+    return out[:, : t * n_fsz]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_csz", "n_fsz", "block_families", "interpret"),
+)
+def refine_charted_pallas(coarse: Array, xi: Array, r: Array, d: Array,
+                          *, n_csz: int, n_fsz: int,
+                          block_families: int = 256,
+                          interpret: bool = False) -> Array:
+    """Fused charted refinement with per-family matrices (paper §4.3).
+
+    coarse: (B, L); xi: (B, T, n_fsz); r: (T, n_fsz, n_csz);
+    d: (T, n_fsz, n_fsz)  ->  fine: (B, T*n_fsz)
+    """
+    t, s, b_f, nblk = _common_shapes(coarse, xi, n_csz, n_fsz, block_families)
+    coarse, xi = _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz)
+    pad_t = nblk * b_f - t
+    if pad_t > 0:
+        r = jnp.pad(r, [(0, pad_t), (0, 0), (0, 0)])
+        d = jnp.pad(d, [(0, pad_t), (0, 0), (0, 0)])
+    batch = coarse.shape[0]
+    b_c = b_f * s
+
+    kern = functools.partial(
+        _charted_kernel, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(batch, nblk),
+        in_specs=[
+            pl.BlockSpec((1, b_c), lambda b, i: (b, i)),
+            pl.BlockSpec((1, b_c), lambda b, i: (b, i + 1)),
+            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((b_f, n_fsz, n_csz), lambda b, i: (i, 0, 0)),
+            pl.BlockSpec((b_f, n_fsz, n_fsz), lambda b, i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b_f * n_fsz), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, nblk * b_f * n_fsz),
+                                       coarse.dtype),
+        interpret=interpret,
+    )(coarse, coarse, xi, r, d)
+    return out[:, : t * n_fsz]

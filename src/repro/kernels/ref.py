@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas refinement kernels.
+
+These are the ground truth every kernel sweep asserts against
+(tests/test_kernels_pallas.py). They mirror core.refine.refine_level but are
+specialized to the kernel calling conventions:
+
+* 1-D refinement over the last axis, arbitrary leading batch dims (the
+  batch dims carry chart-invariant axes, paper §4.3 symmetry broadcast).
+* the coarse input is already *halo-padded*: for T families with stride
+  ``s = n_fsz//2`` and window ``n_csz`` the coarse length is
+  ``T*s + (n_csz - s)`` so family t reads ``coarse[t*s : t*s + n_csz]``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def coarse_len(t: int, n_csz: int, n_fsz: int) -> int:
+    s = n_fsz // 2
+    return t * s + (n_csz - s)
+
+
+def refine_stationary_ref(coarse: Array, xi: Array, r: Array,
+                          sqrt_d: Array) -> Array:
+    """Stationary refinement (paper Eq. 11–12), one shared stencil.
+
+    coarse: (..., L) halo-padded, L = T*s + (n_csz - s)
+    xi:     (..., T, n_fsz)
+    r:      (n_fsz, n_csz);  sqrt_d: (n_fsz, n_fsz)
+    -> fine (..., T * n_fsz)
+    """
+    n_fsz, n_csz = r.shape
+    s = n_fsz // 2
+    t = xi.shape[-2]
+    w = jnp.stack([coarse[..., k : k + s * (t - 1) + 1 : s]
+                   for k in range(n_csz)], axis=-1)  # (..., T, n_csz)
+    fine = jnp.einsum("...tc,fc->...tf", w, r)
+    fine = fine + jnp.einsum("...tj,fj->...tf", xi, sqrt_d)
+    return fine.reshape(*fine.shape[:-2], t * n_fsz)
+
+
+def refine_charted_ref(coarse: Array, xi: Array, r: Array,
+                       sqrt_d: Array) -> Array:
+    """Charted (non-stationary) refinement: per-family matrices (paper §4.3).
+
+    coarse: (..., L) halo-padded
+    xi:     (..., T, n_fsz)
+    r:      (T, n_fsz, n_csz);  sqrt_d: (T, n_fsz, n_fsz)
+    -> fine (..., T * n_fsz)
+    """
+    t, n_fsz, n_csz = r.shape
+    s = n_fsz // 2
+    w = jnp.stack([coarse[..., k : k + s * (t - 1) + 1 : s]
+                   for k in range(n_csz)], axis=-1)  # (..., T, n_csz)
+    fine = jnp.einsum("...tc,tfc->...tf", w, r)
+    fine = fine + jnp.einsum("...tj,tfj->...tf", xi, sqrt_d)
+    return fine.reshape(*fine.shape[:-2], t * n_fsz)

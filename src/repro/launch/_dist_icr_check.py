@@ -1,0 +1,93 @@
+"""Self-check driver: sharded ICR == unsharded ICR, bit-level (up to f32).
+
+Run with multiple host devices, e.g.::
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch._dist_icr_check
+
+Used by tests/test_distributed_icr.py (subprocess) and by hand when
+bringing up a new mesh. Prints one line per case: ``case max_abs_diff``.
+Exit code 0 iff all diffs < 1e-5.
+"""
+import os
+import sys
+
+if __name__ == "__main__" and "--xla" not in sys.argv:
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+    )
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+
+def main() -> int:
+    from repro.core import ICR, matern32, regular_chart, log_chart
+    from repro.core.charts import galactic_dust_chart
+    from repro.core.distributed import DistributedICR
+    from repro.launch.mesh import make_mesh
+
+    n_dev = len(jax.devices())
+    mesh1d = make_mesh((n_dev,), ("space",))
+    mesh2d = make_mesh((2, n_dev // 2), ("pod", "space"))
+
+    cases = []
+
+    # 1-D stationary (regular chart)
+    cases.append((
+        "1d_regular",
+        ICR(chart=regular_chart(32, 4, boundary="reflect"),
+            kernel=matern32.with_defaults(rho=16.0)),
+        mesh1d, ("space",), 0,
+    ))
+    # 1-D charted (log chart, per-family matrices)
+    cases.append((
+        "1d_log_charted",
+        ICR(chart=log_chart(32, 4, n_csz=5, n_fsz=4, delta0=0.01,
+                            boundary="reflect"),
+            kernel=matern32.with_defaults(rho=1.0)),
+        mesh1d, ("space",), 0,
+    ))
+    # multi-axis ring spanning two mesh axes (the multi-pod layout)
+    cases.append((
+        "1d_multipod_ring",
+        ICR(chart=regular_chart(64, 3, boundary="reflect"),
+            kernel=matern32.with_defaults(rho=20.0)),
+        mesh2d, ("pod", "space"), 0,
+    ))
+    # 3-D dust chart: shard an invariant angular axis
+    cases.append((
+        "3d_dust_angular_shard",
+        ICR(chart=galactic_dust_chart((6, 32, 16), 2),
+            kernel=matern32.with_defaults(rho=0.5)),
+        mesh1d, ("space",), 1,
+    ))
+
+    ok = True
+    for name, icr, mesh, axes, shard_axis in cases:
+        dist = DistributedICR(icr=icr, mesh=mesh, axis_names=axes,
+                              shard_axis=shard_axis)
+        key = jax.random.PRNGKey(42)
+        with jax.set_mesh(mesh):
+            xi = dist.init_xi(key)
+            mats = dist.matrices()
+            sharded = jax.jit(dist.apply_sqrt)(mats, xi)
+        # unsharded reference on the same xi values
+        mats_ref = icr.matrices()
+        fsz = icr.chart.n_fsz**icr.chart.ndim
+        xi_ref = [np.asarray(xi[0])] + [
+            np.asarray(x).reshape(-1, fsz) for x in xi[1:]
+        ]
+        ref = icr.apply_sqrt(mats_ref, [jnp.asarray(x) for x in xi_ref])
+        diff = float(np.abs(np.asarray(sharded) - np.asarray(ref)).max())
+        scale = float(np.abs(np.asarray(ref)).max())
+        rel = diff / max(scale, 1e-30)
+        print(f"{name} max_abs_diff={diff:.3e} rel={rel:.3e}")
+        ok &= rel < 1e-5
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

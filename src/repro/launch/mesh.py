@@ -1,0 +1,66 @@
+"""Production device meshes (DESIGN.md §8).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run driver must be able to set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax
+initializes.
+
+Mesh layouts (TPU v5e pod = 16x16 = 256 chips):
+
+* LM configs:   (data=16, model=16); multi-pod (pod=2, data=16, model=16).
+  The ``pod`` axis extends data parallelism across the DCN; gradient
+  all-reduce over ("pod", "data") is hierarchical (ICI first, DCN once).
+* ICR configs:  the same meshes, re-labelled by the caller: the spatial ring
+  is ("data", "model") flattened (single pod) or ("pod", "data", "model")
+  (multi-pod) — halo ppermute traffic crosses the DCN on exactly two ring
+  edges (core/distributed.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def _make(shape, axes) -> Mesh:
+    n = int(np.prod(shape))
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"mesh {dict(zip(axes, shape))} needs {n} devices but only "
+            f"{len(jax.devices())} are visible; the dry-run driver must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax"
+        )
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _make(shape, axes)
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh with Auto axis types (tests, small CPU runs)."""
+    return _make(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(model: int | None = None) -> Mesh:
+    """Best-effort mesh over whatever devices exist (CPU tests/examples)."""
+    n = len(jax.devices())
+    model = model or 1
+    return _make((n // model, model), ("data", "model"))
+
+
+# -- hardware constants (TPU v5e, per chip) -----------------------------------
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (~per-device usable bisection)
+DCN_BW = 25e9                # B/s per host, cross-pod
+HBM_BYTES = 16 * 1024**3     # 16 GiB
+VMEM_BYTES = 128 * 1024**2   # ~128 MiB vector memory

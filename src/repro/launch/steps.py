@@ -1,0 +1,236 @@
+"""Step builders: jitted+sharded train / prefill / serve steps for any arch.
+
+Shared by the dry-run (AOT lower+compile on ShapeDtypeStructs) and the real
+drivers (train.py / serve.py). All sharding policy lives in
+repro.distributed.sharding; optimizer selection follows DESIGN.md §5
+(AdamW < 100B params, Adafactor above — factored state keeps the 236B/400B
+MoE configs inside one pod's HBM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell, input_specs
+from repro.distributed.sharding import (
+    batch_spec,
+    cache_specs,
+    opt_state_specs,
+    param_specs,
+    shardings_for,
+)
+from repro.models import build_model
+from repro.optim import adafactor, adamw, linear_warmup_cosine
+
+ADAFACTOR_THRESHOLD = 100e9
+
+
+def data_model_axes(mesh: Mesh):
+    axes = dict(mesh.shape)
+    data = ("pod", "data") if "pod" in axes else ("data",)
+    return data, ("model",)
+
+
+def active_param_count(model) -> int:
+    """Active-per-token parameters (MoE: top_k/E of routed experts)."""
+    cfg = model.cfg
+    spec = model.params_spec()
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(spec)[0]:
+        names = [str(getattr(e, "key", getattr(e, "idx", ""))) for e in path]
+        n = float(np.prod(leaf.shape))
+        if cfg.moe and "moe" in names and names[-1] in ("gate", "up",
+                                                        "down"):
+            n *= cfg.moe.top_k / cfg.moe.n_experts
+        total += n
+    return int(total)
+
+
+def select_optimizer(model, total_steps: int = 10_000):
+    n = model.param_count()
+    sched = linear_warmup_cosine(3e-4, 200, total_steps)
+    if n > ADAFACTOR_THRESHOLD:
+        return adafactor(sched), "adafactor"
+    return adamw(sched, weight_decay=0.1), "adamw"
+
+
+@dataclasses.dataclass
+class TrainStep:
+    fn: Callable                 # jitted (params, opt_state, batch) -> ...
+    params_sh: Any
+    opt_sh: Any
+    batch_sh: Any
+    opt_name: str
+    model: Any
+    optimizer: Any
+
+    def init_state(self, key):
+        params = jax.jit(
+            self.model.init_params, out_shardings=self.params_sh)(key)
+        opt_state = jax.jit(
+            self.optimizer.init, out_shardings=self.opt_sh)(params)
+        return params, opt_state
+
+
+def choose_accum(model, cell: ShapeCell, mesh: Mesh) -> int:
+    """Gradient-accumulation factor targeting ~10 GB/device of activation
+    pressure. Peak model (calibrated against XLA buffer dumps on this
+    backend, see EXPERIMENTS.md §Perf):
+
+        peak ≈ carries + backward working set
+             = n_groups·b_loc·S·D·2B  +  ~9 f32 copies ·
+               layers_per_group·b_loc·S·D·4B
+
+    Both terms scale 1/accum, so accum = ceil(peak / 10 GB) (pow2, capped
+    so the microbatch still divides the data axes)."""
+    cfg = model.cfg
+    data_axes, _ = data_model_axes(mesh)
+    dsz = int(np.prod([mesh.shape[a] for a in data_axes]))
+    from repro.models.transformer import layer_plan
+    if cfg.encoder is not None:
+        # whisper: encoder self-attention scores (B_loc, H, F, F) f32 are
+        # the peak (1500 frames don't chunk evenly -> single-chunk path);
+        # ~16 co-live f32 copies across fwd+bwd per the buffer dumps
+        b_loc = max(cell.global_batch // dsz, 1)
+        fr = cfg.encoder.n_frames
+        peak = 16 * b_loc * cfg.n_heads * fr * fr * 4
+        accum = 1
+        while peak / accum > 10e9 and accum < 16:
+            accum *= 2
+        while accum > 1 and (cell.global_batch // accum) % dsz != 0:
+            accum //= 2
+        return accum
+    _, period, n_groups, _ = layer_plan(cfg)
+    b_loc = max(cell.global_batch // dsz, 1)
+    tok_bytes = b_loc * cell.seq_len * cfg.d_model
+    # 6B/elem: bf16 saved carries + an f32 copy XLA hoists for the backward
+    # (buffer dumps: command-r shows both stacks resident)
+    carries = n_groups * tok_bytes * 6
+    working = 9 * len(period) * tok_bytes * 4
+    peak = carries + working
+    accum = 1
+    while peak / accum > 10e9 and accum < 16:
+        accum *= 2
+    while accum > 1 and (cell.global_batch // accum) % dsz != 0:
+        accum //= 2
+    return accum
+
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh, *, donate: bool = True,
+                    accum: int = 1) -> TrainStep:
+    from repro.models import shard_ctx
+
+    model = build_model(cfg)
+    data_axes, model_axes = data_model_axes(mesh)
+    shard_ctx.set_axes(mesh, data_axes, model_axes)
+    opt, opt_name = select_optimizer(model)
+
+    p_spec = model.params_spec()
+    p_specs = param_specs(p_spec, mesh, data_axes, model_axes)
+    o_spec = jax.eval_shape(opt.init, p_spec)
+    o_specs = opt_state_specs(o_spec, mesh, data_axes, model_axes)
+
+    def micro_spec(x):
+        # (A, B/A, ...) microbatch layout: batch dim stays on data axes
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(
+                mesh, P(None, data_axes, *([None] * (x.ndim - 2)))))
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: micro_spec(
+                    x.reshape(accum, x.shape[0] // accum, *x.shape[1:])),
+                batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    params_sh = shardings_for(p_specs, mesh)
+    opt_sh = shardings_for(o_specs, mesh)
+
+    def jit_for(batch_tree):
+        b_specs = batch_spec(batch_tree, mesh, data_axes)
+        batch_sh = shardings_for(b_specs, mesh)
+        return jax.jit(
+            train_step,
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh,
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0, 1) if donate else (),
+        ), batch_sh
+
+    return TrainStep(fn=jit_for, params_sh=params_sh, opt_sh=opt_sh,
+                     batch_sh=None, opt_name=opt_name, model=model,
+                     optimizer=opt)
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh):
+    from repro.models import shard_ctx
+
+    model = build_model(cfg)
+    data_axes, model_axes = data_model_axes(mesh)
+    shard_ctx.set_axes(mesh, data_axes, model_axes)
+    p_specs = param_specs(model.params_spec(), mesh, data_axes, model_axes)
+    params_sh = shardings_for(p_specs, mesh)
+
+    def jit_for(batch_tree):
+        b_specs = batch_spec(batch_tree, mesh, data_axes)
+        batch_sh = shardings_for(b_specs, mesh)
+        # logits are sliced to the raw (unpadded) vocab -> replicate dim 1
+        out_sh = NamedSharding(mesh, P(data_axes, None))
+        return jax.jit(model.prefill_fn, in_shardings=(params_sh, batch_sh),
+                       out_shardings=out_sh), batch_sh
+
+    return model, params_sh, jit_for
+
+
+def make_serve_step(cfg: ArchConfig, mesh: Mesh, batch: int, s_max: int,
+                    *, donate: bool = True):
+    from repro.models import shard_ctx
+
+    model = build_model(cfg)
+    data_axes, model_axes = data_model_axes(mesh)
+    shard_ctx.set_axes(mesh, data_axes, model_axes)
+    p_specs = param_specs(model.params_spec(), mesh, data_axes, model_axes)
+    params_sh = shardings_for(p_specs, mesh)
+    c_spec = model.cache_spec(batch, s_max)
+    c_specs = cache_specs(c_spec, mesh, data_axes, model_axes)
+    cache_sh = shardings_for(c_specs, mesh)
+    dsz = int(np.prod([mesh.shape[a] for a in data_axes]))
+    bdim = data_axes if batch % dsz == 0 and batch >= dsz else None
+    tok_sh = NamedSharding(mesh, P(bdim, None))
+    pos_sh = NamedSharding(mesh, P(bdim))
+    logits_sh = NamedSharding(mesh, P(bdim, None))
+
+    step = jax.jit(
+        model.serve_step,
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,) if donate else (),
+    )
+    return model, step, params_sh, cache_sh, c_spec

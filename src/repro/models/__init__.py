@@ -1,0 +1,5 @@
+"""Model zoo substrate: the 10 assigned architectures as pure-pytree JAX
+models (no flax). See model.py:build_model for the public entry point."""
+from .model import build_model, Model
+
+__all__ = ["build_model", "Model"]

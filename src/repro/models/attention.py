@@ -1,0 +1,351 @@
+"""Attention variants: GQA (full / sliding-window banded), MLA, cross.
+
+Training path is *query-chunked* (flash-style blocking at the XLA level):
+scores for one (B, H, Cq, K) tile at a time inside a lax.scan, so the
+(S x S) score matrix is never materialized — the binding memory constraint
+for train_4k/prefill_32k on the production mesh. Static sliding windows use
+a banded path that only reads the (window + Cq) key slice per query chunk
+(sub-quadratic; this is what makes gemma3's long_500k cells viable).
+
+Decode path scores one new token against the cache; with
+``kv_heads % model_axis != 0`` the cache is sequence-sharded and the softmax
+reductions over the sharded axis become psums inserted by GSPMD
+(flash-decode equivalent; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init, apply_rope, matmul, qk_norm
+from .shard_ctx import constrain
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+# -- parameter init -------------------------------------------------------------
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+             dtype, *, use_bias: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d_model, n_heads * d_head), dtype),
+        "wk": _dense_init(ks[1], (d_model, n_kv * d_head), dtype),
+        "wv": _dense_init(ks[2], (d_model, n_kv * d_head), dtype),
+        "wo": _dense_init(ks[3], (n_heads * d_head, d_model), dtype),
+    }
+    if use_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), dtype)
+        p["bk"] = jnp.zeros((n_kv * d_head,), dtype)
+        p["bv"] = jnp.zeros((n_kv * d_head,), dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def init_mla(key, d_model: int, n_heads: int, mla, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    qk = mla.qk_nope_dim + mla.qk_rope_dim
+    return {
+        "w_dq": _dense_init(ks[0], (d_model, mla.q_lora_rank), dtype),
+        "w_uq": _dense_init(ks[1], (mla.q_lora_rank, n_heads * qk), dtype),
+        "w_dkv": _dense_init(
+            ks[2], (d_model, mla.kv_lora_rank + mla.qk_rope_dim), dtype),
+        "w_uk": _dense_init(
+            ks[3], (mla.kv_lora_rank, n_heads * mla.qk_nope_dim), dtype),
+        "w_uv": _dense_init(
+            ks[4], (mla.kv_lora_rank, n_heads * mla.v_dim), dtype),
+        "wo": _dense_init(ks[5], (n_heads * mla.v_dim, d_model), dtype),
+    }
+
+
+# -- shared helpers ---------------------------------------------------------------
+def _split_heads(x: Array, n: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _proj_qkv(params, x, x_kv, n_heads, n_kv):
+    q = matmul(x, params["wq"])
+    k = matmul(x_kv, params["wk"])
+    v = matmul(x_kv, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    spec = ("data", None, "model", None)  # heads over TP when divisible
+    return (constrain(_split_heads(q, n_heads), spec),
+            constrain(_split_heads(k, n_kv), spec),
+            constrain(_split_heads(v, n_kv), spec))
+
+
+def head_tp_available(h: int, hkv: int) -> bool:
+    """Can attention shard over heads on the model axis? Either kv heads
+    divide it, or q heads do (then kv is repeated group-wise)."""
+    from .shard_ctx import model_size
+
+    msz = model_size()
+    return (hkv % msz == 0 and hkv >= msz) or (h % msz == 0 and h >= msz)
+
+
+def _sdpa(q, k, v, mask, scale, *, train_layout: str | bool = False):
+    """q: (B, Q, H, Dh); k/v: (B, K, Hkv, Dh); mask: (B, Q, K) bool or None.
+    GQA via head grouping; scores fp32.
+
+    train_layout: False (decode — the cache's own sharding rules, psums from
+    GSPMD), "head" (TP over heads; kv repeated group-wise when only q-heads
+    divide — Megatron GQA), or "key" (KEY-dim parallel: scores shard over
+    the key/sequence dim of k/v, softmax reductions become psums — the
+    layout for few-head archs like gemma3-4b/llama4/whisper where heads
+    don't divide the model axis; composes with the q-chunk scan because q
+    slicing happens on unsharded dims).
+    """
+    from .shard_ctx import constrain, model_size
+
+    b, cq, h, dh = q.shape
+    hkv = k.shape[2]
+    msz = model_size()
+    if train_layout == "head" and hkv % msz != 0 and h % msz == 0 \
+            and h > hkv:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+        hkv = h
+    rep = h // hkv
+    qg = q.reshape(b, cq, hkv, rep, dh)
+    if train_layout == "head":
+        qg = constrain(qg, ("data", None, "model", None, None))
+        k = constrain(k, ("data", None, "model", None))
+        v = constrain(v, ("data", None, "model", None))
+    elif train_layout == "key":
+        qg = constrain(qg, ("data", None, None, None, None))
+        k = constrain(k, ("data", "model", None, None))
+        v = constrain(v, ("data", "model", None, None))
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if train_layout == "head":
+        s = constrain(s, ("data", "model", None, None, None))
+    elif train_layout == "key":
+        s = constrain(s, ("data", None, None, None, "model"))
+    if mask is not None:
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)  # key mode: max/sum psums from GSPMD
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    if train_layout == "head":
+        o = constrain(o, ("data", None, "model", None, None))
+    elif train_layout == "key":
+        o = constrain(o, ("data", None, None, None, None))
+    # note: v's head dim may differ from q/k's (MLA: qk=192, v=128)
+    return o.reshape(b, cq, h, v.shape[-1]).astype(q.dtype)
+
+
+def attention_train(params: dict, x: Array, positions: Array, *,
+                    n_heads: int, n_kv: int, d_head: int,
+                    rope_theta: float | None, causal: bool = True,
+                    window: int | None = None, use_qk_norm: bool = False,
+                    q_chunk: int = 512, x_kv: Optional[Array] = None,
+                    kv_positions: Optional[Array] = None) -> Array:
+    """Full-sequence attention (training / prefill), query-chunked.
+
+    window: static int for banded sliding-window attention, None for full.
+    x_kv/kv_positions: cross-attention source (whisper decoder).
+    """
+    b, s, _ = x.shape
+    cross = x_kv is not None
+    src = x_kv if cross else x
+    kv_pos = kv_positions if cross else positions
+    q, k, v = _proj_qkv(params, x, src, n_heads, n_kv)
+    if use_qk_norm:
+        q, k = qk_norm(q), qk_norm(k)
+    if rope_theta is not None and not cross:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, kv_pos, rope_theta)
+    scale = 1.0 / np.sqrt(d_head)
+    # few-head archs (gemma3-4b: 8, llama4: 40, whisper: 8) can't shard
+    # heads over the model axis — shard the KEY dim instead (softmax psums
+    # from GSPMD). Key sharding precludes the banded dynamic key slice, so
+    # local layers fall back to the masked full-key path.
+    mode = "head" if head_tp_available(n_heads, n_kv) else "key"
+
+    cq = min(q_chunk, s)
+    nch = s // cq if s % cq == 0 else 1
+    cq = s // nch
+
+    sk = src.shape[1]
+    if window is not None and not cross and mode == "head":
+        # banded: only the (window + cq) key slice can be visible to a chunk
+        band = min(window + cq, sk)
+
+        def chunk_body(carry, idx):
+            start = idx * cq
+            qs = jax.lax.dynamic_slice_in_dim(q, start, cq, axis=1)
+            qp = jax.lax.dynamic_slice_in_dim(positions, start, cq, axis=1)
+            kstart = jnp.maximum(start + cq - band, 0)
+            ks = jax.lax.dynamic_slice_in_dim(k, kstart, band, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, kstart, band, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_pos, kstart, band, axis=1)
+            m = (qp[:, :, None] >= kp[:, None, :]) & (
+                qp[:, :, None] - kp[:, None, :] < window)
+            return carry, _sdpa(qs, ks, vs, m, scale, train_layout=mode)
+    else:
+        def chunk_body(carry, idx):
+            start = idx * cq
+            qs = jax.lax.dynamic_slice_in_dim(q, start, cq, axis=1)
+            qp = jax.lax.dynamic_slice_in_dim(positions, start, cq, axis=1)
+            if causal and not cross:
+                m = qp[:, :, None] >= kv_pos[:, None, :]
+                if window is not None:  # key mode: window folded into mask
+                    m &= qp[:, :, None] - kv_pos[:, None, :] < window
+            else:
+                m = None
+            return carry, _sdpa(qs, k, vs_full, m, scale, train_layout=mode)
+
+        vs_full = v
+
+    # remat the chunk body: scores/softmax are recomputed in backward
+    # instead of residing per-chunk in HBM (the difference between fitting
+    # 16 GB and not at train_4k scale)
+    _, chunks = jax.lax.scan(jax.checkpoint(chunk_body), (),
+                             jnp.arange(nch))
+    out = chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, n_heads * d_head)
+    out = matmul(out, params["wo"])
+    if "bo" in params:
+        out = out + params["bo"]
+    return out
+
+
+def attention_decode(params: dict, cache: dict, x: Array, positions: Array,
+                     *, n_heads: int, n_kv: int, d_head: int,
+                     rope_theta: float | None, window: int | None = None,
+                     use_qk_norm: bool = False) -> tuple:
+    """One-token decode against a (B, S_max, Hkv, Dh) cache.
+
+    cache: {"k": ..., "v": ...}; positions: (B,) write/attend index.
+    Returns (out (B, 1, D), new_cache). Sliding-window layers use a
+    ring-buffer cache of size `window` (slot = pos % window).
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _proj_qkv(params, x, x, n_heads, n_kv)
+    if use_qk_norm:
+        q, k_new = qk_norm(q), qk_norm(k_new)
+    if rope_theta is not None:
+        q = apply_rope(q, positions[:, None], rope_theta)
+        k_new = apply_rope(k_new, positions[:, None], rope_theta)
+    s_max = cache["k"].shape[1]
+    slot = positions % s_max if window is not None else positions
+
+    def write(c, new):
+        def one(cb, nb, sb):
+            return jax.lax.dynamic_update_slice_in_dim(cb, nb, sb, axis=0)
+        return jax.vmap(one)(c, new, slot)
+
+    k = write(cache["k"], k_new)
+    v = write(cache["v"], v_new)
+
+    # visibility: cache slot j holds absolute position pos_j
+    idx = jnp.arange(s_max)[None, :]
+    if window is not None:
+        # ring buffer: slot j holds position p with p % s_max == j, the
+        # largest such p <= current position
+        cur = positions[:, None]
+        p_j = cur - ((cur - idx) % s_max)
+        visible = (p_j >= 0) & (cur - p_j < window) & (p_j <= cur)
+    else:
+        visible = idx <= positions[:, None]
+    scale = 1.0 / np.sqrt(d_head)
+    out = _sdpa(q, k, v, visible[:, None, :].astype(bool), scale)
+    out = matmul(out.reshape(b, 1, n_heads * d_head), params["wo"])
+    if "bo" in params:
+        out = out + params["bo"]
+    return out, {"k": k, "v": v}
+
+
+# -- MLA (deepseek-v2) -------------------------------------------------------------
+def mla_train(params: dict, x: Array, positions: Array, *, n_heads: int,
+              mla, q_chunk: int = 512) -> Array:
+    b, s, _ = x.shape
+    nope, rope, vd = mla.qk_nope_dim, mla.qk_rope_dim, mla.v_dim
+    qk = nope + rope
+    cq_lat = matmul(x, params["w_dq"])
+    q = _split_heads(matmul(cq_lat, params["w_uq"]), n_heads)  # (B,S,H,qk)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, 10_000.0)
+
+    ckv = matmul(x, params["w_dkv"])
+    c_kv, k_pe = ckv[..., : mla.kv_lora_rank], ckv[..., mla.kv_lora_rank:]
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, 10_000.0)  # (B,S,1,rope)
+    k_nope = _split_heads(matmul(c_kv, params["w_uk"]), n_heads)
+    v = _split_heads(matmul(c_kv, params["w_uv"]), n_heads)
+
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe, (b, s, n_heads, rope))], axis=-1)
+    qq = jnp.concatenate([q_nope, q_pe], axis=-1)
+    scale = 1.0 / np.sqrt(qk)
+
+    cqs = min(q_chunk, s)
+    nch = s // cqs if s % cqs == 0 else 1
+    cqs = s // nch
+
+    def body(carry, idx):
+        start = idx * cqs
+        qs = jax.lax.dynamic_slice_in_dim(qq, start, cqs, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(positions, start, cqs, axis=1)
+        m = qp[:, :, None] >= positions[:, None, :]
+        return carry, _sdpa(qs, k, v, m, scale, train_layout='head')
+
+    _, chunks = jax.lax.scan(jax.checkpoint(body), (), jnp.arange(nch))
+    out = chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, n_heads * vd)
+    return matmul(out, params["wo"])
+
+
+def mla_decode(params: dict, cache: dict, x: Array, positions: Array, *,
+               n_heads: int, mla) -> tuple:
+    """Absorbed-matrix MLA decode: the cache holds only the latent
+    (kv_lora + rope) per token — 64x smaller than full GQA KV at deepseek-v2
+    scale, the reason MLA decode is HBM-friendly.
+
+    cache: {"ckv": (B, S, kv_lora), "kpe": (B, S, rope)}.
+    """
+    b = x.shape[0]
+    nope, rope, vd = mla.qk_nope_dim, mla.qk_rope_dim, mla.v_dim
+    lat = mla.kv_lora_rank
+    cq_lat = matmul(x, params["w_dq"])
+    q = _split_heads(matmul(cq_lat, params["w_uq"]), n_heads)  # (B,1,H,qk)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions[:, None], 10_000.0)
+
+    ckv_new = matmul(x, params["w_dkv"])
+    c_new, kpe_new = ckv_new[..., :lat], ckv_new[..., lat:]
+    kpe_new = apply_rope(kpe_new[:, :, None, :], positions[:, None],
+                         10_000.0)[:, :, 0, :]
+
+    def write(cb, nb):
+        def one(c, n, p):
+            return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+        return jax.vmap(one)(cb, nb, positions)
+
+    ckv = write(cache["ckv"], c_new)
+    kpe = write(cache["kpe"], kpe_new)
+
+    # absorb W_uk into q: q_lat (B,1,H,lat)
+    w_uk = params["w_uk"].reshape(lat, n_heads, nope)
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    s_max = ckv.shape[1]
+    scores = (
+        jnp.einsum("bqhl,bkl->bhqk", q_lat, ckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhr,bkr->bhqk", q_pe, kpe,
+                     preferred_element_type=jnp.float32)
+    ) / np.sqrt(nope + rope)
+    visible = jnp.arange(s_max)[None, None, None, :] <= \
+        positions[:, None, None, None]
+    scores = jnp.where(visible, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkl->bqhl", p.astype(x.dtype), ckv,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    w_uv = params["w_uv"].reshape(lat, n_heads, vd)
+    o = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = matmul(o.reshape(b, 1, n_heads * vd), params["wo"])
+    return out, {"ckv": ckv, "kpe": kpe}

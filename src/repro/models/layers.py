@@ -1,0 +1,147 @@
+"""Shared layers: norms, rotary embeddings, MLPs, embedding tables.
+
+Pure functions over explicit parameter pytrees. Convention: ``init_*``
+returns a params dict; the matching ``apply`` is a plain function. All
+matmuls run in the activation dtype with fp32 accumulation
+(``preferred_element_type``), norms/softmax in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def matmul(x: Array, w: Array) -> Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# -- norms ---------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def qk_norm(x: Array, eps: float = 1e-6) -> Array:
+    """Parameter-free RMS over the head dim (gemma3-style qk-norm, sans
+    learned scale for simplicity of the stacked layout)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# -- rotary --------------------------------------------------------------------
+def rope_freqs(dim: int, theta) -> Array:
+    """Inverse frequencies (fp32). theta may be a traced scalar (gemma3
+    selects a different theta on global layers inside the layer scan)."""
+    exponents = jnp.arange(0, dim, 2, dtype=jnp.float32) / dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: Array, positions: Array, theta) -> Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32. Half-rotation convention."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                          # (Dh/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP -----------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype, *, glu: bool,
+             use_bias: bool) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": _dense_init(k2, (d_ff, d_model), dtype)}
+    if glu:
+        p["gate"] = _dense_init(k1, (d_model, d_ff), dtype)
+        p["up"] = _dense_init(k3, (d_model, d_ff), dtype)
+    else:
+        p["up"] = _dense_init(k1, (d_model, d_ff), dtype)
+    if use_bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp(params: dict, x: Array, *, act: str, glu: bool) -> Array:
+    from .shard_ctx import constrain
+
+    actfn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    up = matmul(x, params["up"])
+    if "b_up" in params:
+        up = up + params["b_up"]
+    h = actfn(matmul(x, params["gate"])) * up if glu else actfn(up)
+    h = constrain(h, ("data", None, "model"))  # d_ff over TP
+    out = matmul(h, params["down"])
+    if "b_down" in params:
+        out = out + params["b_down"]
+    return out
+
+
+# -- embeddings ------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, dtype) -> dict:
+    # GPT-2-style small init: keeps tied-embedding logits O(1) at init
+    return {"table": _dense_init(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def embed(params: dict, tokens: Array) -> Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_chunked(table: Array, h: Array, labels: Array,
+                    chunk: int, mask: Optional[Array] = None) -> Array:
+    """Mean cross-entropy WITHOUT materializing full (B, S, V) logits.
+
+    Scans the sequence in ``chunk``-sized slices: per-slice logits are
+    (B, chunk, V) — with V sharded over 'model' this keeps the transient
+    per-device footprint at B*chunk*V/n_model elements (DESIGN.md §5).
+    """
+    b, s, d = h.shape
+    nchunk = max(s // chunk, 1)
+    chunk = s // nchunk
+    hc = h[:, : nchunk * chunk].reshape(b, nchunk, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels[:, : nchunk * chunk].reshape(b, nchunk, chunk).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mc = mask[:, : nchunk * chunk].reshape(b, nchunk, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        from .shard_ctx import constrain
+
+        hm, lm, mm = xs
+        logits = jnp.dot(hm, table.T,
+                         preferred_element_type=jnp.float32)  # (B, C, V)
+        logits = constrain(logits, ("data", None, "model"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lm[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mm
+        return (carry[0] + nll.sum(), carry[1] + mm.sum()), None
+
+    # remat: the (B, chunk, V) logits are recomputed in backward rather
+    # than saved per chunk (V up to 262k — this is the big-vocab guard)
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body),
+                                 (jnp.zeros((), jnp.float32),
+                                  jnp.zeros((), jnp.float32)),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

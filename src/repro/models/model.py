@@ -1,0 +1,388 @@
+"""Public model API: build_model(cfg) -> Model.
+
+Model bundles init, the training loss, prefill and one-token decode for any
+ArchConfig, including the whisper enc-dec special case and the VLM stub
+frontend. Vocab is padded to a multiple of 128 so the unembedding always
+shards over the 'model' mesh axis (internvl2's 92553 is the offender).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from . import attention as attn
+from .layers import (
+    _dense_init,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    matmul,
+    mlp,
+    rmsnorm,
+    unembed_chunked,
+)
+from .transformer import (
+    Slot,
+    _init_shared_block,
+    _init_slot,
+    decode_hidden,
+    forward_hidden,
+    init_slot_cache,
+    layer_plan,
+)
+
+Array = jnp.ndarray
+
+
+def padded_vocab(v: int) -> int:
+    return ((v + 127) // 128) * 128
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    @property
+    def vocab_pad(self) -> int:
+        return padded_vocab(self.cfg.vocab_size)
+
+    # ---------------- params -----------------------------------------------
+    def init_params(self, key) -> dict:
+        cfg = self.cfg
+        dtype = cfg.dtype()
+        if cfg.encoder is not None:
+            return self._whisper_init(key, dtype)
+        head, period, n_groups, tail = layer_plan(cfg)
+        ks = jax.random.split(key, 8)
+        params: dict = {
+            "embed": init_embedding(ks[0], self.vocab_pad, cfg.d_model,
+                                    dtype),
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+        params["head"] = [
+            _init_slot(jax.random.fold_in(ks[1], i), cfg, s, dtype)
+            for i, s in enumerate(head)
+        ]
+        if n_groups > 0:
+            def one_group(k):
+                return {
+                    f"slot{j}": _init_slot(jax.random.fold_in(k, j), cfg, s,
+                                           dtype)
+                    for j, s in enumerate(period)
+                }
+            params["groups"] = jax.vmap(one_group)(
+                jax.random.split(ks[2], n_groups))
+        else:
+            params["groups"] = {}
+        params["tail"] = [
+            _init_slot(jax.random.fold_in(ks[3], i), cfg, s, dtype)
+            for i, s in enumerate(tail)
+        ]
+        if cfg.shared_attn_every:
+            params["shared"] = _init_shared_block(ks[4], cfg, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = _dense_init(
+                ks[5], (cfg.d_model, self.vocab_pad), dtype)
+        if cfg.frontend == "vision_stub":
+            params["frontend"] = _dense_init(
+                ks[6], (cfg.d_model, cfg.d_model), dtype)
+        return params
+
+    def params_spec(self) -> Any:
+        """ShapeDtypeStruct pytree — used by the dry-run, never allocates."""
+        return jax.eval_shape(
+            lambda: self.init_params(jax.random.PRNGKey(0)))
+
+    def param_count(self, spec=None) -> int:
+        spec = spec or self.params_spec()
+        return sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(spec))
+
+    # ---------------- embedding / unembedding --------------------------------
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+        if cfg.scale_embed:
+            # cast the scale to h.dtype: a f32 scalar would promote the
+            # entire residual stream to f32 (2x activation memory)
+            h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            pe = matmul(batch["patch_embeds"].astype(h.dtype),
+                        params["frontend"])
+            h = jnp.concatenate([pe, h], axis=1)
+        b, s = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        return h, positions
+
+    def _unembed_table(self, params) -> Array:
+        if self.cfg.tie_embeddings:
+            return params["embed"]["table"]
+        return params["lm_head"].T  # (Vpad, D)
+
+    # ---------------- train loss ----------------------------------------------
+    def loss_fn(self, params, batch) -> tuple:
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return self._whisper_loss(params, batch)
+        h, positions = self._embed_in(params, batch)
+        h, aux = forward_hidden(cfg, params, h, positions)
+        labels = batch["labels"]
+        if cfg.frontend == "vision_stub" and "patch_embeds" in batch:
+            h = h[:, -labels.shape[1]:]  # loss on text positions only
+        mask = (labels >= 0).astype(jnp.float32)
+        labels = jnp.maximum(labels, 0)
+        nll = unembed_chunked(self._unembed_table(params), h, labels,
+                              cfg.loss_chunk, mask)
+        loss = nll + aux
+        return loss, {"nll": nll, "aux": aux}
+
+    # ---------------- prefill (forward only) -----------------------------------
+    def prefill_fn(self, params, batch) -> Array:
+        """Forward pass, last-position logits (the inference-prefill cell)."""
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return self._whisper_prefill(params, batch)
+        h, positions = self._embed_in(params, batch)
+        h, _ = forward_hidden(cfg, params, h, positions)
+        last = h[:, -1]
+        logits = jnp.dot(last, self._unembed_table(params).T,
+                         preferred_element_type=jnp.float32)
+        return logits[:, : cfg.vocab_size]
+
+    # ---------------- decode ----------------------------------------------------
+    def init_cache(self, batch: int, s_max: int):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.act_dtype)
+        if cfg.encoder is not None:
+            return self._whisper_cache(batch, dtype)
+        head, period, n_groups, tail = layer_plan(cfg)
+        cache = {
+            "head": [init_slot_cache(cfg, s, batch, s_max, dtype)
+                     for s in head],
+            "tail": [init_slot_cache(cfg, s, batch, s_max, dtype)
+                     for s in tail],
+        }
+        if n_groups > 0:
+            one = {f"slot{j}": init_slot_cache(cfg, s, batch, s_max, dtype)
+                   for j, s in enumerate(period)}
+            cache["groups"] = jax.tree.map(
+                lambda x: jnp.zeros((n_groups,) + x.shape, x.dtype), one)
+        else:
+            cache["groups"] = {}
+        return cache
+
+    def cache_spec(self, batch: int, s_max: int):
+        return jax.eval_shape(
+            functools.partial(self.init_cache, batch, s_max))
+
+    def serve_step(self, params, cache, tokens: Array,
+                   positions: Array) -> tuple:
+        """One decode step: tokens (B, 1), positions (B,) ->
+        (logits (B, V), new_cache)."""
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return self._whisper_serve(params, cache, tokens, positions)
+        h = embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+        if cfg.scale_embed:
+            # cast the scale to h.dtype: a f32 scalar would promote the
+            # entire residual stream to f32 (2x activation memory)
+            h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+        h, cache = decode_hidden(cfg, params, cache, h, positions)
+        logits = jnp.dot(h[:, 0], self._unembed_table(params).T,
+                         preferred_element_type=jnp.float32)
+        return logits[:, : cfg.vocab_size], cache
+
+    # ======================= whisper (enc-dec) ================================
+    def _whisper_init(self, key, dtype) -> dict:
+        cfg = self.cfg
+        enc_l = cfg.encoder.n_layers
+        ks = jax.random.split(key, 8)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "norm1": init_rmsnorm(cfg.d_model, dtype),
+                "attn": attn.init_gqa(k1, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.head_dim, dtype,
+                                      use_bias=cfg.use_bias),
+                "norm2": init_rmsnorm(cfg.d_model, dtype),
+                "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype,
+                                glu=cfg.glu, use_bias=cfg.use_bias),
+            }
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "norm1": init_rmsnorm(cfg.d_model, dtype),
+                "self_attn": attn.init_gqa(k1, cfg.d_model, cfg.n_heads,
+                                           cfg.n_kv_heads, cfg.head_dim,
+                                           dtype, use_bias=cfg.use_bias),
+                "norm_x": init_rmsnorm(cfg.d_model, dtype),
+                "cross_attn": attn.init_gqa(k2, cfg.d_model, cfg.n_heads,
+                                            cfg.n_kv_heads, cfg.head_dim,
+                                            dtype, use_bias=cfg.use_bias),
+                "norm2": init_rmsnorm(cfg.d_model, dtype),
+                "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype,
+                                glu=cfg.glu, use_bias=cfg.use_bias),
+            }
+
+        return {
+            "embed": init_embedding(ks[0], self.vocab_pad, cfg.d_model,
+                                    dtype),
+            "pos_embed": _dense_init(
+                ks[1], (cfg.encoder.max_target, cfg.d_model), dtype,
+                scale=0.02),
+            "enc": [enc_layer(jax.random.fold_in(ks[2], i))
+                    for i in range(enc_l)],
+            "enc_norm": init_rmsnorm(cfg.d_model, dtype),
+            "dec": [dec_layer(jax.random.fold_in(ks[3], i))
+                    for i in range(cfg.n_layers)],
+            "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    def _whisper_encode(self, params, enc_embeds: Array) -> Array:
+        cfg = self.cfg
+        h = enc_embeds.astype(jnp.dtype(cfg.act_dtype))
+        b, s, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        for lp in params["enc"]:
+            hn = rmsnorm(lp["norm1"], h, cfg.norm_eps)
+            h = h + attn.attention_train(
+                lp["attn"], hn, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=cfg.head_dim, rope_theta=None,
+                causal=False)
+            h = h + mlp(lp["mlp"], rmsnorm(lp["norm2"], h, cfg.norm_eps),
+                        act=cfg.act, glu=cfg.glu)
+        return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+    def _whisper_decode_stack(self, params, h, pos, enc_out, enc_pos):
+        cfg = self.cfg
+        for lp in params["dec"]:
+            hn = rmsnorm(lp["norm1"], h, cfg.norm_eps)
+            h = h + attn.attention_train(
+                lp["self_attn"], hn, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=cfg.head_dim, rope_theta=None,
+                causal=True)
+            hx = rmsnorm(lp["norm_x"], h, cfg.norm_eps)
+            h = h + attn.attention_train(
+                lp["cross_attn"], hx, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=cfg.head_dim, rope_theta=None,
+                causal=False, x_kv=enc_out, kv_positions=enc_pos)
+            h = h + mlp(lp["mlp"], rmsnorm(lp["norm2"], h, cfg.norm_eps),
+                        act=cfg.act, glu=cfg.glu)
+        return rmsnorm(params["final_norm"], h, cfg.norm_eps)
+
+    def _whisper_hidden(self, params, batch):
+        cfg = self.cfg
+        enc_out = self._whisper_encode(params, batch["enc_embeds"])
+        b, se, _ = enc_out.shape
+        enc_pos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32)[None],
+                                   (b, se))
+        tokens = batch["tokens"]
+        sd = tokens.shape[1]
+        h = embed(params["embed"], tokens).astype(enc_out.dtype)
+        h = h + params["pos_embed"][None, :sd]
+        pos = jnp.broadcast_to(jnp.arange(sd, dtype=jnp.int32)[None], (b, sd))
+        return self._whisper_decode_stack(params, h, pos, enc_out, enc_pos)
+
+    def _whisper_loss(self, params, batch):
+        h = self._whisper_hidden(params, batch)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = unembed_chunked(params["embed"]["table"], h,
+                              jnp.maximum(labels, 0), self.cfg.loss_chunk,
+                              mask)
+        return nll, {"nll": nll, "aux": jnp.zeros((), jnp.float32)}
+
+    def _whisper_prefill(self, params, batch):
+        h = self._whisper_hidden(params, batch)
+        logits = jnp.dot(h[:, -1], params["embed"]["table"].T,
+                         preferred_element_type=jnp.float32)
+        return logits[:, : self.cfg.vocab_size]
+
+    def _whisper_cache(self, batch: int, dtype):
+        cfg = self.cfg
+        hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        tmax = cfg.encoder.max_target
+        nf = cfg.encoder.n_frames
+        return {
+            "self": [
+                {"k": jnp.zeros((batch, tmax, hkv, dh), dtype),
+                 "v": jnp.zeros((batch, tmax, hkv, dh), dtype)}
+                for _ in range(cfg.n_layers)
+            ],
+            # cross K/V precomputed from the encoder at prefill
+            "cross": [
+                {"k": jnp.zeros((batch, nf, hkv, dh), dtype),
+                 "v": jnp.zeros((batch, nf, hkv, dh), dtype)}
+                for _ in range(cfg.n_layers)
+            ],
+        }
+
+    def prepare_cross_cache(self, params, cache, enc_embeds: Array):
+        """Fill the cross-attention cache from encoder output (prefill)."""
+        cfg = self.cfg
+        enc_out = self._whisper_encode(params, enc_embeds)
+        for i, lp in enumerate(params["dec"]):
+            k = matmul(enc_out, lp["cross_attn"]["wk"])
+            v = matmul(enc_out, lp["cross_attn"]["wv"])
+            if "bk" in lp["cross_attn"]:
+                k = k + lp["cross_attn"]["bk"]
+                v = v + lp["cross_attn"]["bv"]
+            b, s, _ = k.shape
+            cache["cross"][i] = {
+                "k": k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim),
+                "v": v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim),
+            }
+        return cache
+
+    def _whisper_serve(self, params, cache, tokens, positions):
+        cfg = self.cfg
+        b = tokens.shape[0]
+        h = embed(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+        pos_emb = jnp.take(params["pos_embed"],
+                           jnp.minimum(positions, cfg.encoder.max_target - 1),
+                           axis=0)
+        h = h + pos_emb[:, None, :]
+        nf = cfg.encoder.n_frames
+        for i, lp in enumerate(params["dec"]):
+            hn = rmsnorm(lp["norm1"], h, cfg.norm_eps)
+            y, cache["self"][i] = attn.attention_decode(
+                lp["self_attn"], cache["self"][i], hn, positions,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                d_head=cfg.head_dim, rope_theta=None)
+            h = h + y
+            # cross attention against the precomputed encoder cache
+            hx = rmsnorm(lp["norm_x"], h, cfg.norm_eps)
+            q = matmul(hx, lp["cross_attn"]["wq"])
+            if "bq" in lp["cross_attn"]:
+                q = q + lp["cross_attn"]["bq"]
+            q = q.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+            kc, vc = cache["cross"][i]["k"], cache["cross"][i]["v"]
+            scale = 1.0 / np.sqrt(cfg.head_dim)
+            from .attention import _sdpa
+            o = _sdpa(q, kc, vc, None, scale)
+            o = matmul(o.reshape(b, 1, cfg.n_heads * cfg.head_dim),
+                       lp["cross_attn"]["wo"])
+            if "bo" in lp["cross_attn"]:
+                o = o + lp["cross_attn"]["bo"]
+            h = h + o
+            h = h + mlp(lp["mlp"], rmsnorm(lp["norm2"], h, cfg.norm_eps),
+                        act=cfg.act, glu=cfg.glu)
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = jnp.dot(h[:, 0], params["embed"]["table"].T,
+                         preferred_element_type=jnp.float32)
+        return logits[:, : cfg.vocab_size], cache
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg)

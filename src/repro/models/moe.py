@@ -1,0 +1,130 @@
+"""Mixture-of-Experts with capacity-based dispatch (GShard/Switch style).
+
+Scalable layout (DESIGN.md §5):
+  * expert weight stacks (E, D, F) sharded E over 'model' (expert
+    parallelism) and D/F over data (FSDP);
+  * tokens are dispatched per (sample x sequence-chunk): the dispatch
+    one-hot (B, g, E, C) keeps the batch dim, which is sharded over 'data',
+    and produces expert buffers (B, E, C, D) with E over 'model' — the
+    dispatch/combine einsums are then *local* (B and E are output dims on
+    their own shards) and the only collective is the combine psum over the
+    model axis, exactly like a tensor-parallel MLP;
+  * sequence chunks of ``router_group_size`` run under a lax.scan so the
+    one-hot transient is VMEM-scale, not HBM-resident;
+  * shared experts (deepseek-v2: 2, llama4: 1) run densely for every token.
+
+Top-k routing with softmax-renormalized gates and per-expert capacity
+``C = ceil(g * k / E * capacity_factor)`` per sample-chunk; overflow tokens
+fall through to the residual path (standard dropping semantics). Router
+load-balance + z losses are returned for the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init, init_mlp, matmul, mlp
+
+Array = jnp.ndarray
+
+
+def init_moe(key, d_model: int, moe_cfg, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    e, f = moe_cfg.n_experts, moe_cfg.d_ff_expert
+    p = {
+        "router": _dense_init(ks[0], (d_model, e), dtype, scale=0.02),
+        # stacked expert GLU weights: (E, D, F) / (E, F, D)
+        "gate": _dense_init(ks[1], (e, d_model, f), dtype),
+        "up": _dense_init(ks[2], (e, d_model, f), dtype),
+        "down": _dense_init(ks[3], (e, f, d_model), dtype),
+    }
+    if moe_cfg.n_shared:
+        p["shared"] = init_mlp(
+            jax.random.fold_in(key, 7), d_model,
+            moe_cfg.n_shared * f, dtype, glu=True, use_bias=False)
+    return p
+
+
+def _dispatch_chunk(params: dict, x: Array, moe_cfg, capacity: int) -> tuple:
+    """One sequence chunk: x (B, g, D) -> (out (B, g, D), aux losses)."""
+    e, k = moe_cfg.n_experts, moe_cfg.top_k
+    b, g, d = x.shape
+    logits = matmul(x, params["router"]).astype(jnp.float32)    # (B, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (B, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) in its expert's capacity buffer,
+    # counted independently per sample (batch stays shardable over 'data')
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)     # (B, g, k, E)
+    flat = onehot.reshape(b, g * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(b, g, k, e)
+    pos = (pos_in_expert * onehot).sum(-1)                      # (B, g, k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep
+
+    cap_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                            dtype=x.dtype)                      # (B, g, k, C)
+    disp = (onehot.astype(x.dtype)[..., None]
+            * cap_oh[..., None, :]).sum(2)                      # (B, g, E, C)
+    comb = ((onehot.astype(jnp.float32) * gate_vals[..., None]
+             ).astype(x.dtype)[..., None] * cap_oh[..., None, :]).sum(2)
+
+    # local dispatch: B (data) and E (model) are both output dims
+    from .shard_ctx import constrain
+
+    xin = jnp.einsum("bgec,bgd->becd", disp, x,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    xin = constrain(xin, ("data", "model", None, None))
+    h = jax.nn.silu(
+        jnp.einsum("becd,edf->becf", xin, params["gate"],
+                   preferred_element_type=jnp.float32)
+    ).astype(x.dtype) * jnp.einsum(
+        "becd,edf->becf", xin, params["up"],
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    xout = jnp.einsum("becf,efd->becd", h, params["down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    # combine: contraction over (E, C) -> psum over 'model' (GSPMD)
+    out = jnp.einsum("bgec,becd->bgd", comb, xout,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # aux: load-balance (Switch) + router z-loss
+    density = jnp.mean(onehot.sum(2).astype(jnp.float32), axis=(0, 1))
+    prob_mass = jnp.mean(probs, axis=(0, 1))
+    lb = e * jnp.sum(density / k * prob_mass)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, (lb, z)
+
+
+def moe_apply(params: dict, x: Array, moe_cfg) -> tuple:
+    """x: (B, S, D) -> (out, aux_loss). Sequence chunks are scanned."""
+    b, s, d = x.shape
+    g = min(moe_cfg.router_group_size, s)
+    nch = s // g
+    assert nch * g == s, f"seq {s} not divisible by router group {g}"
+    capacity = int(np.ceil(g * moe_cfg.top_k / moe_cfg.n_experts
+                           * moe_cfg.capacity_factor))
+    capacity = max(capacity, 4)
+
+    if nch == 1:
+        out, (lb, z) = _dispatch_chunk(params, x, moe_cfg, capacity)
+        aux = (lb - 1.0) * 1e-2 + z * 1e-3
+    else:
+        chunks = jnp.moveaxis(x.reshape(b, nch, g, d), 1, 0)
+
+        def body(carry, xg):
+            o, (lb, z) = _dispatch_chunk(params, xg, moe_cfg, capacity)
+            return (carry[0] + lb, carry[1] + z), o
+
+        # remat: dispatch one-hots + expert buffers recomputed in backward
+        (lb, z), outs = jax.lax.scan(
+            jax.checkpoint(body),
+            (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            chunks)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, d)
+        aux = (lb / nch - 1.0) * 1e-2 + (z / nch) * 1e-3
+    if "shared" in params:
+        out = out + mlp(params["shared"], x, act="silu", glu=True)
+    return out, aux

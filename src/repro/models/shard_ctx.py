@@ -1,0 +1,82 @@
+"""Logical activation-sharding context for model code.
+
+Model code calls ``constrain(x, ("data", None, "model", None))`` with
+*logical* axis roles; steps.py binds the roles to concrete mesh axes before
+tracing. Outside a distributed context (CPU smoke tests) everything no-ops.
+Divisibility is checked per-dim — a dim that doesn't divide its axes is
+left unconstrained (same graceful rule as distributed/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: dict = {"active": False, "data": None, "model": None,
+              "data_size": 1, "model_size": 1, "mesh": None}
+
+
+def set_axes(mesh, data_axes, model_axes) -> None:
+    _CTX.update(
+        active=True,
+        data=tuple(data_axes),
+        model=tuple(model_axes),
+        data_size=int(np.prod([mesh.shape[a] for a in data_axes])),
+        model_size=int(np.prod([mesh.shape[a] for a in model_axes])),
+        mesh=mesh,
+    )
+
+
+def clear() -> None:
+    _CTX.update(active=False, data=None, model=None, data_size=1,
+                model_size=1)
+
+
+def model_size() -> int:
+    return _CTX["model_size"] if _CTX["active"] else 1
+
+
+def gather_fsdp(param_tree):
+    """Explicit FSDP all-gather at use site: constrain every weight leaf to
+    its model-only sharding (data/FSDP dims dropped). Inside the layer-group
+    scan this gathers one group's weights, which XLA frees after the
+    iteration — ZeRO-3 semantics with GSPMD doing the bookkeeping.
+
+    Without this, contraction-dim FSDP shards bait the SPMD partitioner
+    into partial-sum strategies that replicate activations (measured: 137 GB
+    -> fits; see EXPERIMENTS.md §Perf)."""
+    if not _CTX["active"]:
+        return param_tree
+    from repro.distributed.sharding import param_specs
+
+    from jax.sharding import NamedSharding
+
+    specs = param_specs(param_tree, _CTX["mesh"], data_axes=(),
+                        model_axes=_CTX["model"])
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, NamedSharding(_CTX["mesh"], s)),
+        param_tree, specs)
+
+
+def constrain(x, roles: Sequence[Optional[str]]):
+    """Apply with_sharding_constraint mapping 'data'/'model' roles to the
+    bound mesh axes; no-op when no context is active."""
+    if not _CTX["active"]:
+        return x
+    dims = []
+    for size, role in zip(x.shape, roles):
+        if role is None:
+            dims.append(None)
+            continue
+        axes = _CTX[role]
+        if size % _CTX[f"{role}_size"] == 0 and size >= _CTX[f"{role}_size"]:
+            dims.append(axes)
+        else:
+            dims.append(None)
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX["mesh"], P(*dims)))

@@ -1,0 +1,311 @@
+"""State-space & recurrent blocks: Mamba2 (SSD, chunkwise), xLSTM (mLSTM /
+sLSTM). All O(N) in sequence length with O(1) decode state — these are the
+architectures that run the ``long_500k`` shape cell (DESIGN.md §4).
+
+Chunkwise scan pattern (both Mamba2 and mLSTM): within a chunk the
+recurrence is unrolled as small matmuls (MXU work), across chunks a
+lax.scan carries the O(1) state — the standard TPU-friendly linearization
+(quadratic only in chunk size, linear in sequence).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init, matmul
+
+Array = jnp.ndarray
+
+
+# =============================== Mamba2 (SSD) ===================================
+def init_mamba2(key, d_model: int, ssm, dtype) -> dict:
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        # fused in-projection: [z (gate), x, B, C, dt]
+        "w_in": _dense_init(
+            ks[0],
+            (d_model, 2 * d_inner + 2 * ssm.d_state + n_heads), dtype),
+        "w_out": _dense_init(ks[1], (d_inner, d_model), dtype),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+    }
+
+
+def _ssd_chunk_scan(xh, bmat, cmat, dt, a, chunk):
+    """Chunkwise SSD: xh (B,S,H,P), bmat/cmat (B,S,N), dt (B,S,H) fp32,
+    a (H,) fp32 negative. Returns y (B,S,H,P)."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    xc = xh.reshape(b, nc, chunk, h, p)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+    dtc = dt.reshape(b, nc, chunk, h)
+
+    # per-chunk cumulative log decay  (B,nc,chunk,H)
+    seg = dtc * a[None, None, None, :]
+    cum = jnp.cumsum(seg, axis=2)
+
+    def chunk_body(state, xs):
+        xcb, bcb, ccb, dtb, cumb, segb = xs
+        # state: (B, H, P, N)
+        # intra-chunk (triangular) term
+        li = cumb[:, :, None, :] - cumb[:, None, :, :]      # (B,c,c,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        gamma = jnp.where(causal[None, :, :, None], jnp.exp(li), 0.0)
+        sc = jnp.einsum("bqn,bkn->bqk", ccb, bcb,
+                        preferred_element_type=jnp.float32)
+        att = sc[:, :, :, None] * gamma * dtb[:, None, :, :]
+        y = jnp.einsum("bqkh,bkhp->bqhp", att, xcb,
+                       preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cumb)                            # (B,c,H)
+        y = y + jnp.einsum("bqn,bhpn,bqh->bqhp", ccb, state, decay_in,
+                           preferred_element_type=jnp.float32)
+        # state update
+        decay_out = jnp.exp(cumb[:, -1:, :] - cumb)         # (B,c,H)
+        upd = jnp.einsum("bkn,bkhp,bkh,bkh->bhpn", bcb, xcb, dtb, decay_out,
+                         preferred_element_type=jnp.float32)
+        state = state * jnp.exp(cumb[:, -1, :])[:, :, None, None] + upd
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, bc, cc, dtc, cum, seg))
+    # remat: the (B, c, c, H) intra-chunk decay/attention tensors are
+    # recomputed in backward (they dwarf HBM if saved per chunk)
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_body), state0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+
+
+def _mamba2_inproj(params, x, ssm, d_model):
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    n = ssm.d_state
+    zxbcdt = matmul(x, params["w_in"])
+    z, xs, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n,
+                 2 * d_inner + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])               # (B,S,H)
+    a = -jnp.exp(params["a_log"])                           # (H,) negative
+    return z, xs, bmat.astype(jnp.float32), cmat.astype(jnp.float32), dt, a, \
+        n_heads, d_inner
+
+
+def mamba2_train(params: dict, x: Array, ssm, d_model: int) -> Array:
+    b, s, _ = x.shape
+    z, xs, bmat, cmat, dt, a, n_heads, d_inner = _mamba2_inproj(
+        params, x, ssm, d_model)
+    xh = xs.reshape(b, s, n_heads, ssm.head_dim).astype(jnp.float32)
+    chunk = min(ssm.chunk, s)
+    assert s % chunk == 0
+    y = _ssd_chunk_scan(xh, bmat, cmat, dt, a, chunk)
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = (y.reshape(b, s, d_inner) * jax.nn.silu(
+        z.astype(jnp.float32))).astype(x.dtype)
+    return matmul(y, params["w_out"])
+
+
+def mamba2_decode(params: dict, state: Array, x: Array, ssm,
+                  d_model: int) -> tuple:
+    """One-step recurrence. state: (B, H, P, N) fp32. x: (B, 1, D)."""
+    b = x.shape[0]
+    z, xs, bmat, cmat, dt, a, n_heads, d_inner = _mamba2_inproj(
+        params, x, ssm, d_model)
+    xh = xs.reshape(b, n_heads, ssm.head_dim).astype(jnp.float32)
+    dt1 = dt[:, 0]                                          # (B,H)
+    decay = jnp.exp(dt1 * a[None, :])                       # (B,H)
+    upd = jnp.einsum("bn,bhp,bh->bhpn", bmat[:, 0], xh, dt1)
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], state)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = (y.reshape(b, 1, d_inner) * jax.nn.silu(
+        z.astype(jnp.float32))).astype(x.dtype)
+    return matmul(y, params["w_out"]), state
+
+
+def mamba2_state_shape(batch: int, d_model: int, ssm) -> tuple:
+    d_inner = ssm.expand * d_model
+    h = d_inner // ssm.head_dim
+    return (batch, h, ssm.head_dim, ssm.d_state)
+
+
+# ================================ xLSTM: mLSTM ==================================
+def init_mlstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "wqkv": _dense_init(ks[0], (d_model, 3 * d_model), dtype),
+        "wif": _dense_init(ks[1], (d_model, 2 * n_heads), dtype, scale=0.02),
+        "wo_gate": _dense_init(ks[2], (d_model, d_model), dtype),
+        "wo": _dense_init(ks[3], (d_model, d_model), dtype),
+    }
+
+
+def mlstm_train(params: dict, x: Array, n_heads: int,
+                chunk: int = 256) -> Array:
+    """Chunkwise mLSTM (matrix memory + exponential gating, xLSTM paper).
+
+    Stabilized formulation: per-step log input gate i_t and log forget
+    gate accumulate; within a chunk the pairwise decay matrix is built from
+    cumulative log-gates (like SSD with data-dependent scalar decay).
+    """
+    b, s, d = x.shape
+    dh = d // n_heads
+    qkv = matmul(x, params["wqkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, n_heads, dh).astype(jnp.float32) / np.sqrt(dh)
+    k = k.reshape(b, s, n_heads, dh).astype(jnp.float32)
+    v = v.reshape(b, s, n_heads, dh).astype(jnp.float32)
+    gif = matmul(x, params["wif"]).astype(jnp.float32)
+    ig = gif[..., :n_heads]                                  # (B,S,H) log-ish
+    fg = jax.nn.log_sigmoid(gif[..., n_heads:] + 1.0)        # (B,S,H) <= 0
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    qc = q.reshape(b, nc, chunk, n_heads, dh)
+    kc = k.reshape(b, nc, chunk, n_heads, dh)
+    vc = v.reshape(b, nc, chunk, n_heads, dh)
+    ic = ig.reshape(b, nc, chunk, n_heads)
+    fc = fg.reshape(b, nc, chunk, n_heads)
+    cumf = jnp.cumsum(fc, axis=2)
+
+    def body(carry, xs):
+        cstate, nstate, mstate = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qb, kb, vb, ib, fb, cfb = xs
+        # log weights of source k at target q within chunk
+        lw = cfb[:, :, None, :] - cfb[:, None, :, :] + ib[:, None, :, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lw = jnp.where(causal[None, :, :, None], lw, -jnp.inf)
+        # carried-state log weight at each target
+        lw_state = cfb + mstate[:, None, :]                  # (B,c,H)
+        m_new = jnp.maximum(jnp.max(lw, axis=2), lw_state)   # (B,c,H)
+        wmat = jnp.exp(lw - m_new[:, :, None, :])
+        wstate = jnp.exp(lw_state - m_new)
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qb, kb) * wmat
+        num = jnp.einsum("bqkh,bkhd->bqhd", scores, vb)
+        num = num + wstate[..., None] * jnp.einsum(
+            "bqhd,bhde->bqhe", qb, cstate)
+        den = scores.sum(2) + wstate * jnp.einsum(
+            "bqhd,bhd->bqh", qb, nstate)
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update to end of chunk
+        lw_out = cfb[:, -1:, :] - cfb + ib                   # (B,c,H)
+        m_up = jnp.maximum(jnp.max(lw_out, axis=1),
+                           cfb[:, -1, :] + mstate)           # (B,H)
+        wout = jnp.exp(lw_out - m_up[:, None, :])
+        wcarry = jnp.exp(cfb[:, -1, :] + mstate - m_up)
+        cstate = wcarry[:, :, None, None] * cstate + jnp.einsum(
+            "bkh,bkhd,bkhe->bhde", wout, kb, vb)
+        nstate = wcarry[..., None] * nstate + jnp.einsum(
+            "bkh,bkhd->bhd", wout, kb)
+        return (cstate, nstate, m_up), y
+
+    c0 = jnp.zeros((b, n_heads, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, n_heads, dh), jnp.float32)
+    m0 = jnp.full((b, n_heads), -1e30, jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, ic, fc, cumf))
+    _, ys = jax.lax.scan(jax.checkpoint(body), (c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = y * jax.nn.silu(matmul(x, params["wo_gate"]))
+    return matmul(y, params["wo"])
+
+
+def mlstm_decode(params: dict, state: tuple, x: Array,
+                 n_heads: int) -> tuple:
+    """One-step mLSTM. state = (C (B,H,dh,dh), n (B,H,dh), m (B,H)) fp32."""
+    b, _, d = x.shape
+    dh = d // n_heads
+    cstate, nstate, mstate = state
+    qkv = matmul(x, params["wqkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, n_heads, dh).astype(jnp.float32) / np.sqrt(dh)
+    k = k.reshape(b, n_heads, dh).astype(jnp.float32)
+    v = v.reshape(b, n_heads, dh).astype(jnp.float32)
+    gif = matmul(x, params["wif"]).astype(jnp.float32)[:, 0]
+    ig, fg = gif[:, :n_heads], jax.nn.log_sigmoid(gif[:, n_heads:] + 1.0)
+    m_new = jnp.maximum(fg + mstate, ig)
+    wf = jnp.exp(fg + mstate - m_new)
+    wi = jnp.exp(ig - m_new)
+    cstate = wf[:, :, None, None] * cstate + wi[:, :, None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    nstate = wf[..., None] * nstate + wi[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, cstate)
+    den = jnp.einsum("bhd,bhd->bh", q, nstate)
+    y = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None]).reshape(b, 1, d)
+    y = y.astype(x.dtype) * jax.nn.silu(matmul(x, params["wo_gate"]))
+    return matmul(y, params["wo"]), (cstate, nstate, m_new)
+
+
+def mlstm_state_shape(batch: int, d_model: int, n_heads: int) -> tuple:
+    dh = d_model // n_heads
+    return ((batch, n_heads, dh, dh), (batch, n_heads, dh), (batch, n_heads))
+
+
+# ================================ xLSTM: sLSTM ==================================
+def init_slstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    dh = d_model // n_heads
+    return {
+        "w_gates": _dense_init(ks[0], (d_model, 4 * d_model), dtype),
+        # block-diagonal recurrent weights, per head: (H, dh, 4*dh)
+        "r_gates": _dense_init(ks[1], (n_heads, dh, 4 * dh), dtype,
+                               scale=1.0 / np.sqrt(dh)),
+        "wo": _dense_init(ks[2], (d_model, d_model), dtype),
+    }
+
+
+def _slstm_step(params, carry, xg, n_heads, dh):
+    """carry: (c, n, h, m) each (B, H, dh) fp32 except m (B,H,dh)."""
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,hde->bhe", h, params["r_gates"].astype(jnp.float32))
+    g = xg + rec                                             # (B,H,4*dh)
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    lf = jax.nn.log_sigmoid(ft + 1.0)
+    m_new = jnp.maximum(lf + m, it)
+    wf, wi = jnp.exp(lf + m - m_new), jnp.exp(it - m_new)
+    c = wf * c + wi * zt
+    n = wf * n + wi
+    h = ot * c / jnp.maximum(jnp.abs(n), 1.0)
+    return (c, n, h, m_new)
+
+
+def slstm_train(params: dict, x: Array, n_heads: int) -> Array:
+    b, s, d = x.shape
+    dh = d // n_heads
+    xg = matmul(x, params["w_gates"]).astype(jnp.float32).reshape(
+        b, s, n_heads, 4 * dh)
+
+    def body(carry, xt):
+        carry = _slstm_step(params, carry, xt, n_heads, dh)
+        return carry, carry[2]
+
+    z = jnp.zeros((b, n_heads, dh), jnp.float32)
+    m0 = jnp.full((b, n_heads, dh), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(jax.checkpoint(body), (z, z, z, m0),
+                         jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    return matmul(y, params["wo"])
+
+
+def slstm_decode(params: dict, state: tuple, x: Array,
+                 n_heads: int) -> tuple:
+    b, _, d = x.shape
+    dh = d // n_heads
+    xg = matmul(x, params["w_gates"]).astype(jnp.float32).reshape(
+        b, n_heads, 4 * dh)
+    state = _slstm_step(params, state, xg, n_heads, dh)
+    y = state[2].reshape(b, 1, d).astype(x.dtype)
+    return matmul(y, params["wo"]), state
+
+
+def slstm_state_shape(batch: int, d_model: int, n_heads: int) -> tuple:
+    dh = d_model // n_heads
+    s = (batch, n_heads, dh)
+    return (s, s, s, s)

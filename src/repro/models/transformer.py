@@ -1,0 +1,344 @@
+"""Block assembly: layer plan, scan-over-groups forward, decode-with-cache.
+
+Every architecture is described by a *layer plan*: a periodic pattern of
+slots (mixer kind + ffn kind). The period's worth of parameters is stacked
+along a leading group axis and the forward runs ``lax.scan`` over groups —
+keeping HLO size O(period) instead of O(n_layers), the binding constraint
+for compiling 40–80 layer models on a 512-device mesh. Remainder layers
+(e.g. gemma3-27b: 62 = 10*6 + 2) live in an explicit unscanned tail;
+special leading layers (deepseek-v2's first dense FFN) in a head.
+
+Cache layout mirrors the plan: one stacked leaf per slot per group, plus
+head/tail entries. Local-attention slots use ring buffers of size
+``sliding_window`` — this is what keeps gemma3's long_500k decode cache
+dominated by its 1-in-6 global layers only (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from .layers import (
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    matmul,
+    mlp,
+    rmsnorm,
+    unembed_chunked,
+)
+
+Array = jnp.ndarray
+
+
+# ============================ layer plan ========================================
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    mixer: str          # global | local | mla | mamba | mlstm | slstm | shared_attn
+    ffn: str            # mlp | moe | dense_big | none
+    theta: float = 10_000.0
+
+
+def layer_plan(cfg: ArchConfig):
+    """Returns (head: [Slot], period: [Slot], n_groups, tail: [Slot])."""
+    def mixer_for(i: int) -> Slot:
+        if cfg.ssm and cfg.shared_attn_every:      # zamba2
+            if (i + 1) % cfg.shared_attn_every == 0:
+                return Slot("shared_attn", "none")
+            return Slot("mamba", "none")
+        if cfg.ssm and cfg.ssm.slstm_every:        # xlstm
+            if (i + 1) % cfg.ssm.slstm_every == 0:
+                return Slot("slstm", "none")
+            return Slot("mlstm", "none")
+        if cfg.ssm:
+            return Slot("mamba", "none")
+        if cfg.mla:
+            ffn = "moe"
+            if cfg.moe and i < cfg.moe.first_dense:
+                ffn = "dense_big"
+            return Slot("mla", ffn)
+        if cfg.moe:                                # llama4: MoE every k-th
+            step = cfg.moe.interleave_step
+            ffn = "moe" if (i % step == step - 1) else "dense_big"
+            return Slot("global", ffn, cfg.rope_theta)
+        if cfg.local_global_ratio:                 # gemma3
+            period = cfg.local_global_ratio + 1
+            if (i + 1) % period == 0:
+                return Slot("global", "mlp",
+                            cfg.rope_theta_global or cfg.rope_theta)
+            return Slot("local", "mlp", cfg.rope_theta)
+        return Slot("global", "mlp", cfg.rope_theta)
+
+    slots = [mixer_for(i) for i in range(cfg.n_layers)]
+    # head: leading slots that break the periodic pattern
+    n_head = cfg.moe.first_dense if (cfg.moe and cfg.moe.first_dense) else 0
+    head, rest = slots[:n_head], slots[n_head:]
+    # find the period of the remaining pattern
+    period_len = 1
+    for cand in range(1, min(len(rest), 12) + 1):
+        if all(rest[i] == rest[i % cand] for i in range(len(rest))
+               if i < (len(rest) // cand) * cand):
+            period_len = cand
+            break
+    n_groups = len(rest) // period_len
+    tail = rest[n_groups * period_len:]
+    period = rest[:period_len]
+    return head, period, n_groups, tail
+
+
+# ============================ slot params =======================================
+def _init_slot(key, cfg: ArchConfig, slot: Slot, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    if slot.mixer in ("global", "local"):
+        p["attn"] = attn.init_gqa(ks[0], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim, dtype,
+                                  use_bias=cfg.use_bias)
+    elif slot.mixer == "mla":
+        p["attn"] = attn.init_mla(ks[0], cfg.d_model, cfg.n_heads,
+                                  cfg.mla, dtype)
+    elif slot.mixer == "mamba":
+        p["mamba"] = ssm.init_mamba2(ks[0], cfg.d_model, cfg.ssm, dtype)
+    elif slot.mixer == "mlstm":
+        p["mlstm"] = ssm.init_mlstm(ks[0], cfg.d_model,
+                                    cfg.ssm.mlstm_heads, dtype)
+    elif slot.mixer == "slstm":
+        p["slstm"] = ssm.init_slstm(ks[0], cfg.d_model,
+                                    cfg.ssm.mlstm_heads, dtype)
+    elif slot.mixer == "shared_attn":
+        pass  # weights live in params["shared"], reused at every occurrence
+    if slot.ffn != "none" and slot.mixer != "shared_attn":
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        if slot.ffn == "mlp":
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                                glu=cfg.glu, use_bias=cfg.use_bias)
+        elif slot.ffn == "dense_big":
+            dff = cfg.moe.dense_d_ff if cfg.moe else cfg.d_ff
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, dff, dtype,
+                                glu=cfg.glu, use_bias=cfg.use_bias)
+        elif slot.ffn == "moe":
+            p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.moe, dtype)
+    return p
+
+
+def _init_shared_block(key, cfg: ArchConfig, dtype) -> dict:
+    """zamba2: one transformer block reused at every shared_attn slot."""
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_gqa(ks[0], cfg.d_model, cfg.n_heads,
+                              cfg.n_kv_heads, cfg.head_dim, dtype),
+        "norm2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype, glu=cfg.glu,
+                        use_bias=False),
+    }
+
+
+# ============================ train-path blocks ==================================
+def _mixer_train(cfg: ArchConfig, slot: Slot, p: dict, shared: Optional[dict],
+                 h: Array, positions: Array) -> Array:
+    if slot.mixer in ("global", "local"):
+        window = cfg.sliding_window if slot.mixer == "local" else None
+        return attn.attention_train(
+            p["attn"], h, positions, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+            rope_theta=slot.theta, window=window,
+            use_qk_norm=cfg.qk_norm)
+    if slot.mixer == "mla":
+        return attn.mla_train(p["attn"], h, positions, n_heads=cfg.n_heads,
+                              mla=cfg.mla)
+    if slot.mixer == "mamba":
+        return ssm.mamba2_train(p["mamba"], h, cfg.ssm, cfg.d_model)
+    if slot.mixer == "mlstm":
+        return ssm.mlstm_train(p["mlstm"], h, cfg.ssm.mlstm_heads,
+                               cfg.ssm.chunk)
+    if slot.mixer == "slstm":
+        return ssm.slstm_train(p["slstm"], h, cfg.ssm.mlstm_heads)
+    if slot.mixer == "shared_attn":
+        y = attn.attention_train(
+            shared["attn"], rmsnorm(shared["norm1"], h), positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta, use_qk_norm=cfg.qk_norm)
+        y = y + mlp(shared["mlp"], rmsnorm(shared["norm2"], h + y),
+                    act=cfg.act, glu=cfg.glu)
+        return y
+    raise ValueError(slot.mixer)
+
+
+def _slot_train(cfg: ArchConfig, slot: Slot, p: dict, shared, h, positions,
+                aux):
+    if slot.mixer == "shared_attn":
+        # zamba2 shared block handles its own norms/residual internally
+        return h + _mixer_train(cfg, slot, p, shared, h, positions), aux
+    hn = rmsnorm(p["norm1"], h, cfg.norm_eps)
+    mix = _mixer_train(cfg, slot, p, shared, hn, positions)
+    if cfg.parallel_block and slot.ffn != "none":
+        ff = mlp(p["mlp"], hn, act=cfg.act, glu=cfg.glu)
+        return h + mix + ff, aux
+    h = h + mix
+    if slot.ffn == "none":
+        return h, aux
+    hn2 = rmsnorm(p["norm2"], h, cfg.norm_eps)
+    if slot.ffn == "moe":
+        ff, a = moe_mod.moe_apply(p["moe"], hn2, cfg.moe)
+        aux = aux + a
+    else:
+        ff = mlp(p["mlp"], hn2, act=cfg.act, glu=cfg.glu)
+    return h + ff, aux
+
+
+def forward_hidden(cfg: ArchConfig, params: dict, h: Array,
+                   positions: Array) -> tuple:
+    """Run all layers on embedded input h. Returns (h, aux_loss)."""
+    head, period, n_groups, tail = layer_plan(cfg)
+    shared = params.get("shared")
+    aux0 = jnp.zeros((), jnp.float32)
+
+    from .shard_ctx import gather_fsdp
+
+    shared = gather_fsdp(shared) if shared is not None else None
+    aux = aux0
+    for i, slot in enumerate(head):
+        h, aux = _slot_train(cfg, slot, gather_fsdp(params["head"][i]),
+                             shared, h, positions, aux)
+
+    def group_body(carry, gp):
+        # FSDP: gather THIS group's weights (model-only sharding); freed by
+        # XLA after the iteration — ZeRO-3 working set = one group
+        gp = gather_fsdp(gp)
+        hh, au = carry
+        for j, slot in enumerate(period):
+            hh, au = _slot_train(cfg, slot, gp[f"slot{j}"], shared, hh,
+                                 positions, au)
+        return (hh, au), None
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    if n_groups > 0:
+        (h, aux), _ = jax.lax.scan(body, (h, aux), params["groups"])
+
+    for i, slot in enumerate(tail):
+        h, aux = _slot_train(cfg, slot, gather_fsdp(params["tail"][i]),
+                             shared, h, positions, aux)
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps), aux
+
+
+# ============================ decode-path blocks ==================================
+def init_slot_cache(cfg: ArchConfig, slot: Slot, batch: int, s_max: int,
+                    dtype):
+    """Zeros-cache (or ShapeDtypeStruct via jax.eval_shape upstream)."""
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if slot.mixer == "local":
+        w = min(cfg.sliding_window, s_max)
+        return {"k": jnp.zeros((batch, w, hkv, dh), dtype),
+                "v": jnp.zeros((batch, w, hkv, dh), dtype)}
+    if slot.mixer in ("global", "shared_attn"):
+        return {"k": jnp.zeros((batch, s_max, hkv, dh), dtype),
+                "v": jnp.zeros((batch, s_max, hkv, dh), dtype)}
+    if slot.mixer == "mla":
+        return {"ckv": jnp.zeros((batch, s_max, cfg.mla.kv_lora_rank), dtype),
+                "kpe": jnp.zeros((batch, s_max, cfg.mla.qk_rope_dim), dtype)}
+    if slot.mixer == "mamba":
+        return jnp.zeros(ssm.mamba2_state_shape(batch, cfg.d_model, cfg.ssm),
+                         jnp.float32)
+    if slot.mixer == "mlstm":
+        return tuple(jnp.zeros(s, jnp.float32) for s in
+                     ssm.mlstm_state_shape(batch, cfg.d_model,
+                                           cfg.ssm.mlstm_heads))
+    if slot.mixer == "slstm":
+        return tuple(jnp.zeros(s, jnp.float32) for s in
+                     ssm.slstm_state_shape(batch, cfg.d_model,
+                                           cfg.ssm.mlstm_heads))
+    raise ValueError(slot.mixer)
+
+
+def _mixer_decode(cfg: ArchConfig, slot: Slot, p: dict, shared, cache,
+                  h: Array, positions: Array):
+    if slot.mixer in ("global", "local"):
+        window = cfg.sliding_window if slot.mixer == "local" else None
+        return attn.attention_decode(
+            p["attn"], cache, h, positions, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, d_head=cfg.head_dim, rope_theta=slot.theta,
+            window=window, use_qk_norm=cfg.qk_norm)
+    if slot.mixer == "mla":
+        return attn.mla_decode(p["attn"], cache, h, positions,
+                               n_heads=cfg.n_heads, mla=cfg.mla)
+    if slot.mixer == "mamba":
+        return ssm.mamba2_decode(p["mamba"], cache, h, cfg.ssm, cfg.d_model)
+    if slot.mixer == "mlstm":
+        return ssm.mlstm_decode(p["mlstm"], cache, h, cfg.ssm.mlstm_heads)
+    if slot.mixer == "slstm":
+        return ssm.slstm_decode(p["slstm"], cache, h, cfg.ssm.mlstm_heads)
+    if slot.mixer == "shared_attn":
+        hn = rmsnorm(shared["norm1"], h)
+        y, cache = attn.attention_decode(
+            shared["attn"], cache, hn, positions, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+            rope_theta=cfg.rope_theta, use_qk_norm=cfg.qk_norm)
+        y = y + mlp(shared["mlp"], rmsnorm(shared["norm2"], h + y),
+                    act=cfg.act, glu=cfg.glu)
+        return y, cache
+    raise ValueError(slot.mixer)
+
+
+def _slot_decode(cfg: ArchConfig, slot: Slot, p: dict, shared, cache, h,
+                 positions):
+    if slot.mixer == "shared_attn":
+        y, cache = _mixer_decode(cfg, slot, p, shared, cache, h, positions)
+        return h + y, cache
+    hn = rmsnorm(p["norm1"], h, cfg.norm_eps)
+    mix, cache = _mixer_decode(cfg, slot, p, shared, cache, hn, positions)
+    if cfg.parallel_block and slot.ffn != "none":
+        return h + mix + mlp(p["mlp"], hn, act=cfg.act, glu=cfg.glu), cache
+    h = h + mix
+    if slot.ffn == "none":
+        return h, cache
+    hn2 = rmsnorm(p["norm2"], h, cfg.norm_eps)
+    if slot.ffn == "moe":
+        ff, _ = moe_mod.moe_apply(p["moe"], hn2, cfg.moe)
+    else:
+        ff = mlp(p["mlp"], hn2, act=cfg.act, glu=cfg.glu)
+    return h + ff, cache
+
+
+def decode_hidden(cfg: ArchConfig, params: dict, cache: dict, h: Array,
+                  positions: Array) -> tuple:
+    from .shard_ctx import gather_fsdp
+
+    head, period, n_groups, tail = layer_plan(cfg)
+    shared = params.get("shared")
+    shared = gather_fsdp(shared) if shared is not None else None
+
+    for i, slot in enumerate(head):
+        h, cache["head"][i] = _slot_decode(
+            cfg, slot, gather_fsdp(params["head"][i]), shared,
+            cache["head"][i], h, positions)
+
+    def group_body(hh, xs):
+        gp, gc = xs
+        gp = gather_fsdp(gp)
+        new_c = {}
+        for j, slot in enumerate(period):
+            hh, new_c[f"slot{j}"] = _slot_decode(
+                cfg, slot, gp[f"slot{j}"], shared, gc[f"slot{j}"], hh,
+                positions)
+        return hh, new_c
+
+    if n_groups > 0:
+        h, cache["groups"] = jax.lax.scan(
+            group_body, h, (params["groups"], cache["groups"]))
+
+    for i, slot in enumerate(tail):
+        h, cache["tail"][i] = _slot_decode(
+            cfg, slot, gather_fsdp(params["tail"][i]), shared,
+            cache["tail"][i], h, positions)
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps), cache

@@ -1,0 +1,16 @@
+from .optimizers import (
+    OptState,
+    Optimizer,
+    adamw,
+    adafactor,
+    sgd,
+    clip_by_global_norm,
+    global_norm,
+)
+from .schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "OptState", "Optimizer", "adamw", "adafactor", "sgd",
+    "clip_by_global_norm", "global_norm",
+    "constant", "cosine_decay", "linear_warmup_cosine",
+]

@@ -1,0 +1,278 @@
+"""Loop-aware cost model over post-optimization HLO text.
+
+Why: ``compiled.cost_analysis()`` visits every computation ONCE — a lax.scan
+body (While op) with trip count N contributes 1/N of its true flops/bytes,
+and the same undercounting hits hand-parsed collective bytes. Since every
+model here scans over layer groups / microbatches / sequence chunks, the
+uncorrected numbers are off by 5–60x.
+
+This parser:
+  * splits the module into computations and builds a per-computation symbol
+    table (%name -> shape) so operand sizes are known;
+  * walks the while-op call graph and multiplies each computation's costs by
+    the product of enclosing ``known_trip_count`` annotations (XLA emits
+    them for counted loops, which all lax.scans are);
+  * models per-op HBM traffic as (operand bytes + output bytes) of each
+    *top-level* op — fusion internals are free, which matches how fused
+    elementwise chains behave on real hardware;
+  * counts MXU flops for dot/convolution via dimension_numbers;
+  * accumulates collective payload bytes with the same ring-traffic
+    semantics as analysis.collective_bytes.
+
+It is a *cost model*, not ground truth — but it is consistent, loop-aware,
+and good enough to rank optimizations (EXPERIMENTS.md §Roofline uses it for
+all three terms).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+# the op kind is the first WORD( after the (possibly tuple) output type;
+# tuple types contain /*index=N*/ comments, layouts {2,1,0} etc., but never
+# "word(" sequences
+_KIND_RE = re.compile(r"(?:^|[\]\}\)a-z0-9_]\s+)"
+                      r"([a-z][a-z0-9\-]*(?:\.\d+)?)\(")
+
+
+def _split_def(s: str):
+    """Return (name, out_type, kind, rest_after_kind) or None."""
+    m = _ASSIGN_RE.match(s)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    k = _KIND_RE.search(rest)
+    if not k:
+        return None
+    return name, rest[: k.start(1)], k.group(1), rest[k.end(1):]
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*(?:\([^)]*\))?\s*->")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_TRIP_RE = re.compile(r"known_trip_count[\\\"':{ ]+n[\\\"': ]+(\d+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _type_dims(type_str: str) -> list:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    kind: str
+    out_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    whiles: list = dataclasses.field(default_factory=list)  # (body, trips)
+    calls: list = dataclasses.field(default_factory=list)   # fusion callees
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _dot_flops(line: str, out_dims: list, symbols: dict) -> float:
+    ops = _OPERAND_RE.findall(line.split("(", 1)[1])
+    if not ops:
+        return 0.0
+    lhs = symbols.get(ops[0])
+    if lhs is None:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            idx = int(d)
+            if idx < len(lhs):
+                contract *= lhs[idx]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * contract
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, CompCost], Optional[str]]:
+    comps: Dict[str, CompCost] = {}
+    current: Optional[str] = None
+    entry: Optional[str] = None
+    symbols: dict = {}
+    in_header = False
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        # computation declarations start at column 0 (instructions are
+        # indented); headers may span many lines before the opening "{"
+        if line.startswith("ENTRY ") or (line.startswith("%")
+                                         and not in_header):
+            m = re.match(r"(?:ENTRY\s+)?(%[\w.\-]+)", s)
+            if m:
+                current = m.group(1)
+                comps[current] = CompCost()
+                symbols = {}
+                if line.startswith("ENTRY "):
+                    entry = current
+                in_header = not s.endswith("{")
+            continue
+        if in_header:
+            if s.endswith("{"):
+                in_header = False
+            continue
+        if current is None:
+            continue
+        if s == "}":
+            current = None
+            continue
+        d = _split_def(s)
+        if d is None:
+            continue
+        name, out_type, kind, _after = d
+        kind_base = re.sub(r"\.\d+$", "", kind)
+        symbols[name] = _type_dims(out_type)
+        cc = comps[current]
+        out_bytes = _type_bytes(out_type)
+        # HBM traffic: operands + output (fusion internals are free)
+        operand_names = _OPERAND_RE.findall(s.split("(", 1)[1])
+        op_bytes = 0
+        for on in operand_names:
+            dims = symbols.get(on)
+            if dims is not None:
+                n = 1
+                for d in dims:
+                    n *= d
+                # dtype unknown from dims alone; assume output dtype width
+                dts = _SHAPE_RE.search(out_type)
+                width = _DTYPE_BYTES.get(dts.group(1), 4) if dts else 4
+                op_bytes += n * width
+        if kind_base in ("dynamic-slice",) or "dynamic-slice" in name:
+            # reads only the slice (operand = whole scan stack otherwise)
+            cc.bytes += 2 * out_bytes
+        elif kind_base == "dynamic-update-slice" or \
+                "dynamic-update-slice" in name:
+            # in-place slice write (XLA aliases the big buffer): traffic =
+            # r/w of the update slice, not the whole stacked carry
+            sizes = []
+            for on in operand_names:
+                dims = symbols.get(on)
+                if dims is not None:
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    sizes.append(n)
+            if sizes:
+                dts = _SHAPE_RE.search(out_type)
+                width = _DTYPE_BYTES.get(dts.group(1), 4) if dts else 4
+                cc.bytes += 2 * (sum(sizes) - max(sizes)) * width
+        elif kind_base not in ("parameter", "constant", "tuple",
+                               "get-tuple-element", "bitcast", "while",
+                               "conditional", "call", "after-all"):
+            cc.bytes += out_bytes + op_bytes
+
+        if kind_base in ("dot", "convolution"):
+            cc.flops += _dot_flops(s, _type_dims(out_type), symbols)
+        elif kind_base == "while":
+            body = _BODY_RE.search(s)
+            trips = _TRIP_RE.search(s)
+            n = int(trips.group(1)) if trips else 1
+            if body:
+                cc.whiles.append((body.group(1), n))
+            cond = _COND_RE.search(s)
+            if cond:
+                cc.calls.append(cond.group(1))
+        else:
+            base = kind_base.replace("-start", "")
+            if base in COLLECTIVES and not kind_base.endswith("-done"):
+                b = out_bytes
+                g = _group_size(s)
+                if base == "all-reduce":
+                    b *= 2
+                elif base == "reduce-scatter":
+                    b *= g
+                cc.coll_bytes += b
+                cc.coll_by_kind[base] += b
+                cc.coll_counts[base] += 1
+    return comps, entry
+
+
+def module_costs(hlo: str, default_trip: int = 1) -> dict:
+    """Loop-aware totals: flops, bytes, collective bytes/kind/counts.
+
+    Only computations reachable from ENTRY via While bodies are counted —
+    fusion/reducer computations contribute through their callers' op-level
+    operand/output bytes (fusion internals are free by design).
+    """
+    comps, entry = parse_module(hlo)
+    mult: Dict[str, float] = defaultdict(float)
+    stack = [(entry, 1.0)] if entry else []
+    while stack:
+        name, m = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] += m
+        for body, trips in comps[name].whiles:
+            stack.append((body, m * max(trips, default_trip)))
+
+    tot = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0,
+           "coll_by_kind": defaultdict(float),
+           "coll_counts": defaultdict(float)}
+    for name, cc in comps.items():
+        m = mult[name]
+        if m == 0.0:
+            continue
+        tot["flops"] += m * cc.flops
+        tot["bytes"] += m * cc.bytes
+        tot["coll_bytes"] += m * cc.coll_bytes
+        for k, v in cc.coll_by_kind.items():
+            tot["coll_by_kind"][k] += m * v
+        for k, v in cc.coll_counts.items():
+            tot["coll_counts"][k] += m * v
+    tot["coll_by_kind"] = dict(tot["coll_by_kind"])
+    tot["coll_counts"] = {k: int(v) for k, v in tot["coll_counts"].items()}
+    return tot

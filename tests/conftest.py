@@ -1,0 +1,29 @@
+"""Shared test fixtures.
+
+NOTE: do NOT set XLA_FLAGS / host-device-count here — smoke tests and
+benchmarks must see the real single CPU device; only launch/dryrun.py forces
+512 placeholder devices (and it does so before importing jax).
+"""
+import os
+
+# Keep XLA single-threaded-ish and quiet for CI stability.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")
+    config.addinivalue_line("markers", "x64: requires float64")

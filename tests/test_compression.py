@@ -1,0 +1,80 @@
+"""Gradient compression: int8 + error feedback (DESIGN.md §5).
+
+Multi-device correctness runs in a subprocess (host device count must be
+set before jax init); single-device semantics and the error-feedback
+telescoping property are tested in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed.compression import (
+        compressed_psum, make_error_feedback_state)
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    # per-shard gradients: replicated pytree whose VALUE differs per shard
+    # is hard to express; instead shard a leading 'shard' axis and treat
+    # rows as per-device grads by slicing inside shard_map — here we just
+    # check the mean-psum semantics with identical grads (mean == grad) and
+    # the EF carry with non-representable values.
+    g = {"w": jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)}
+    err = make_error_feedback_state(g)
+    mean, err2 = compressed_psum(g, err, mesh, ("data",))
+    resid = float(jnp.abs(mean["w"] - g["w"]).max())
+    # int8 quantization error bounded by scale = max|g|/127
+    bound = float(jnp.abs(g["w"]).max()) / 127.0 + 1e-9
+    assert resid <= bound * 1.01, (resid, bound)
+    # error feedback carries the residual: two steps of a CONSTANT gradient
+    # must average out the quantization error
+    mean2, err3 = compressed_psum(g, err2, mesh, ("data",))
+    two_step = (np.asarray(mean["w"]) + np.asarray(mean2["w"])) / 2
+    resid2 = np.abs(two_step - np.asarray(g["w"])).max()
+    assert resid2 <= bound * 0.75, (resid2, bound)
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_compressed_psum_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
+
+
+def test_quantize_dequantize_bounds():
+    import jax.numpy as jnp
+    from repro.distributed.compression import _quantize
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(64,)) * 10, jnp.float32)
+    q, scale = _quantize(x)
+    err = np.abs(np.asarray(q, np.float32) * float(scale) - np.asarray(x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_state_shapes():
+    import jax.numpy as jnp
+    from repro.distributed.compression import make_error_feedback_state
+
+    params = {"a": jnp.zeros((4, 4), jnp.bfloat16), "b": jnp.ones((3,))}
+    err = make_error_feedback_state(params)
+    assert err["a"].shape == (4, 4) and err["a"].dtype == jnp.float32
+    assert err["b"].shape == (3,)

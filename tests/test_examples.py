@@ -1,0 +1,51 @@
+"""Examples must run end-to-end (subprocess, tiny sizes)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable] + args, env=env, timeout=timeout,
+                         capture_output=True, text=True, cwd=REPO)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_quickstart():
+    out = _run(["examples/quickstart.py"])
+    assert "covariance errors vs exact GP" in out
+    assert "1M-point sample" in out
+
+
+@pytest.mark.slow
+def test_gp_regression_vi():
+    out = _run(["examples/gp_regression_vi.py", "--steps", "80",
+                "--n0", "32", "--levels", "4"])
+    assert "MAP:" in out and "ADVI:" in out
+
+
+@pytest.mark.slow
+def test_dust_map():
+    out = _run(["examples/dust_map_3d.py"])
+    assert "voxels" in out and "corr(shell0, shell1)" in out
+
+
+@pytest.mark.slow
+def test_lm_train_example():
+    out = _run(["examples/lm_train.py", "--arch", "xlstm-1.3b",
+                "--steps", "20", "--batch", "4", "--seq-len", "64"])
+    assert "loss" in out
+
+
+@pytest.mark.slow
+def test_serve_example():
+    out = _run(["examples/serve_lm.py", "--requests", "3",
+                "--max-new", "4"])
+    assert "tok/s" in out

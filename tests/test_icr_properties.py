@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) on ICR system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ICR, matern32, matern52, regular_chart, log_chart
+from repro.core.kernels import kernel_matrix
+
+
+valid_params = st.tuples(
+    st.sampled_from([(3, 2), (3, 4), (5, 2), (5, 4)]),  # (n_csz, n_fsz)
+    st.integers(min_value=8, max_value=20),              # shape0
+    st.integers(min_value=1, max_value=3),               # n_levels
+    st.floats(min_value=1.0, max_value=20.0),            # rho
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(valid_params)
+def test_psd_by_construction(params):
+    """Paper §5.1: K_ICR = sqrt·sqrtᵀ is PSD for ANY refinement setting."""
+    (ncsz, nfsz), n0, nlvl, rho = params
+    try:
+        c = regular_chart(n0, nlvl, n_csz=ncsz, n_fsz=nfsz)
+    except ValueError:
+        return  # grid shrank below n_csz — invalid config, rejected upstream
+    icr = ICR(chart=c, kernel=matern32.with_defaults(rho=rho))
+    cov = np.asarray(icr.implicit_cov(dtype=jnp.float32))
+    evals = np.linalg.eigvalsh(cov)
+    assert evals.min() > -1e-4 * max(evals.max(), 1.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=8, max_value=24),
+    st.integers(min_value=1, max_value=3),
+    st.floats(min_value=0.5, max_value=8.0),
+)
+def test_apply_sqrt_is_linear(n0, nlvl, alpha):
+    """s(ξ) is linear in ξ (paper §4.1: generative map is linear)."""
+    try:
+        c = regular_chart(n0, nlvl)
+    except ValueError:
+        return
+    icr = ICR(chart=c, kernel=matern32.with_defaults(rho=4.0))
+    mats = icr.matrices()
+    key = jax.random.PRNGKey(n0 * 7 + nlvl)
+    xi1 = icr.init_xi(key)
+    xi2 = icr.init_xi(jax.random.fold_in(key, 1))
+    lhs = icr.apply_sqrt(mats, [a + alpha * b for a, b in zip(xi1, xi2)])
+    rhs = icr.apply_sqrt(mats, xi1) + alpha * icr.apply_sqrt(mats, xi2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(min_value=0.2, max_value=5.0),
+       st.floats(min_value=0.5, max_value=2.0))
+def test_kernel_properties(rho, sigma):
+    """k(0) = sigma², k decays, kernel matrix symmetric PSD."""
+    for kern in (matern32, matern52):
+        k = kern.with_defaults(rho=rho, sigma=sigma)()
+        assert np.isclose(float(k(jnp.zeros(()))), sigma**2, rtol=1e-5)
+        d = jnp.linspace(0.0, 10 * rho, 64)
+        vals = np.asarray(k(d))
+        assert (np.diff(vals) <= 1e-7).all()
+        x = jnp.linspace(0, 3 * rho, 16)
+        km = np.asarray(kernel_matrix(k, x))
+        np.testing.assert_allclose(km, km.T, atol=1e-6)
+        assert np.linalg.eigvalsh(km).min() > -1e-4
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_sample_determinism(seed):
+    """Same key => identical sample (reproducible pipelines)."""
+    c = regular_chart(10, 2)
+    icr = ICR(chart=c, kernel=matern32.with_defaults(rho=4.0))
+    k = jax.random.PRNGKey(seed)
+    s1 = icr.sample(k)
+    s2 = icr.sample(k)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.floats(min_value=0.01, max_value=0.05),
+       st.integers(min_value=6, max_value=12))
+def test_log_chart_monotone_positions(delta, n0):
+    """Charted positions must stay strictly ordered at every level."""
+    try:
+        c = log_chart(n0, 3, delta0=delta)
+    except ValueError:
+        return
+    for lvl in range(4):
+        pos = np.asarray(c.grid_positions(lvl))[:, 0]
+        assert (np.diff(pos) > 0).all()
+
+
+def test_xi_shapes_cover_output():
+    """Total excitation dims >= output dims (sqrt is square or tall)."""
+    for p in [(3, 2), (5, 4)]:
+        c = regular_chart(16, 3, n_csz=p[0], n_fsz=p[1])
+        icr = ICR(chart=c, kernel=matern32)
+        assert icr.xi_size() >= int(np.prod(icr.out_shape))

@@ -1,0 +1,134 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs ref.py.
+
+Kernels execute in interpret mode on CPU (the body runs as pure jnp), which
+checks the BlockSpec tiling, halo views and window construction exactly.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ICR, log_chart, matern32, regular_chart
+from repro.core.refine import LevelGeom, refinement_matrices_level
+from repro.kernels import ref as R
+from repro.kernels import ops
+from repro.kernels.icr_refine import (
+    refine_charted_pallas,
+    refine_stationary_pallas,
+)
+
+PARAMS = [(3, 2), (3, 4), (5, 2), (5, 4), (5, 6)]
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+@pytest.mark.parametrize("ncsz,nfsz", PARAMS)
+@pytest.mark.parametrize("t", [7, 64, 300])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stationary_matches_ref(ncsz, nfsz, t, dtype):
+    rng = np.random.default_rng(ncsz * 100 + nfsz + t)
+    batch = 3
+    coarse = _rand(rng, (batch, R.coarse_len(t, ncsz, nfsz)), dtype)
+    xi = _rand(rng, (batch, t, nfsz), dtype)
+    r = _rand(rng, (nfsz, ncsz), dtype)
+    d = _rand(rng, (nfsz, nfsz), dtype)
+    want = R.refine_stationary_ref(coarse, xi, r, d)
+    got = refine_stationary_pallas(coarse, xi, r, d, n_csz=ncsz, n_fsz=nfsz,
+                                   block_families=32, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("ncsz,nfsz", PARAMS)
+@pytest.mark.parametrize("t", [9, 128])
+def test_charted_matches_ref(ncsz, nfsz, t):
+    rng = np.random.default_rng(ncsz * 10 + nfsz + t)
+    coarse = _rand(rng, (2, R.coarse_len(t, ncsz, nfsz)), jnp.float32)
+    xi = _rand(rng, (2, t, nfsz), jnp.float32)
+    r = _rand(rng, (t, nfsz, ncsz), jnp.float32)
+    d = _rand(rng, (t, nfsz, nfsz), jnp.float32)
+    want = R.refine_charted_ref(coarse, xi, r, d)
+    got = refine_charted_pallas(coarse, xi, r, d, n_csz=ncsz, n_fsz=nfsz,
+                                block_families=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [16, 64, 1024])
+def test_block_size_invariance(block):
+    """Output must not depend on the VMEM tile size."""
+    rng = np.random.default_rng(0)
+    ncsz, nfsz, t = 5, 4, 200
+    coarse = _rand(rng, (1, R.coarse_len(t, ncsz, nfsz)), jnp.float32)
+    xi = _rand(rng, (1, t, nfsz), jnp.float32)
+    r = _rand(rng, (nfsz, ncsz), jnp.float32)
+    d = _rand(rng, (nfsz, nfsz), jnp.float32)
+    base = R.refine_stationary_ref(coarse, xi, r, d)
+    got = refine_stationary_pallas(coarse, xi, r, d, n_csz=ncsz, n_fsz=nfsz,
+                                   block_families=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-6)
+
+
+class TestOpsIntegration:
+    """ops.refine_* must agree with core.refine.refine_level end-to-end."""
+
+    def test_stationary_shrink_end_to_end(self):
+        c = regular_chart(64, 2, n_csz=5, n_fsz=4)
+        icr_ref = ICR(chart=c, kernel=matern32.with_defaults(rho=8.0))
+        icr_pal = ICR(chart=c, kernel=matern32.with_defaults(rho=8.0),
+                      use_pallas=True)
+        key = jax.random.PRNGKey(3)
+        xi = icr_ref.init_xi(key)
+        mats = icr_ref.matrices()
+        a = icr_ref.apply_sqrt(mats, xi)
+        b = icr_pal.apply_sqrt(mats, xi)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_stationary_reflect_end_to_end(self):
+        c = regular_chart(64, 2, boundary="reflect")
+        icr_ref = ICR(chart=c, kernel=matern32.with_defaults(rho=8.0))
+        icr_pal = ICR(chart=c, kernel=matern32.with_defaults(rho=8.0),
+                      use_pallas=True)
+        key = jax.random.PRNGKey(4)
+        xi = icr_ref.init_xi(key)
+        mats = icr_ref.matrices()
+        np.testing.assert_allclose(
+            np.asarray(icr_ref.apply_sqrt(mats, xi)),
+            np.asarray(icr_pal.apply_sqrt(mats, xi)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_charted_op_matches_core(self):
+        """Charted per-family kernel == core refine on the log chart."""
+        c = log_chart(32, 1, n_csz=5, n_fsz=4, delta0=0.05)
+        k = matern32.with_defaults(rho=1.0)()
+        r, d = refinement_matrices_level(c, k, 0)
+        geom = LevelGeom.for_level(c, 0)
+        rng = np.random.default_rng(1)
+        field = jnp.asarray(rng.normal(size=geom.coarse_shape), jnp.float32)
+        t = geom.T[0]
+        xi = jnp.asarray(rng.normal(size=(t, geom.n_fsz)), jnp.float32)
+        from repro.core.refine import refine_level
+
+        want = refine_level(field, xi, r, d, geom)
+        got = ops.refine_charted(field, xi, r, d, geom, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_nd_falls_back_to_core(self):
+        c = regular_chart((8, 8), 1)
+        k = matern32.with_defaults(rho=4.0)()
+        r, d = refinement_matrices_level(c, k, 0)
+        geom = LevelGeom.for_level(c, 0)
+        rng = np.random.default_rng(2)
+        field = jnp.asarray(rng.normal(size=geom.coarse_shape), jnp.float32)
+        f = int(np.prod(geom.T))
+        xi = jnp.asarray(rng.normal(size=(f, geom.n_fsz**2)), jnp.float32)
+        out = ops.refine_stationary(field, xi, r, d, geom)
+        assert out.shape == geom.fine_shape

@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs (assignment requirement §f)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_arch
+from repro.models import build_model
+from repro.models.transformer import layer_plan
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def _batch_for(cfg, b=2, s=32, key=None):
+    key = key or jax.random.PRNGKey(0)
+    tok = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    # labels must be the NEXT token, never the current one: with tied
+    # embeddings predicting the current token is trivial (nll -> 0)
+    lab = jnp.roll(tok, -1, axis=1)
+    batch = {"tokens": tok, "labels": lab}
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.encoder is not None:
+        dec = min(s, cfg.encoder.max_target)
+        batch = {
+            "tokens": tok[:, :dec],
+            "labels": lab[:, :dec],
+            "enc_embeds": jax.random.normal(
+                key, (b, cfg.encoder.n_frames, cfg.d_model), jnp.float32),
+        }
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_loss(name):
+    cfg = get_arch(name).reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    batch = _batch_for(cfg)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert np.isfinite(float(loss)), f"{name}: loss not finite"
+    assert float(loss) > 0
+    # plausible initial loss for a ~uniform predictor: ~log(vocab)
+    assert float(metrics["nll"]) < 3 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_reduces_loss(name):
+    from repro.optim import adamw, constant
+
+    cfg = get_arch(name).reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    batch = _batch_for(cfg)
+    opt = adamw(constant(3e-3))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        (l, m), g = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch)
+        params, state = opt.update(g, state, params)
+        return params, state, l
+
+    losses = []
+    for _ in range(8):
+        params, state, l = step(params, state)
+        losses.append(float(l))
+        assert np.isfinite(losses[-1]), f"{name}: loss NaN at step"
+    assert losses[-1] < losses[0], f"{name}: loss did not decrease {losses}"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_step(name):
+    cfg = get_arch(name).reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    b, s_max = 2, 64
+    cache = model.init_cache(b, s_max)
+    tok = jnp.array([[3], [5]], jnp.int32)
+    pos = jnp.array([0, 0], jnp.int32)
+    logits, cache = jax.jit(model.serve_step)(params, cache, tok, pos)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{name}: decode NaN"
+    # a second step at position 1
+    logits2, cache = jax.jit(model.serve_step)(params, cache, tok, pos + 1)
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill(name):
+    cfg = get_arch(name).reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    batch = _batch_for(cfg)
+    batch.pop("labels")
+    logits = jax.jit(model.prefill_fn)(params, batch)
+    assert logits.shape[-1] == cfg.vocab_size
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_layer_plan_covers_all_layers(name):
+    cfg = get_arch(name)
+    if cfg.encoder is not None:
+        return  # whisper: explicit 6+6 stack, no plan
+    head, period, n_groups, tail = layer_plan(cfg)
+    assert len(head) + len(period) * n_groups + len(tail) == cfg.n_layers
+
+
+def test_decode_matches_prefill_causality():
+    """Decoding token-by-token must reproduce the teacher-forced logits
+    (KV-cache correctness) for a dense arch."""
+    cfg = get_arch("starcoder2-15b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2))
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0,
+                              cfg.vocab_size)
+    # teacher-forced last-token logits
+    full = model.prefill_fn(params, {"tokens": toks})
+    # token-by-token decode
+    cache = model.init_cache(b, s)
+    for i in range(s):
+        logits, cache = model.serve_step(
+            params, cache, toks[:, i : i + 1],
+            jnp.full((b,), i, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_match_spec():
+    """Full-config parameter counts are in the advertised ballpark."""
+    expect = {
+        "starcoder2-15b": (14e9, 17e9),
+        "gemma3-27b": (26e9, 30e9),
+        # note: the assigned config says GQA kv=8 (the real 35B checkpoint is
+        # MHA); with kv=8 the count is ~30B — the config is authoritative.
+        "command-r-35b": (28e9, 33e9),
+        "gemma3-4b": (3.5e9, 5e9),
+        "internvl2-2b": (1.5e9, 2.5e9),
+        "xlstm-1.3b": (1.0e9, 1.7e9),
+        "deepseek-v2-236b": (220e9, 250e9),
+        "llama4-maverick-400b-a17b": (380e9, 420e9),
+        "whisper-base": (0.04e9, 0.12e9),
+        # zamba2: the assigned config (54 mamba + shared attn block, weights
+        # counted once) yields ~4.6B; the 7.4B checkpoint additionally has
+        # dual 2*d_model-wide shared blocks + per-use LoRA (DESIGN.md §6)
+        "zamba2-7b": (4e9, 8.5e9),
+    }
+    for name, (lo, hi) in expect.items():
+        model = build_model(get_arch(name))
+        n = model.param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B params not in " \
+                              f"[{lo/1e9:.0f}B, {hi/1e9:.0f}B]"

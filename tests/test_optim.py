@@ -1,0 +1,88 @@
+"""Optimizer substrate tests."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    constant,
+    cosine_decay,
+    global_norm,
+    linear_warmup_cosine,
+    sgd,
+)
+
+
+def _rosenbrock_ish(params):
+    return jnp.sum((params["a"] - 1.0) ** 2) + jnp.sum(params["b"] ** 2)
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(constant(5e-2)),
+    lambda: adafactor(constant(5e-1), min_dim_size_to_factor=4),
+    lambda: sgd(constant(1e-1), momentum=0.9),
+])
+def test_optimizers_minimize(make_opt):
+    opt = make_opt()
+    params = {"a": jnp.zeros((8, 8)), "b": jnp.ones((8,))}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        l, g = jax.value_and_grad(_rosenbrock_ish)(params)
+        params, state = opt.update(g, state, params)
+        return params, state, l
+
+    l0 = None
+    for _ in range(200):
+        params, state, l = step(params, state)
+        l0 = l if l0 is None else l0
+    assert float(l) < 0.01 * float(l0)
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(constant(1e-2), min_dim_size_to_factor=8)
+    params = {"w": jnp.zeros((128, 64)), "b": jnp.zeros((64,))}
+    state = opt.init(params)
+    assert state.inner["w"]["vr"].shape == (128,)
+    assert state.inner["w"]["vc"].shape == (64,)
+    assert state.inner["b"]["v"].shape == (64,)
+    # factored state is ~64x smaller than an AdamW moment
+    full = 128 * 64
+    fact = 128 + 64
+    assert fact < full / 40
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    assert float(norm) == pytest.approx(20.0)
+    small = {"a": jnp.full((4,), 0.01)}
+    same, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 0.01, rtol=1e-6)
+
+
+def test_schedules():
+    s = linear_warmup_cosine(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0, abs=1e-5)
+    assert float(s(100)) < 0.2
+    c = cosine_decay(2.0, 50, final_frac=0.5)
+    assert float(c(0)) == pytest.approx(2.0)
+    assert float(c(50)) == pytest.approx(1.0)
+
+
+def test_bf16_params_fp32_state():
+    """Moments stay fp32 even for bf16 params (mixed-precision training)."""
+    opt = adamw(constant(1e-2))
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.inner["m"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    new_p, new_s = opt.update(g, state, params)
+    assert new_p["w"].dtype == jnp.bfloat16

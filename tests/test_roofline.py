@@ -1,0 +1,66 @@
+"""Roofline analyzer: HLO collective parsing + term arithmetic."""
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (
+    RooflineTerms,
+    collective_bytes,
+    collective_counts,
+)
+
+HLO = """
+HloModule jit_step, entry_computation_layout={...}
+
+ENTRY %main {
+  %p0 = bf16[16,1024]{1,0} parameter(0)
+  %all-gather = bf16[256,1024]{1,0} all-gather(%p0), channel_id=1, replica_groups=[16,16]<=[256]T(1,0), dimensions={0}
+  %ar = f32[16,1024]{1,0} all-reduce(%x), channel_id=2, replica_groups=[2,8]<=[16], to_apply=%add
+  %rs = f32[2,512]{1,0} reduce-scatter(%y), channel_id=3, replica_groups=[2,8]<=[16], dimensions={0}
+  %a2a = bf16[8,64,32]{2,1,0} all-to-all(%z), channel_id=4, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %cp = f32[4,128]{1,0} collective-permute(%w), channel_id=5, source_target_pairs={{0,1},{1,2}}
+  ROOT %ags = (bf16[32], bf16[32]) all-gather-start(%q), channel_id=6, replica_groups=[4,4]<=[16]
+}
+"""
+
+
+def test_collective_bytes_semantics():
+    out = collective_bytes(HLO)
+    # all-gather: output bytes = 256*1024*2
+    ag_sync = 256 * 1024 * 2
+    # -start op: two bf16[32] in the output tuple = 128 bytes
+    assert out["all-gather"] == ag_sync + 128
+    # all-reduce: 2x output = 2*16*1024*4
+    assert out["all-reduce"] == 2 * 16 * 1024 * 4
+    # reduce-scatter: out * group (8)
+    assert out["reduce-scatter"] == 2 * 512 * 4 * 8
+    # all-to-all: out bytes
+    assert out["all-to-all"] == 8 * 64 * 32 * 2
+    assert out["collective-permute"] == 4 * 128 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_counts():
+    counts = collective_counts(HLO)
+    assert counts["all-gather"] == 2  # sync + start
+    assert counts["all-reduce"] == 1
+    assert counts["all-to-all"] == 1
+
+
+def test_terms_and_dominance():
+    t = RooflineTerms(flops=197e12, bytes_accessed=819e9 * 2,
+                      coll_bytes=50e9 * 0.5, coll_breakdown={},
+                      coll_counts={}, model_flops=197e12 * 0.5)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(2.0)
+    assert t.t_collective == pytest.approx(0.5)
+    assert t.dominant == "memory"
+    assert t.bound_time == pytest.approx(2.0)
+    # roofline fraction: useful flops time (0.5s) / bound (2.0s)
+    assert t.flops_utilization == pytest.approx(0.25)
+    s = t.summary()
+    assert s["dominant"] == "memory"
+
+
+def test_empty_hlo():
+    out = collective_bytes("ENTRY %m { ROOT %x = f32[2] add(%a, %b) }")
+    assert out["total"] == 0
