@@ -34,6 +34,62 @@ def paper_log_setup(n_csz, n_fsz, n_levels=5, target_n=200, span=50.0):
     return c, xs, rho
 
 
+def run_nd_cov(report):
+    """Covariance cost of the separable N-D fast path (DESIGN.md §4).
+
+    The fused N-D path applies Kronecker-factored per-axis matrices — exact
+    interpolation for product kernels (rbf), a surrogate for isotropic ones
+    (matern32). This measures the implicit-covariance error of the factored
+    model vs the exact kernel, next to the joint ICR reference, on a small
+    2-D chart (dense covs via one jacobian, so N stays tiny).
+    """
+    from repro.core import (
+        ICR, cov_errors, exact_cov, matern32, rbf, regular_chart,
+    )
+    from repro.core.refine import LevelGeom, axis_refinement_matrices_level
+    from repro.kernels import ref as kref
+
+    jax.config.update("jax_enable_x64", True)
+    c = regular_chart((7, 7), 2, boundary="shrink")
+    for kern_name, kern in [("rbf", rbf.with_defaults(rho=2.0)),
+                            ("matern32", matern32.with_defaults(rho=2.0))]:
+        icr = ICR(chart=c, kernel=kern)
+        cov_joint = icr.implicit_cov()
+        k = kern()
+        geoms = [LevelGeom.for_level(c, l) for l in range(c.n_levels)]
+        factors = [axis_refinement_matrices_level(c, k, l)
+                   for l in range(c.n_levels)]
+        sqrt0 = icr.matrices()["sqrt0"]
+        shapes = icr.xi_shapes()
+        sizes = [int(np.prod(s)) for s in shapes]
+
+        def flat_apply(xi_flat):
+            xs, o = [], 0
+            for s, n in zip(shapes, sizes):
+                xs.append(xi_flat[o : o + n].reshape(s))
+                o += n
+            field = (sqrt0 @ xs[0]).reshape(c.shape0)
+            for lvl, geom in enumerate(geoms):
+                rs, ds = factors[lvl]
+                field = kref.refine_axes_ref(
+                    field, xs[lvl + 1], rs, ds, T=geom.T, n_fsz=geom.n_fsz,
+                    boundary=geom.boundary, b=geom.b)
+            return field.reshape(-1)
+
+        a = jax.jacfwd(flat_apply)(jnp.zeros(sum(sizes), jnp.float64))
+        cov_sep = a @ a.T
+        cov_true = exact_cov(c, k)
+        e_sep = {k2: float(v) for k2, v in
+                 cov_errors(cov_sep, cov_true).items()}
+        e_joint = {k2: float(v) for k2, v in
+                   cov_errors(cov_joint, cov_true).items()}
+        report(f"accuracy/nd_sep_{kern_name}", e_sep["mae"],
+               f"N={cov_true.shape[0]} sep mae={e_sep['mae']:.2e} "
+               f"joint mae={e_joint['mae']:.2e} "
+               f"ratio={e_sep['mae']/max(e_joint['mae'], 1e-300):.1f}x")
+    jax.config.update("jax_enable_x64", False)
+
+
 def run(report):
     from repro.core import (
         ICR, KissGP, cov_errors, exact_cov, gauss_kl, matern32,

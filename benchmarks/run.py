@@ -2,6 +2,7 @@
 
   accuracy  — paper Fig. 3 / §5.1 (covariance errors, KL parameter sweep)
   speed     — paper Fig. 4 / §5.2 (forward pass: ICR vs KISS-GP)
+  nd        — fused N-D Pallas path: 2-D/3-D parity (<=1e-5) + wall time
   scaling   — paper Eq. 13 (O(N) check, log-log slope)
   vi        — §3.2 end-to-end: standardized GP regression (MAP)
 
@@ -61,6 +62,8 @@ def main() -> None:
         "speed": lambda: speed.run(
             _report, sizes=(256, 1024, 4096) if args.quick
             else (256, 1024, 4096, 16384, 65536)),
+        "nd": lambda: (speed.run_nd(_report),
+                       accuracy.run_nd_cov(_report)),
         "scaling": lambda: speed.run_scaling(
             _report, sizes=(1024, 4096, 16384) if args.quick
             else (1024, 4096, 16384, 65536, 262144)),

@@ -58,6 +58,57 @@ def run(report, sizes=(256, 1024, 4096, 16384, 65536)):
         report(f"speed/kissgp_n{n}", t_k * 1e6, f"N={n} t={t_k*1e3:.2f}ms")
 
 
+def run_nd(report):
+    """2-D and 3-D refinement through the fused Pallas path (DESIGN.md §4).
+
+    Runs each case through ``repro.kernels.nd.refine_axes`` (interpret mode
+    on CPU — the kernel body executes as pure jnp, checking the exact tiling)
+    and through the jnp reference ``repro.kernels.ref.refine_axes_ref``, and
+    reports wall time for both plus their relative error, which must be
+    <= 1e-5 (acceptance bar — the fused path is exact vs the reference).
+    """
+    from repro.core import matern32, regular_chart
+    from repro.core.charts import galactic_dust_chart
+    from repro.core.refine import LevelGeom, axis_refinement_matrices_level
+    from repro.kernels import nd as knd
+    from repro.kernels import ref as kref
+    from repro.kernels.dispatch import plan, ROUTE_AXES_ND
+
+    cases = [
+        ("2d", regular_chart((64, 64), 2, boundary="reflect"), 4.0),
+        ("3d", galactic_dust_chart((6, 16, 16), n_levels=2), 0.5),
+    ]
+    for name, c, rho in cases:
+        k = matern32.with_defaults(rho=rho)()
+        routes = [e["route"] for e in plan(c)]
+        assert all(r == ROUTE_AXES_ND for r in routes), routes
+        lvl = c.n_levels - 1  # finest (dominant) level
+        geom = LevelGeom.for_level(c, lvl)
+        rs, ds = axis_refinement_matrices_level(c, k, lvl)
+        rng = np.random.default_rng(0)
+        field = jnp.asarray(rng.normal(size=geom.coarse_shape), jnp.float32)
+        f = int(np.prod(geom.T))
+        xi = jnp.asarray(
+            rng.normal(size=(f, geom.n_fsz ** c.ndim)), jnp.float32)
+
+        pal = jax.jit(lambda fl, x: knd.refine_axes(
+            fl, x, rs, ds, geom, interpret=True))
+        ref = jax.jit(lambda fl, x: kref.refine_axes_ref(
+            fl, x, rs, ds, T=geom.T, n_fsz=geom.n_fsz,
+            boundary=geom.boundary, b=geom.b))
+        out_p, out_r = pal(field, xi), ref(field, xi)
+        rel = float(jnp.abs(out_p - out_r).max()
+                    / (jnp.abs(out_r).max() + 1e-30))
+        assert rel <= 1e-5, f"nd/{name} pallas-vs-ref rel err {rel:.2e}"
+        t_p = _bench(pal, field, xi)
+        t_r = _bench(ref, field, xi)
+        n = int(np.prod(geom.fine_shape))
+        report(f"nd/pallas_{name}", t_p * 1e6,
+               f"N={n} t={t_p*1e3:.2f}ms rel_err={rel:.1e}")
+        report(f"nd/ref_{name}", t_r * 1e6,
+               f"N={n} t={t_r*1e3:.2f}ms ratio={t_p/t_r:.2f}x")
+
+
 def run_scaling(report, sizes=(1024, 4096, 16384, 65536, 262144)):
     """O(N) scaling check (paper Eq. 13): time per point should flatten."""
     from repro.core import ICR, matern32, regular_chart

@@ -2,8 +2,11 @@
 GP on a (log-r, u, v) chart (paper §6, ref [24] — the 122-billion-DOF run).
 
 Radial axis charted (per-pixel refinement matrices), angular axes
-translation-invariant (matrices broadcast — the §4.3 symmetry trick). The
-same DistributedICR used here runs the 512-chip dry-run cell
+translation-invariant (matrices broadcast — the §4.3 symmetry trick). With
+``use_pallas=True`` every refinement level runs through the fused N-D
+kernel path (DESIGN.md §4–5): per-axis passes through the 1-D Pallas
+kernels, Pallas on TPU, interpret mode elsewhere — never the jnp reference.
+The same DistributedICR used here runs the 512-chip dry-run cell
 ``icr-dust122b`` (launch/dryrun.py).
 
 Run:  PYTHONPATH=src python examples/dust_map_3d.py
@@ -14,12 +17,15 @@ import jax
 from repro.core import ICR, matern32
 from repro.core.charts import galactic_dust_chart
 from repro.core.distributed import DistributedICR
+from repro.compat import use_mesh
+from repro.kernels import dispatch
 from repro.launch.mesh import make_mesh
 
 
 def main():
     chart = galactic_dust_chart((8, 16, 16), n_levels=3)
-    icr = ICR(chart=chart, kernel=matern32.with_defaults(rho=0.5))
+    icr = ICR(chart=chart, kernel=matern32.with_defaults(rho=0.5),
+              use_pallas=True)
     shape = chart.final_shape
     print(f"dust chart: {shape} = {np.prod(shape):,} voxels, "
           f"{chart.n_levels} refinement levels")
@@ -27,7 +33,15 @@ def main():
           np.round(np.diff(np.exp(chart.axis_coords(chart.n_levels, 0)))[:5],
                    4))
 
-    # single-device sample
+    # every level must route through the fused path — no reference fallback
+    plan = dispatch.plan(chart)
+    for entry in plan:
+        print(f"  level {entry['level']}: route={entry['route']} "
+              f"backend={entry['backend']} blocks={entry['block_families']}")
+        assert entry["route"] != dispatch.ROUTE_REFERENCE, (
+            "fused path fell back to the jnp reference", entry)
+
+    # single-device sample through the fused kernels
     sample = icr.sample(jax.random.PRNGKey(0))
     print(f"sample: shape={sample.shape} mean={float(sample.mean()):+.3f} "
           f"std={float(sample.std()):.3f}")
@@ -39,7 +53,7 @@ def main():
         mesh = make_mesh((n_dev,), ("space",))
         dist = DistributedICR(icr=icr, mesh=mesh, axis_names=("space",),
                               shard_axis=1)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             s2 = dist.sample(jax.random.PRNGKey(0))
         print(f"distributed over {n_dev} devices: shape={s2.shape}, "
               "sharded along the angular axis")

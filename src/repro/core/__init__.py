@@ -16,7 +16,13 @@ from .charts import (
     regular_chart,
 )
 from .kernels import KERNELS, Kernel, exponential, kernel_matrix, matern32, matern52, rbf
-from .refine import LevelGeom, refine_level, refinement_matrices_level, level0_sqrt
+from .refine import (
+    LevelGeom,
+    axis_refinement_matrices_level,
+    level0_sqrt,
+    refine_level,
+    refinement_matrices_level,
+)
 from .icr import ICR
 from .exact import cov_errors, exact_cov, exact_posterior, exact_sample, gauss_kl
 from .kissgp import KissGP
@@ -40,7 +46,8 @@ __all__ = [
     "galactic_dust_chart",
     "Kernel", "KERNELS", "matern32", "matern52", "rbf", "exponential",
     "kernel_matrix",
-    "LevelGeom", "refine_level", "refinement_matrices_level", "level0_sqrt",
+    "LevelGeom", "refine_level", "refinement_matrices_level",
+    "axis_refinement_matrices_level", "level0_sqrt",
     "ICR",
     "cov_errors", "exact_cov", "exact_posterior", "exact_sample", "gauss_kl",
     "KissGP",

@@ -1,4 +1,4 @@
-"""Distributed ICR: spatial sharding with halo exchange (DESIGN.md §3).
+"""Distributed ICR: spatial sharding with halo exchange (DESIGN.md §6).
 
 The paper's 122-billion-DOF application (§6, ref [24]) needs the refinement
 to run across pods. ICR's conditioning is *local* (each family reads n_csz
@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from .charts import Chart
 from .icr import ICR
@@ -268,7 +269,10 @@ class DistributedICR:
         ]
 
     def matrices(self, theta=None):
-        mats = self.icr.matrices(theta)
+        # the sharded body runs the joint reference path: force the joint
+        # build (a pallas N-D ICR skips it by default) and skip the per-axis
+        # factors, which have no sharding spec
+        mats = self.icr.matrices(theta, joint=True, axes=False)
         mat_sh, _, _ = self.shardings()
         return jax.tree.map(jax.device_put, mats, mat_sh)
 

@@ -30,6 +30,7 @@ from .charts import Chart
 from .kernels import Kernel
 from .refine import (
     LevelGeom,
+    axis_refinement_matrices_level,
     level0_sqrt,
     refine_level,
     refinement_matrices_level,
@@ -77,24 +78,43 @@ class ICR:
         return [jnp.zeros(s, dtype) for s in self.xi_shapes()]
 
     # -- matrices (functions of theta) ----------------------------------------
-    def matrices(self, theta: Mapping[str, Array] | None = None) -> dict:
+    def matrices(self, theta: Mapping[str, Array] | None = None, *,
+                 joint: bool | None = None,
+                 axes: bool | None = None) -> dict:
         """Refinement matrices for kernel parameters theta (paper Eq. 7/8).
 
         O(n_csz^{3d} · N) work, dominated by the finest level; differentiable
         w.r.t. theta.
+
+        `axes` adds the per-axis Kronecker factors consumed by the fused N-D
+        path (tiny next to the joint matrices); default: ``use_pallas`` on an
+        N-D chart. `joint` builds the joint per-level (R, sqrtD); default:
+        skipped exactly when the factors are built, because apply_sqrt then
+        routes every level through them and the joint O(n_csz^{3d}) build
+        would be dead weight. DistributedICR forces ``joint=True`` (its
+        sharded body runs the joint reference).
         """
+        build_axes = (self.use_pallas and self.chart.ndim > 1
+                      if axes is None else axes)
+        build_joint = (not build_axes) if joint is None else joint
         k = self.kernel(theta)
-        out = {
-            "sqrt0": level0_sqrt(self.chart, k, jitter=self.jitter),
-            "R": [],
-            "sqrtD": [],
-        }
-        for lvl in range(self.chart.n_levels):
-            r, sd = refinement_matrices_level(
-                self.chart, k, lvl, jitter=self.jitter
-            )
-            out["R"].append(r)
-            out["sqrtD"].append(sd)
+        out = {"sqrt0": level0_sqrt(self.chart, k, jitter=self.jitter)}
+        if build_joint:
+            out["R"], out["sqrtD"] = [], []
+            for lvl in range(self.chart.n_levels):
+                r, sd = refinement_matrices_level(
+                    self.chart, k, lvl, jitter=self.jitter
+                )
+                out["R"].append(r)
+                out["sqrtD"].append(sd)
+        if build_axes:
+            out["Rax"], out["sqrtDax"] = [], []
+            for lvl in range(self.chart.n_levels):
+                rs, ds = axis_refinement_matrices_level(
+                    self.chart, k, lvl, jitter=self.jitter
+                )
+                out["Rax"].append(rs)
+                out["sqrtDax"].append(ds)
         return out
 
     # -- forward --------------------------------------------------------------
@@ -103,12 +123,16 @@ class ICR:
         field = (mats["sqrt0"] @ xi[0]).reshape(self.chart.shape0)
         for lvl in range(self.chart.n_levels):
             geom = LevelGeom.for_level(self.chart, lvl)
-            if self.use_pallas and self._stationary_level(lvl):
-                from repro.kernels import ops as kops
+            if self.use_pallas:
+                from repro.kernels import dispatch
 
-                field = kops.refine_stationary(
-                    field, xi[lvl + 1], mats["R"][lvl], mats["sqrtD"][lvl],
-                    geom,
+                axis_mats = None
+                if "Rax" in mats:
+                    axis_mats = (mats["Rax"][lvl], mats["sqrtDax"][lvl])
+                r = mats["R"][lvl] if "R" in mats else None
+                d = mats["sqrtD"][lvl] if "sqrtD" in mats else None
+                field = dispatch.refine(
+                    field, xi[lvl + 1], r, d, geom, axis_mats=axis_mats,
                 )
             else:
                 field = refine_level(
@@ -118,7 +142,16 @@ class ICR:
         return field
 
     def _stationary_level(self, lvl: int) -> bool:
-        return all(self.chart.invariant)
+        """True iff level `lvl` refines with a single shared stencil.
+
+        Per-level, not per-chart: a charted axis whose family count is 1 at
+        some level is stationary there (kept_T == 1), and a single charted
+        axis makes the whole level non-stationary even when every other axis
+        is invariant (the old ``all(chart.invariant)`` ignored `lvl` and
+        both of these cases).
+        """
+        geom = LevelGeom.for_level(self.chart, lvl)
+        return all(k == 1 for k in geom.kept_T)
 
     def __call__(self, xi: Sequence[Array],
                  theta: Mapping[str, Array] | None = None) -> Array:

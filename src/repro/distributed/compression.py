@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
+
 PyTree = Any
 
 
@@ -40,7 +42,7 @@ def _psum_one(g: jnp.ndarray, err: jnp.ndarray, axes) -> tuple:
     """Quantize(g + err) -> int8 psum -> dequantize; returns (mean_g, err')."""
     n = 1
     for a in (axes if isinstance(axes, tuple) else (axes,)):
-        n = n * lax.axis_size(a)
+        n = n * axis_size(a)
     x = g.astype(jnp.float32) + err
     q, scale = _quantize(x)
     # the scale must be identical on every shard for the int8 sum to be
@@ -72,6 +74,6 @@ def compressed_psum(grads: PyTree, err: PyTree, mesh: Mesh,
                 jax.tree_util.tree_unflatten(tree, out_e))
 
     rep = jax.tree.map(lambda _: P(), grads)
-    fn = jax.shard_map(inner, mesh=mesh, in_specs=(rep, rep),
-                       out_specs=(rep, rep), check_vma=False)
+    fn = shard_map(inner, mesh=mesh, in_specs=(rep, rep),
+                   out_specs=(rep, rep), check_vma=False)
     return fn(grads, err)

@@ -1,0 +1,176 @@
+"""Backend dispatch for the fused ICR refinement kernels (DESIGN.md §5).
+
+One refinement application (paper Eq. 9) can execute three ways:
+
+  * ``"pallas"``    — the fused TPU kernels (icr_refine.py); chosen on TPU.
+  * ``"interpret"`` — the same kernels in Pallas interpret mode (the body
+                      runs as pure jnp); chosen off-TPU so CPU/GPU runs
+                      exercise the exact BlockSpec tiling bit-for-bit.
+  * ``"reference"`` — ``core.refine.refine_level`` (joint jnp einsum path);
+                      the fallback for anything the kernels don't cover.
+
+Routing is decided per level from the geometry alone:
+
+  1-D, all ``kept_T == 1``   -> stationary kernel (one shared stencil)
+  1-D, per-family matrices   -> charted kernel (batched small-matmul)
+  N-D with per-axis factors  -> per-axis fused passes (repro.kernels.nd)
+  otherwise                  -> reference
+
+This replaces the ad-hoc shape guards that used to live in
+``repro.kernels.ops``. The VMEM tile size (``block_families``) is autotuned
+against a per-core VMEM budget instead of being a hard-coded 256.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.refine import LevelGeom, refine_level
+
+from . import nd as _nd
+from .icr_refine import refine_charted_pallas, refine_stationary_pallas
+
+Array = jnp.ndarray
+
+BACKEND_PALLAS = "pallas"
+BACKEND_INTERPRET = "interpret"
+BACKEND_REFERENCE = "reference"
+
+ROUTE_STATIONARY_1D = "stationary-1d"
+ROUTE_CHARTED_1D = "charted-1d"
+ROUTE_AXES_ND = "nd-axes"
+ROUTE_REFERENCE = "reference"
+
+# ~half of a TPU core's VMEM (launch.mesh.VMEM_BYTES = 128 MiB): the pipeline
+# double-buffers every Blocked operand, and we leave headroom for the
+# compiler's own temporaries.
+VMEM_BUDGET_BYTES = 64 * 2**20
+
+
+def autotune_block_families(t: int, n_csz: int, n_fsz: int, *, charted: bool,
+                            itemsize: int = 4,
+                            vmem_budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Largest power-of-two family block whose working set fits the budget.
+
+    Per grid step the kernel holds: the coarse block + its halo view
+    (``2*b_f*s``), the xi block and the output block (``2*b_f*n_fsz``), and
+    the matrices — shared ``(n_fsz, n_csz)+(n_fsz, n_fsz)`` when stationary,
+    per-family (scaling with ``b_f``) when charted. Everything is double
+    buffered by the Pallas pipeline, hence the factor 2.
+    """
+    s = max(1, n_fsz // 2)
+    best, b_f = 8, 8
+    while True:
+        per = 2 * b_f * s + 2 * b_f * n_fsz + n_fsz * n_csz + n_fsz * n_fsz
+        if charted:
+            per += b_f * (n_fsz * n_csz + n_fsz * n_fsz)
+        if 2 * itemsize * per > vmem_budget:
+            break
+        best = b_f
+        if b_f >= t:
+            break
+        b_f *= 2
+    return best
+
+
+def select_backend(*, platform: str | None = None) -> str:
+    """Kernel backend for `platform` (default: the runtime jax backend)."""
+    platform = platform or jax.default_backend()
+    return BACKEND_PALLAS if platform == "tpu" else BACKEND_INTERPRET
+
+
+def route_for(geom: LevelGeom, *, have_axis_mats: bool = False) -> str:
+    """Which structured path covers this level's geometry (see module doc)."""
+    if geom.boundary not in ("shrink", "reflect"):
+        return ROUTE_REFERENCE
+    if len(geom.coarse_shape) == 1:
+        if all(k == 1 for k in geom.kept_T):
+            return ROUTE_STATIONARY_1D
+        return ROUTE_CHARTED_1D
+    return ROUTE_AXES_ND if have_axis_mats else ROUTE_REFERENCE
+
+
+def plan(chart, *, have_axis_mats: bool | None = None,
+         platform: str | None = None) -> list:
+    """Per-level routing decisions for `chart` — introspection for examples,
+    benchmarks and tests (no arrays touched).
+
+    have_axis_mats defaults to ``chart.ndim > 1`` (ICR.matrices computes the
+    per-axis factors for every N-D chart when use_pallas=True).
+    """
+    if have_axis_mats is None:
+        have_axis_mats = chart.ndim > 1
+    out = []
+    for lvl in range(chart.n_levels):
+        geom = LevelGeom.for_level(chart, lvl)
+        route = route_for(geom, have_axis_mats=have_axis_mats)
+        backend = (BACKEND_REFERENCE if route == ROUTE_REFERENCE
+                   else select_backend(platform=platform))
+        blocks = {}
+        if route in (ROUTE_STATIONARY_1D, ROUTE_CHARTED_1D):
+            blocks[0] = autotune_block_families(
+                geom.T[0], geom.n_csz, geom.n_fsz,
+                charted=route == ROUTE_CHARTED_1D,
+            )
+        elif route == ROUTE_AXES_ND:
+            for a in range(len(geom.T)):
+                ag = geom.axis(a)
+                blocks[a] = autotune_block_families(
+                    ag.T[0], ag.n_csz, ag.n_fsz,
+                    charted=ag.kept_T[0] > 1,
+                )
+        out.append({"level": lvl, "route": route, "backend": backend,
+                    "block_families": blocks})
+    return out
+
+
+def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
+           axis_mats=None, backend: str | None = None,
+           block_families: int | None = None) -> Array:
+    """Route one refinement application to the best available backend.
+
+    Arguments follow ``core.refine.refine_level``; ``axis_mats`` optionally
+    carries the per-axis factors ``(rs, ds)`` from
+    ``axis_refinement_matrices_level``, enabling the fused N-D path (when
+    present, the joint ``r``/``d`` are ignored on N-D levels).
+    """
+    route = route_for(geom, have_axis_mats=axis_mats is not None)
+    if backend is None and route != ROUTE_REFERENCE:
+        backend = select_backend()
+    if route == ROUTE_REFERENCE or backend == BACKEND_REFERENCE:
+        if r is None or d is None:
+            raise ValueError(
+                "reference route needs the joint (r, d) matrices; this level "
+                "has none (ICR.matrices skipped the joint build) — pass "
+                "matrices(joint=True) or provide axis_mats covering it"
+            )
+        return refine_level(field, xi, r, d, geom)
+    interpret = backend != BACKEND_PALLAS
+
+    if route == ROUTE_AXES_ND:
+        return _nd.refine_axes(field, xi, axis_mats[0], axis_mats[1], geom,
+                               interpret=interpret,
+                               block_families=block_families)
+
+    n_csz, n_fsz = geom.n_csz, geom.n_fsz
+    t = geom.T[0]
+    coarse = field.reshape(1, -1)
+    if geom.boundary == "reflect":
+        coarse = jnp.pad(coarse, [(0, 0), (geom.b, geom.b)], mode="reflect")
+    charted = route == ROUTE_CHARTED_1D
+    b_f = block_families or autotune_block_families(
+        t, n_csz, n_fsz, charted=charted
+    )
+    if charted:
+        out = refine_charted_pallas(
+            coarse, xi.reshape(1, t, n_fsz), r.reshape(t, n_fsz, n_csz),
+            d.reshape(t, n_fsz, n_fsz), n_csz=n_csz, n_fsz=n_fsz,
+            block_families=b_f, interpret=interpret,
+        )
+    else:
+        out = refine_stationary_pallas(
+            coarse, xi.reshape(1, t, n_fsz), r.reshape(n_fsz, n_csz),
+            d.reshape(n_fsz, n_fsz), n_csz=n_csz, n_fsz=n_fsz,
+            block_families=b_f, interpret=interpret,
+        )
+    return out.reshape(geom.fine_shape)

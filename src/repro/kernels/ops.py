@@ -1,72 +1,49 @@
 """Jit'd public wrappers around the Pallas refinement kernels.
 
-The wrappers adapt core.refine's calling convention (LevelGeom + matrices as
-produced by ``refinement_matrices_level``) to the kernels' flat layout, pick
-``interpret=True`` automatically off-TPU (the kernel body then runs as a pure
-Python/jnp program — bit-for-bit checkable on CPU), and fall back to the jnp
-reference for shapes the kernels don't cover (ND joint refinement).
+These adapt core.refine's calling convention (LevelGeom + matrices as
+produced by ``refinement_matrices_level``) to the kernel layer. Since the
+dispatch layer landed (dispatch.py), both wrappers are thin aliases of
+``dispatch.refine``: the backend (pallas on TPU, interpret elsewhere,
+reference for uncovered geometry) and the kernel variant (stationary vs
+charted) are selected from the level geometry, not from which wrapper the
+caller picked — the old ad-hoc shape guards live there now.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.refine import LevelGeom, refine_level
-from . import ref as _ref
-from .icr_refine import refine_charted_pallas, refine_stationary_pallas
+from repro.core.refine import LevelGeom
+
+from . import dispatch, ref as _ref
 
 Array = jnp.ndarray
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+def _backend(interpret: bool | None) -> str | None:
+    if interpret is None:
+        return None  # dispatch auto-selects from the runtime platform
+    return dispatch.BACKEND_INTERPRET if interpret else dispatch.BACKEND_PALLAS
 
 
 def refine_stationary(field: Array, xi: Array, r: Array, d: Array,
                       geom: LevelGeom, *, interpret: bool | None = None,
-                      block_families: int = 256) -> Array:
-    """Drop-in replacement for core.refine.refine_level on stationary 1-D
-    charts (all axes invariant, ndim == 1)."""
-    if len(geom.coarse_shape) != 1 or geom.boundary not in ("shrink", "reflect"):
-        return refine_level(field, xi, r, d, geom)
-    interpret = _interpret_default() if interpret is None else interpret
-    n_csz, n_fsz = geom.n_csz, geom.n_fsz
-    t = geom.T[0]
-    coarse = field.reshape(1, -1)
-    if geom.boundary == "reflect":
-        coarse = jnp.pad(coarse, [(0, 0), (geom.b, geom.b)], mode="reflect")
-    r2 = r.reshape(n_fsz, n_csz)
-    d2 = d.reshape(n_fsz, n_fsz)
-    out = refine_stationary_pallas(
-        coarse, xi.reshape(1, t, n_fsz), r2, d2,
-        n_csz=n_csz, n_fsz=n_fsz, block_families=block_families,
-        interpret=interpret,
-    )
-    return out.reshape(geom.fine_shape)
+                      block_families: int | None = None) -> Array:
+    """Drop-in replacement for core.refine.refine_level on 1-D charts.
+
+    Falls back to the jnp reference for geometry the kernels don't cover
+    (joint N-D refinement without per-axis factors)."""
+    return dispatch.refine(field, xi, r, d, geom,
+                           backend=_backend(interpret),
+                           block_families=block_families)
 
 
 def refine_charted(field: Array, xi: Array, r: Array, d: Array,
                    geom: LevelGeom, *, interpret: bool | None = None,
-                   block_families: int = 256) -> Array:
+                   block_families: int | None = None) -> Array:
     """Charted 1-D refinement with per-family matrices (paper §4.3)."""
-    if len(geom.coarse_shape) != 1:
-        return refine_level(field, xi, r, d, geom)
-    interpret = _interpret_default() if interpret is None else interpret
-    n_csz, n_fsz = geom.n_csz, geom.n_fsz
-    t = geom.T[0]
-    coarse = field.reshape(1, -1)
-    if geom.boundary == "reflect":
-        coarse = jnp.pad(coarse, [(0, 0), (geom.b, geom.b)], mode="reflect")
-    out = refine_charted_pallas(
-        coarse, xi.reshape(1, t, n_fsz),
-        r.reshape(t, n_fsz, n_csz), d.reshape(t, n_fsz, n_fsz),
-        n_csz=n_csz, n_fsz=n_fsz, block_families=block_families,
-        interpret=interpret,
-    )
-    return out.reshape(geom.fine_shape)
+    return dispatch.refine(field, xi, r, d, geom,
+                           backend=_backend(interpret),
+                           block_families=block_families)
 
 
 # -- flat functional forms (benchmarks / tests) --------------------------------

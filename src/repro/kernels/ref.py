@@ -41,6 +41,65 @@ def refine_stationary_ref(coarse: Array, xi: Array, r: Array,
     return fine.reshape(*fine.shape[:-2], t * n_fsz)
 
 
+def refine_axes_ref(field: Array, xi: Array, rs, ds, *, T, n_fsz: int,
+                    boundary: str = "shrink", b: int = 1) -> Array:
+    """Separable N-D refinement oracle: per-axis 1-D passes (Kronecker math).
+
+    Ground truth for repro.kernels.nd.refine_axes, written independently on
+    top of the 1-D oracles above. Applies the Kronecker-factored refinement
+
+        fine = (R_0 ⊗ ... ⊗ R_{d-1}) windows(coarse)
+             + (D_0 ⊗ ... ⊗ D_{d-1}) xi
+
+    as axis passes d-1..0, folding all other axes into the batch dims of the
+    1-D oracles. Only the final (axis-0) pass injects xi; the noise factors
+    of the other axes are pre-contracted into it.
+
+    field: (*coarse_shape); xi: (prod(T), n_fsz^d)
+    rs[a]: (n_fsz, n_csz) shared or (T_a, n_fsz, n_csz) per-family;
+    ds[a]:  likewise with n_csz -> n_fsz.
+    -> fine (T_0*n_fsz, ..., T_{d-1}*n_fsz)
+    """
+    nd = field.ndim
+    T = tuple(T)
+    fsz = n_fsz
+
+    # pre-contract the noise factors of axes 1..d-1 into xi
+    xi_nd = xi.reshape(T + (fsz,) * nd)
+    for a in range(1, nd):
+        x2 = jnp.moveaxis(xi_nd, (a, nd + a), (-2, -1))  # (..., T_a, f_a)
+        if ds[a].ndim == 2:
+            x2 = jnp.einsum("...tj,fj->...tf", x2, ds[a])
+        else:
+            x2 = jnp.einsum("...tj,tfj->...tf", x2, ds[a])
+        xi_nd = jnp.moveaxis(x2, (-2, -1), (a, nd + a))
+    # interleave (T_a, f_a) for a>=1 into the fine batch layout of the
+    # final pass: (N^f_1, ..., N^f_{d-1}, T_0, f_0)
+    perm = []
+    for a in range(1, nd):
+        perm += [a, nd + a]
+    perm += [0, nd]
+    xi0 = xi_nd.transpose(perm).reshape(-1, T[0], fsz)
+
+    out = field
+    for a in range(nd - 1, -1, -1):
+        arr = jnp.moveaxis(out, a, -1)
+        bshape = arr.shape[:-1]
+        coarse = arr.reshape(-1, arr.shape[-1])
+        if boundary == "reflect":
+            coarse = jnp.pad(coarse, [(0, 0), (b, b)], mode="reflect")
+        if a == 0:
+            xi_a = xi0
+        else:
+            xi_a = jnp.zeros((coarse.shape[0], T[a], fsz), coarse.dtype)
+        if rs[a].ndim == 2:
+            res = refine_stationary_ref(coarse, xi_a, rs[a], ds[a])
+        else:
+            res = refine_charted_ref(coarse, xi_a, rs[a], ds[a])
+        out = jnp.moveaxis(res.reshape(bshape + (T[a] * fsz,)), -1, a)
+    return out
+
+
 def refine_charted_ref(coarse: Array, xi: Array, r: Array,
                        sqrt_d: Array) -> Array:
     """Charted (non-stationary) refinement: per-family matrices (paper §4.3).

@@ -27,6 +27,7 @@ def main() -> int:
     from repro.core import ICR, matern32, regular_chart, log_chart
     from repro.core.charts import galactic_dust_chart
     from repro.core.distributed import DistributedICR
+    from repro.compat import use_mesh
     from repro.launch.mesh import make_mesh
 
     n_dev = len(jax.devices())
@@ -70,7 +71,7 @@ def main() -> int:
         dist = DistributedICR(icr=icr, mesh=mesh, axis_names=axes,
                               shard_axis=shard_axis)
         key = jax.random.PRNGKey(42)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             xi = dist.init_xi(key)
             mats = dist.matrices()
             sharded = jax.jit(dist.apply_sqrt)(mats, xi)

@@ -121,6 +121,7 @@ def run_lm_cell(arch: str, shape: str, mesh_kind: str) -> dict:
 
 def run_icr_cell(arch: str, mesh_kind: str) -> dict:
     import jax
+    from repro.compat import use_mesh
     from repro.configs.registry import ICR_ARCHS
     from repro.core.distributed import DistributedICR
     from repro.roofline.analysis import analyze_compiled
@@ -141,7 +142,7 @@ def run_icr_cell(arch: str, mesh_kind: str) -> dict:
     xi_spec = [jax.ShapeDtypeStruct(s, np.float32)
                for s in dist.xi_structure()]
     mat_sh, xi_sh, out_sh = dist.shardings()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         fn = jax.jit(dist.apply_sqrt, in_shardings=(mat_sh, tuple(xi_sh)),
                      out_shardings=out_sh)
         lowered = fn.lower(mats_spec, tuple(xi_spec))

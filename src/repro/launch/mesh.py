@@ -21,7 +21,9 @@ import math
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro import compat
 
 
 def _make(shape, axes) -> Mesh:
@@ -33,9 +35,9 @@ def _make(shape, axes) -> Mesh:
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "importing jax"
         )
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    # axis_types is resolved by repro.compat: Auto on jax with AxisType,
+    # omitted entirely on 0.4.x.
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

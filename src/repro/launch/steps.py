@@ -54,7 +54,10 @@ def active_param_count(model) -> int:
 
 def select_optimizer(model, total_steps: int = 10_000):
     n = model.param_count()
-    sched = linear_warmup_cosine(3e-4, 200, total_steps)
+    # cap warmup by the run length: a short run (tests, smoke examples) must
+    # reach a useful lr, not spend every step inside a 200-step ramp
+    warmup = min(200, max(1, total_steps // 10))
+    sched = linear_warmup_cosine(3e-4, warmup, total_steps)
     if n > ADAFACTOR_THRESHOLD:
         return adafactor(sched), "adafactor"
     return adamw(sched, weight_decay=0.1), "adamw"
@@ -123,13 +126,13 @@ def choose_accum(model, cell: ShapeCell, mesh: Mesh) -> int:
 
 
 def make_train_step(cfg: ArchConfig, mesh: Mesh, *, donate: bool = True,
-                    accum: int = 1) -> TrainStep:
+                    accum: int = 1, total_steps: int = 10_000) -> TrainStep:
     from repro.models import shard_ctx
 
     model = build_model(cfg)
     data_axes, model_axes = data_model_axes(mesh)
     shard_ctx.set_axes(mesh, data_axes, model_axes)
-    opt, opt_name = select_optimizer(model)
+    opt, opt_name = select_optimizer(model, total_steps=total_steps)
 
     p_spec = model.params_spec()
     p_specs = param_specs(p_spec, mesh, data_axes, model_axes)

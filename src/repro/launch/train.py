@@ -53,7 +53,8 @@ def train_loop(cfg, mesh, *, steps: int, global_batch: int, seq_len: int,
     cell = ShapeCell("train", seq_len, global_batch, "train")
     from repro.models import build_model
     accum = choose_accum(build_model(cfg), cell, mesh)
-    ts = make_train_step(cfg, mesh, accum=accum, donate=False)
+    ts = make_train_step(cfg, mesh, accum=accum, donate=False,
+                         total_steps=steps)
 
     data = SyntheticLMData(vocab_size=cfg.vocab_size, seq_len=seq_len,
                            global_batch=global_batch, seed=seed)

@@ -1,0 +1,82 @@
+"""The public API must import cleanly against the pinned jax.
+
+This is the regression net for jax API drift (jax.shard_map /
+jax.sharding.AxisType / jax.set_mesh do not exist on 0.4.x): at the seed,
+6 of 18 test modules failed COLLECTION on these imports. Every version-
+dependent name must be resolved through repro.compat.
+"""
+import importlib
+
+import pytest
+
+import jax
+
+PUBLIC_MODULES = [
+    "repro",
+    "repro.compat",
+    "repro.core",
+    "repro.core.charts",
+    "repro.core.distributed",
+    "repro.core.exact",
+    "repro.core.icr",
+    "repro.core.kernels",
+    "repro.core.kissgp",
+    "repro.core.refine",
+    "repro.core.standardize",
+    "repro.core.vi",
+    "repro.data",
+    "repro.distributed",
+    "repro.distributed.compression",
+    "repro.distributed.elastic",
+    "repro.distributed.fault",
+    "repro.distributed.sharding",
+    "repro.kernels",
+    "repro.kernels.dispatch",
+    "repro.kernels.icr_refine",
+    "repro.kernels.nd",
+    "repro.kernels.ops",
+    "repro.kernels.ref",
+    "repro.launch.mesh",
+    "repro.launch.serve",
+    "repro.launch.steps",
+    "repro.models",
+    "repro.optim",
+    "repro.roofline",
+    "repro.roofline.analysis",
+    "repro.checkpoint",
+    "repro.configs",
+]
+
+
+@pytest.mark.parametrize("mod", PUBLIC_MODULES)
+def test_module_imports(mod):
+    importlib.import_module(mod)
+
+
+def test_compat_shard_map_resolves():
+    from repro import compat
+
+    assert callable(compat.shard_map)
+    # the modern keyword signature must be accepted on this jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    mesh = compat.make_mesh((1,), ("x",))
+    fn = compat.shard_map(lambda a: a * 2, mesh=mesh, in_specs=(P(),),
+                          out_specs=P(), check_vma=False)
+    assert float(fn(jnp.ones(()))) == 2.0
+
+
+def test_compat_make_mesh_no_axis_types_needed():
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("data",))
+    assert tuple(mesh.axis_names) == ("data",)
+
+
+def test_compat_use_mesh_context():
+    from repro import compat
+
+    mesh = compat.make_mesh((1,), ("data",))
+    with compat.use_mesh(mesh):
+        pass

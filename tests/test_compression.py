@@ -1,4 +1,4 @@
-"""Gradient compression: int8 + error feedback (DESIGN.md §5).
+"""Gradient compression: int8 + error feedback (DESIGN.md §7).
 
 Multi-device correctness runs in a subprocess (host device count must be
 set before jax init); single-device semantics and the error-feedback

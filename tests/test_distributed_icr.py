@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import ICR, matern32, regular_chart
 from repro.core.distributed import DistributedICR
+from repro.compat import use_mesh
 from repro.launch.mesh import make_mesh
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -40,7 +41,7 @@ def test_single_device_mesh_roundtrip(key):
               kernel=matern32.with_defaults(rho=10.0))
     mesh = make_mesh((1,), ("space",))
     dist = DistributedICR(icr=icr, mesh=mesh, axis_names=("space",))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         xi = dist.init_xi(key)
         mats = dist.matrices()
         sharded = dist.apply_sqrt(mats, xi)

@@ -10,7 +10,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ICR, log_chart, matern32, regular_chart
-from repro.core.refine import LevelGeom, refinement_matrices_level
+from repro.core.charts import Chart, galactic_dust_chart
+from repro.core.refine import (
+    LevelGeom,
+    axis_refinement_matrices_level,
+    refine_level,
+    refinement_matrices_level,
+)
+from repro.kernels import dispatch, nd
 from repro.kernels import ref as R
 from repro.kernels import ops
 from repro.kernels.icr_refine import (
@@ -122,13 +129,212 @@ class TestOpsIntegration:
                                    rtol=1e-5, atol=1e-5)
 
     def test_nd_falls_back_to_core(self):
+        """Without per-axis factors, N-D joint matrices use the reference."""
         c = regular_chart((8, 8), 1)
         k = matern32.with_defaults(rho=4.0)()
         r, d = refinement_matrices_level(c, k, 0)
         geom = LevelGeom.for_level(c, 0)
+        assert dispatch.route_for(geom) == dispatch.ROUTE_REFERENCE
         rng = np.random.default_rng(2)
         field = jnp.asarray(rng.normal(size=geom.coarse_shape), jnp.float32)
         f = int(np.prod(geom.T))
         xi = jnp.asarray(rng.normal(size=(f, geom.n_fsz**2)), jnp.float32)
         out = ops.refine_stationary(field, xi, r, d, geom)
         assert out.shape == geom.fine_shape
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(refine_level(field, xi, r, d, geom)),
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+# -- N-D fused path (per-axis passes, DESIGN.md §4) ----------------------------
+def _kron_joint(rs, ds, geom):
+    """Joint (*kept_T, fsz^d, csz^d) matrices from per-axis factors."""
+    rs = [m if m.ndim == 3 else m[None] for m in rs]
+    ds = [m if m.ndim == 3 else m[None] for m in ds]
+    kept = tuple(m.shape[0] for m in rs)
+
+    def build(mats):
+        out = mats[0]
+        for m in mats[1:]:
+            out = jnp.einsum("...FC,tfc->...tFfCc", out, m)
+            sh = out.shape
+            out = out.reshape(sh[:-4] + (sh[-4] * sh[-3], sh[-2] * sh[-1]))
+        return out
+
+    r = build(rs)
+    return r.reshape(kept + r.shape[1:]), (
+        lambda d: d.reshape(kept + d.shape[1:]))(build(ds))
+
+
+ND_CHARTS = [
+    # (chart factory, id) — stationary / charted axes x shrink / reflect
+    (lambda: regular_chart((12, 10), 2, boundary="shrink"), "2d-shrink"),
+    (lambda: regular_chart((12, 16), 2, boundary="reflect"), "2d-reflect"),
+    (lambda: Chart(  # 2-D, charted (log) axis 0, invariant axis 1
+        shape0=(14, 12), n_levels=2, delta0=(0.05, 1.0), boundary="shrink",
+        phi_inv=lambda x: jnp.stack(
+            [jnp.exp(x[..., 0]), x[..., 1]], axis=-1),
+        invariant=(False, True)), "2d-mixed-shrink"),
+    (lambda: regular_chart((8, 8, 12), 1, boundary="shrink"), "3d-shrink"),
+    (lambda: galactic_dust_chart((6, 8, 8), n_levels=2), "3d-dust-reflect"),
+]
+
+
+@pytest.mark.parametrize("chartf,name", ND_CHARTS, ids=[n for _, n in ND_CHARTS])
+def test_nd_axes_matches_refine_level(chartf, name):
+    """Per-axis fused passes == joint refine_level on Kronecker matrices.
+
+    This pins the implementation exactly: given factored matrices, the N-D
+    Pallas path (interpret mode) must reproduce the joint jnp reference."""
+    c = chartf()
+    k = matern32.with_defaults(rho=3.0)()
+    for lvl in range(c.n_levels):
+        geom = LevelGeom.for_level(c, lvl)
+        rs, ds = axis_refinement_matrices_level(c, k, lvl)
+        rng = np.random.default_rng([lvl, *name.encode()])
+        field = jnp.asarray(rng.normal(size=geom.coarse_shape), jnp.float32)
+        f = int(np.prod(geom.T))
+        xi = jnp.asarray(
+            rng.normal(size=(f, geom.n_fsz ** len(geom.T))), jnp.float32)
+        got = nd.refine_axes(field, xi, rs, ds, geom, interpret=True)
+        r_j, d_j = _kron_joint(rs, ds, geom)
+        want = refine_level(field, xi, r_j, d_j, geom)
+        assert got.shape == geom.fine_shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("chartf,name", ND_CHARTS[:2] + ND_CHARTS[-1:],
+                         ids=["2d-shrink", "2d-reflect", "3d-dust-reflect"])
+def test_nd_axes_matches_oracle(chartf, name):
+    """Fused N-D passes are bit-exact vs the independent jnp oracle."""
+    c = chartf()
+    k = matern32.with_defaults(rho=3.0)()
+    geom = LevelGeom.for_level(c, 0)
+    rs, ds = axis_refinement_matrices_level(c, k, 0)
+    rng = np.random.default_rng(7)
+    field = jnp.asarray(rng.normal(size=geom.coarse_shape), jnp.float32)
+    f = int(np.prod(geom.T))
+    xi = jnp.asarray(
+        rng.normal(size=(f, geom.n_fsz ** len(geom.T))), jnp.float32)
+    got = nd.refine_axes(field, xi, rs, ds, geom, interpret=True)
+    want = R.refine_axes_ref(field, xi, rs, ds, T=geom.T, n_fsz=geom.n_fsz,
+                             boundary=geom.boundary, b=geom.b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("block", [8, 32, 1024])
+def test_nd_block_size_invariance(block):
+    c = regular_chart((16, 24), 1, boundary="reflect")
+    k = matern32.with_defaults(rho=4.0)()
+    geom = LevelGeom.for_level(c, 0)
+    rs, ds = axis_refinement_matrices_level(c, k, 0)
+    rng = np.random.default_rng(3)
+    field = jnp.asarray(rng.normal(size=geom.coarse_shape), jnp.float32)
+    f = int(np.prod(geom.T))
+    xi = jnp.asarray(rng.normal(size=(f, geom.n_fsz**2)), jnp.float32)
+    base = nd.refine_axes(field, xi, rs, ds, geom, interpret=True,
+                          block_families=16)
+    got = nd.refine_axes(field, xi, rs, ds, geom, interpret=True,
+                         block_families=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-6)
+
+
+def test_icr_nd_use_pallas_end_to_end():
+    """ICR(use_pallas=True) routes every dust-chart level through the fused
+    path (no reference fallback) and produces a finite, correlated field."""
+    c = galactic_dust_chart((6, 8, 8), n_levels=2)
+    icr = ICR(chart=c, kernel=matern32.with_defaults(rho=0.5),
+              use_pallas=True)
+    for entry in dispatch.plan(c):
+        assert entry["route"] != dispatch.ROUTE_REFERENCE, entry
+    # the fused path skips the joint O(n_csz^3d) matrix build entirely
+    mats = icr.matrices()
+    assert "Rax" in mats and "R" not in mats
+    assert "R" in icr.matrices(joint=True)
+    s = icr.sample(jax.random.PRNGKey(0))
+    assert s.shape == c.final_shape
+    assert bool(jnp.isfinite(s).all())
+    # the separable fast path is an approximation of the joint model; it
+    # must stay within a few percent on this chart (non-separable Matérn)
+    icr_ref = ICR(chart=c, kernel=matern32.with_defaults(rho=0.5))
+    xi = icr.init_xi(jax.random.PRNGKey(0))
+    sj = icr_ref.apply_sqrt(icr_ref.matrices(), xi)
+    rel = float(jnp.linalg.norm(s - sj) / jnp.linalg.norm(sj))
+    assert rel < 0.15, rel
+
+
+# -- dispatch layer ------------------------------------------------------------
+class TestDispatch:
+    def test_routes(self):
+        geom_1d_st = LevelGeom.for_level(regular_chart(32, 1), 0)
+        assert dispatch.route_for(geom_1d_st) == dispatch.ROUTE_STATIONARY_1D
+        geom_1d_ch = LevelGeom.for_level(log_chart(32, 1, delta0=0.05), 0)
+        assert dispatch.route_for(geom_1d_ch) == dispatch.ROUTE_CHARTED_1D
+        geom_2d = LevelGeom.for_level(regular_chart((8, 8), 1), 0)
+        assert dispatch.route_for(geom_2d) == dispatch.ROUTE_REFERENCE
+        assert (dispatch.route_for(geom_2d, have_axis_mats=True)
+                == dispatch.ROUTE_AXES_ND)
+
+    def test_autotune_monotone_and_bounded(self):
+        small = dispatch.autotune_block_families(10**6, 5, 4, charted=True)
+        big = dispatch.autotune_block_families(10**6, 5, 4, charted=False)
+        assert big >= small >= 8
+        # charted per-family matrices dominate the working set at large b_f:
+        # the block must fit the VMEM budget
+        s, fsz, csz = 2, 4, 5
+        per = (2 * small * s + 2 * small * fsz + fsz * csz + fsz * fsz
+               + small * (fsz * csz + fsz * fsz))
+        assert 2 * 4 * per <= dispatch.VMEM_BUDGET_BYTES
+        # never larger than needed: tiny T yields a tiny block
+        assert dispatch.autotune_block_families(5, 5, 4, charted=False) == 8
+
+    def test_plan_dust_chart(self):
+        c = galactic_dust_chart((6, 8, 8), n_levels=2)
+        plan = dispatch.plan(c, platform="cpu")
+        assert [e["route"] for e in plan] == [dispatch.ROUTE_AXES_ND] * 2
+        assert all(e["backend"] == dispatch.BACKEND_INTERPRET for e in plan)
+        plan_tpu = dispatch.plan(c, platform="tpu")
+        assert all(e["backend"] == dispatch.BACKEND_PALLAS for e in plan_tpu)
+
+
+# -- _stationary_level regression (the lvl-ignoring bug) -----------------------
+class TestStationaryLevel:
+    def test_mixed_invariant_charted_chart(self):
+        """A chart with one charted + invariant axes is NOT stationary."""
+        icr = ICR(chart=galactic_dust_chart((6, 8, 8), n_levels=2),
+                  kernel=matern32.with_defaults(rho=0.5))
+        assert not any(icr._stationary_level(l) for l in range(2))
+
+    def test_fully_invariant_chart(self):
+        icr = ICR(chart=regular_chart(64, 2), kernel=matern32)
+        assert all(icr._stationary_level(l) for l in range(2))
+
+    def test_charted_level_with_single_family_is_stationary(self):
+        """Per-level behavior: a charted axis collapses to one shared matrix
+        at levels with family count 1 (the old code ignored `lvl`)."""
+        c = log_chart(3, 2, n_csz=3, n_fsz=4, delta0=0.05)
+        icr = ICR(chart=c, kernel=matern32)
+        geoms = [icr._stationary_level(l) for l in range(2)]
+        assert geoms == [
+            all(k == 1 for k in LevelGeom.for_level(c, l).kept_T)
+            for l in range(2)
+        ]
+        assert any(geoms)  # T==1 levels exist on this tiny chart
+
+    def test_charted_1d_use_pallas_end_to_end(self):
+        """Charted levels now reach the charted kernel under use_pallas and
+        agree with the reference (previously they silently fell back)."""
+        c = log_chart(32, 2, n_csz=5, n_fsz=4, delta0=0.05)
+        icr_ref = ICR(chart=c, kernel=matern32.with_defaults(rho=1.0))
+        icr_pal = ICR(chart=c, kernel=matern32.with_defaults(rho=1.0),
+                      use_pallas=True)
+        xi = icr_ref.init_xi(jax.random.PRNGKey(2))
+        mats = icr_ref.matrices()
+        np.testing.assert_allclose(
+            np.asarray(icr_ref.apply_sqrt(mats, xi)),
+            np.asarray(icr_pal.apply_sqrt(mats, xi)),
+            rtol=1e-5, atol=1e-5,
+        )
