@@ -5,6 +5,8 @@
   nd        — fused N-D Pallas path: 2-D/3-D parity (<=1e-5) + wall time
   scaling   — paper Eq. 13 (O(N) check, log-log slope)
   vi        — §3.2 end-to-end: standardized GP regression (MAP)
+  grad      — one value_and_grad step of the §3.2 loss: fused adjoint
+              kernels vs the jnp reference path (training-time cost)
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--quick`` trims sizes for
 CI; ``--only <name>`` runs one table.
@@ -38,8 +40,7 @@ def run_vi(report):
     fwd = lambda xi: icr.apply_sqrt(mats, xi)
     t0 = time.perf_counter()
     steps = 200
-    xi, losses = map_fit(jax.random.PRNGKey(1), ll, fwd, icr.zero_xi(), y,
-                         steps=steps)
+    xi, losses = map_fit(ll, fwd, icr.zero_xi(), y, steps=steps)
     jax.block_until_ready(xi)
     dt = time.perf_counter() - t0
     rec = np.asarray(fwd(xi).reshape(-1))
@@ -47,6 +48,60 @@ def run_vi(report):
     report("vi/map_step", dt / steps * 1e6,
            f"N={c.size} rmse={rmse:.3f} loss {float(losses[0]):.0f}->"
            f"{float(losses[-1]):.0f}")
+
+
+def run_grad(report, *, quick: bool = False):
+    """Backward-pass table (paper §1: inference = two sqrt applications +
+    the VJP): wall time of one jitted value_and_grad of the standardized
+    loss, fused custom-VJP path vs the jnp reference, per chart.
+
+    Off-TPU the fused path runs in Pallas interpret mode (BlockSpec
+    machinery emulated in jnp), so CPU rows measure correctness plumbing,
+    not the kernel — the derived column records the backend for that reason.
+    """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ICR, matern32, regular_chart
+    from repro.core.charts import galactic_dust_chart, log_chart
+    from repro.kernels import dispatch
+
+    backend = dispatch.select_backend()
+
+    cases = [
+        ("1d-stationary", lambda: regular_chart(64, 3 if quick else 5,
+                                                boundary="reflect")),
+        ("1d-charted", lambda: log_chart(64, 3 if quick else 5,
+                                         n_csz=5, n_fsz=4, delta0=0.05)),
+        ("3d-dust", lambda: galactic_dust_chart(
+            (6, 8, 8) if quick else (8, 16, 16), n_levels=2)),
+    ]
+    for name, chartf in cases:
+        chart = chartf()
+        timings = {}
+        for fused in (False, True):
+            icr = ICR(chart=chart, kernel=matern32.with_defaults(rho=4.0),
+                      use_pallas=fused)
+            mats = icr.matrices()
+            xi = icr.init_xi(jax.random.PRNGKey(0))
+
+            def loss(xs):
+                s = icr.apply_sqrt(mats, xs)
+                return 0.5 * jnp.sum(jnp.square(s))
+
+            step = jax.jit(jax.value_and_grad(loss))
+            jax.block_until_ready(step(xi))  # compile
+            reps = 3 if quick else 10
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(step(xi))
+            us = (time.perf_counter() - t0) / reps * 1e6
+            timings[fused] = us
+            bk = backend if fused else "jnp"
+            report(f"grad/{name}/{'fused' if fused else 'reference'}", us,
+                   f"N={int(np.prod(chart.final_shape))} backend={bk}")
+        report(f"grad/{name}/speedup", timings[False] / timings[True],
+               f"reference/fused wall-time ratio ({backend})")
 
 
 def main() -> None:
@@ -68,6 +123,7 @@ def main() -> None:
             _report, sizes=(1024, 4096, 16384) if args.quick
             else (1024, 4096, 16384, 65536, 262144)),
         "vi": lambda: run_vi(_report),
+        "grad": lambda: run_grad(_report, quick=args.quick),
     }
     print("name,us_per_call,derived")
     for name, fn in tables.items():

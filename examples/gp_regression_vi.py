@@ -2,7 +2,10 @@
 kernel parameters on noisy observations with the standardized generative
 model (paper §3.2) — a few hundred optimizer steps, no kernel inversion.
 
-  field prior : ICR on a 4096-point chart (sqrt(K_ICR) applications only)
+  field prior : ICR on a 4096-point chart (sqrt(K_ICR) applications only),
+                running the fused Pallas path — forward AND backward: every
+                optimizer step's gradient goes through the hand-written
+                adjoint kernels, never the jnp reference
   theta prior : LogNormal on the kernel scale rho, via inverse-CDF
   inference   : MAP over (xi_field, xi_theta), then mean-field ADVI for
                 uncertainties
@@ -27,6 +30,7 @@ from repro.core import (
     regular_chart,
 )
 from repro.data import charted_gp_dataset
+from repro.kernels import dispatch
 
 
 def main():
@@ -39,11 +43,19 @@ def main():
     chart = regular_chart(args.n0, args.levels, boundary="reflect")
     n = chart.size
     true_rho = 0.04 * n
-    icr = ICR(chart=chart, kernel=matern32.with_defaults(rho=true_rho))
+    icr = ICR(chart=chart, kernel=matern32.with_defaults(rho=true_rho),
+              use_pallas=True)
     truth, obs_idx, y = charted_gp_dataset(
         icr, jax.random.PRNGKey(0), obs_frac=0.3, noise_std=0.05)
     print(f"N={n} points, {len(np.asarray(obs_idx))} noisy observations, "
           f"true rho={true_rho:.0f}")
+
+    # every level must run fused — forward and backward (no jnp reference)
+    for entry in dispatch.plan(chart):
+        print(f"  level {entry['level']}: fwd={entry['route']} "
+              f"bwd={entry['vjp']['route']} backend={entry['backend']}")
+        assert entry["route"] != dispatch.ROUTE_REFERENCE, entry
+        assert entry["vjp"]["route"] != dispatch.ROUTE_REFERENCE, entry
 
     # joint (field, theta) inference — matrices recomputed inside the step
     priors = StandardizedModel({"rho": lognormal_prior(0.06 * n, 0.03 * n)})
@@ -57,8 +69,7 @@ def main():
 
     latent0 = (icr.zero_xi(), priors.zero_xi())
     t0 = time.time()
-    latent, losses = map_fit(jax.random.PRNGKey(1), ll, fwd, latent0, y,
-                             steps=args.steps, lr=2e-2)
+    latent, losses = map_fit(ll, fwd, latent0, y, steps=args.steps, lr=2e-2)
     dt = time.time() - t0
     rec = np.asarray(fwd(latent).reshape(-1))
     rho_hat = float(priors(latent[1])["rho"])

@@ -29,8 +29,9 @@ def main():
     dt = time.time() - t0
     for i, r in enumerate(reqs):
         print(f"req{i}: prompt={list(r.prompt[:4])}... -> {r.out}")
-    print(f"\n{server.tokens_served} tokens in {dt:.1f}s "
-          f"({server.tokens_served/dt:.1f} tok/s, {args.arch} reduced)")
+    print(f"\n{server.decode_tokens} decode + {server.prefill_tokens} "
+          f"prefill tokens in {dt:.1f}s ({server.decode_tokens/dt:.1f} "
+          f"decode tok/s, {args.arch} reduced)")
 
 
 if __name__ == "__main__":

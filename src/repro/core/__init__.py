@@ -21,6 +21,7 @@ from .refine import (
     axis_refinement_matrices_level,
     level0_sqrt,
     refine_level,
+    refine_level_T,
     refinement_matrices_level,
 )
 from .icr import ICR
@@ -46,7 +47,8 @@ __all__ = [
     "galactic_dust_chart",
     "Kernel", "KERNELS", "matern32", "matern52", "rbf", "exponential",
     "kernel_matrix",
-    "LevelGeom", "refine_level", "refinement_matrices_level",
+    "LevelGeom", "refine_level", "refine_level_T",
+    "refinement_matrices_level",
     "axis_refinement_matrices_level", "level0_sqrt",
     "ICR",
     "cov_errors", "exact_cov", "exact_posterior", "exact_sample", "gauss_kl",

@@ -141,6 +141,35 @@ class ICR:
                 )
         return field
 
+    def apply_sqrt_T(self, mats: dict, v: Array) -> List[Array]:
+        """Apply sqrt(K_ICR)ᵀ to a field-space vector (paper §3.2, Eq. 3).
+
+        The transpose of the generative map — the second half of one
+        inference evaluation ("two applications of the square root and its
+        VJP", paper §1) and the workhorse of Wiener-filter-style residual
+        diagnostics ``sqrt(K)ᵀ (y − s)``. apply_sqrt is linear in ξ at fixed
+        matrices, so the VJP at the origin IS the transpose; with
+        ``use_pallas=True`` it runs the hand-written adjoint kernels level
+        by level in reverse (kernels/icr_refine.py), never the jnp
+        reference.
+
+        v: (*final_shape)  ->  ξ-shaped list (see xi_shapes).
+
+        Jitted (cached per instance) so XLA dead-code-eliminates the
+        zero-ξ forward the VJP construction would otherwise execute — an
+        eager call pays only the adjoint chain.
+        """
+        fn = self.__dict__.get("_apply_sqrt_T_jit")
+        if fn is None:
+            def transpose(mats, v):
+                zero = self.zero_xi(dtype=v.dtype)
+                _, vjp = jax.vjp(lambda xi: self.apply_sqrt(mats, xi), zero)
+                return vjp(v)[0]
+
+            fn = jax.jit(transpose)
+            object.__setattr__(self, "_apply_sqrt_T_jit", fn)
+        return fn(mats, v)
+
     def _stationary_level(self, lvl: int) -> bool:
         """True iff level `lvl` refines with a single shared stencil.
 

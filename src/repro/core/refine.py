@@ -298,3 +298,22 @@ def refine_level(coarse: Array, xi: Array, r: Array, sqrt_d: Array,
         interleave += [a, nd + a]
     fine = fine.transpose(interleave)
     return fine.reshape(geom.fine_shape)
+
+
+def refine_level_T(fine_cot: Array, r: Array, sqrt_d: Array,
+                   geom: LevelGeom):
+    """Adjoint of ``refine_level`` in (coarse, xi) at fixed matrices.
+
+    The refinement application is linear in (coarse, xi), so its VJP at the
+    origin IS the transpose operator. This is the jnp reference the fused
+    adjoint kernels (repro.kernels) are validated against, and the per-level
+    building block of ``ICR.apply_sqrt_T``.
+
+    fine_cot: (*fine_shape) -> (dcoarse: (*coarse_shape),
+    dxi: (prod(T), n_fsz^d)).
+    """
+    nd = len(geom.coarse_shape)
+    zc = jnp.zeros(geom.coarse_shape, fine_cot.dtype)
+    zx = jnp.zeros((int(np.prod(geom.T)), geom.n_fsz**nd), fine_cot.dtype)
+    _, vjp = jax.vjp(lambda c, x: refine_level(c, x, r, sqrt_d, geom), zc, zx)
+    return vjp(fine_cot)

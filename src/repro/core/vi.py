@@ -37,13 +37,18 @@ def neg_log_joint(log_likelihood: Callable, forward: Callable):
     return loss
 
 
-def map_fit(key, log_likelihood, forward, xi0: PyTree, y,
+def map_fit(log_likelihood, forward, xi0: PyTree, y,
             steps: int = 300, lr: float = 3e-2, jit: bool = True):
-    """MAP estimate of ξ. Returns (xi_hat, losses)."""
+    """MAP estimate of ξ (deterministic — no PRNG key involved).
+
+    Returns (xi_hat, losses). `forward` may route through the fused Pallas
+    path (``ICR(use_pallas=True)``): every gradient step then runs the
+    hand-written adjoint kernels, not the jnp reference. With ``jit=True``
+    the whole scan is compiled once; ``jit=False`` runs op-by-op (debugging).
+    """
     loss_fn = neg_log_joint(log_likelihood, forward)
     opt = adamw(linear_warmup_cosine(lr, steps // 10 + 1, steps),
                 weight_decay=0.0)
-    state = opt.init(xi0)
 
     def step(carry, _):
         xi, st = carry
@@ -51,10 +56,12 @@ def map_fit(key, log_likelihood, forward, xi0: PyTree, y,
         xi, st = opt.update(g, st, xi)
         return (xi, st), l
 
-    scan = jax.lax.scan
+    def run(xi0, state):
+        return jax.lax.scan(step, (xi0, state), None, length=steps)
+
     if jit:
-        scan = jax.jit(jax.lax.scan, static_argnums=0)
-    (xi, _), losses = jax.lax.scan(step, (xi0, state), None, length=steps)
+        run = jax.jit(run)
+    (xi, _), losses = run(xi0, opt.init(xi0))
     return xi, losses
 
 

@@ -1,16 +1,23 @@
 """Pallas TPU kernels for the ICR refinement hot-spot.
 
-  icr_refine.py — pl.pallas_call kernels (stationary + charted variants)
+  icr_refine.py — pl.pallas_call kernels (stationary + charted variants),
+                  forward AND adjoint, glued by jax.custom_vjp
   nd.py         — fused N-D refinement as per-axis 1-D passes
   dispatch.py   — per-level backend/route selection + VMEM autotune
   ops.py        — jit'd wrappers (auto interpret=True off-TPU)
   ref.py        — pure-jnp oracles the kernels are validated against
 """
 from . import dispatch, nd, ops, ref
-from .icr_refine import refine_charted_pallas, refine_stationary_pallas
+from .icr_refine import (
+    refine_charted_adjoint_pallas,
+    refine_charted_pallas,
+    refine_stationary_adjoint_pallas,
+    refine_stationary_pallas,
+)
 from .nd import refine_axes
 
 __all__ = [
     "dispatch", "nd", "ops", "ref",
     "refine_stationary_pallas", "refine_charted_pallas", "refine_axes",
+    "refine_stationary_adjoint_pallas", "refine_charted_adjoint_pallas",
 ]

@@ -19,6 +19,13 @@ Routing is decided per level from the geometry alone:
 This replaces the ad-hoc shape guards that used to live in
 ``repro.kernels.ops``. The VMEM tile size (``block_families``) is autotuned
 against a per-core VMEM budget instead of being a hard-coded 256.
+
+``refine`` is fully differentiable on every route: the 1-D kernel entry
+points carry hand-written adjoint Pallas kernels via ``jax.custom_vjp``
+(icr_refine.py, DESIGN.md §9), so ``jax.grad``/``jax.vjp`` through any
+structured route — including the per-axis N-D passes and the interpret
+backend — runs the fused backward, never the jnp reference. ``plan()``
+reports the backward routing per level next to the forward.
 """
 from __future__ import annotations
 
@@ -28,7 +35,11 @@ import jax.numpy as jnp
 from repro.core.refine import LevelGeom, refine_level
 
 from . import nd as _nd
-from .icr_refine import refine_charted_pallas, refine_stationary_pallas
+from .icr_refine import (
+    halo_floor,
+    refine_charted_pallas,
+    refine_stationary_pallas,
+)
 
 Array = jnp.ndarray
 
@@ -50,26 +61,32 @@ VMEM_BUDGET_BYTES = 64 * 2**20
 def autotune_block_families(t: int, n_csz: int, n_fsz: int, *, charted: bool,
                             itemsize: int = 4,
                             vmem_budget: int = VMEM_BUDGET_BYTES) -> int:
-    """Largest power-of-two family block whose working set fits the budget.
+    """Largest power-of-two family block whose working set fits the budget,
+    clamped to the family count ``t`` (a block larger than the level is pure
+    padding — tiny levels used to get the floor of 8 regardless of ``t``).
 
     Per grid step the kernel holds: the coarse block + its halo view
     (``2*b_f*s``), the xi block and the output block (``2*b_f*n_fsz``), and
     the matrices — shared ``(n_fsz, n_csz)+(n_fsz, n_fsz)`` when stationary,
     per-family (scaling with ``b_f``) when charted. Everything is double
     buffered by the Pallas pipeline, hence the factor 2.
+
+    The returned block never drops below ``q_max = (n_csz-1)//s``: the
+    kernels' one-block halo view must cover the window overhang.
     """
     s = max(1, n_fsz // 2)
-    best, b_f = 8, 8
+    floor = max(min(8, t), halo_floor(n_csz, n_fsz), 1)
+    best, b_f = floor, floor
     while True:
         per = 2 * b_f * s + 2 * b_f * n_fsz + n_fsz * n_csz + n_fsz * n_fsz
         if charted:
             per += b_f * (n_fsz * n_csz + n_fsz * n_fsz)
-        if 2 * itemsize * per > vmem_budget:
-            break
+        if b_f > floor and 2 * itemsize * per > vmem_budget:
+            break  # floor is always returned, budget-fitting or not
         best = b_f
         if b_f >= t:
             break
-        b_f *= 2
+        b_f = min(2 * b_f, t)
     return best
 
 
@@ -92,11 +109,16 @@ def route_for(geom: LevelGeom, *, have_axis_mats: bool = False) -> str:
 
 def plan(chart, *, have_axis_mats: bool | None = None,
          platform: str | None = None) -> list:
-    """Per-level routing decisions for `chart` — introspection for examples,
-    benchmarks and tests (no arrays touched).
+    """Per-level forward AND backward routing decisions for `chart` —
+    introspection for examples, benchmarks and tests (no arrays touched).
 
     have_axis_mats defaults to ``chart.ndim > 1`` (ICR.matrices computes the
     per-axis factors for every N-D chart when use_pallas=True).
+
+    Each entry carries a ``"vjp"`` sub-dict describing how the *backward*
+    pass of that level executes: structured routes run the hand-written
+    adjoint kernels (same backend, same tiling — the adjoint's working set
+    mirrors the forward's), the reference route is jnp autodiff.
     """
     if have_axis_mats is None:
         have_axis_mats = chart.ndim > 1
@@ -119,8 +141,14 @@ def plan(chart, *, have_axis_mats: bool | None = None,
                     ag.T[0], ag.n_csz, ag.n_fsz,
                     charted=ag.kept_T[0] > 1,
                 )
+        vjp = {
+            "route": (ROUTE_REFERENCE if route == ROUTE_REFERENCE
+                      else route + "-adjoint"),
+            "backend": backend,
+            "block_families": dict(blocks),
+        }
         out.append({"level": lvl, "route": route, "backend": backend,
-                    "block_families": blocks})
+                    "block_families": blocks, "vjp": vjp})
     return out
 
 
@@ -133,6 +161,10 @@ def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
     carries the per-axis factors ``(rs, ds)`` from
     ``axis_refinement_matrices_level``, enabling the fused N-D path (when
     present, the joint ``r``/``d`` are ignored on N-D levels).
+
+    Differentiable w.r.t. every array argument on every route: the kernel
+    entry points carry custom VJPs running the fused adjoint kernels, the
+    surrounding pads/reshapes are plain jnp.
     """
     route = route_for(geom, have_axis_mats=axis_mats is not None)
     if backend is None and route != ROUTE_REFERENCE:

@@ -25,6 +25,19 @@ Two variants:
 
 Both carry arbitrary leading batch dims (chart-invariant axes broadcast,
 paper §4.3 symmetry optimization).
+
+Adjoints (DESIGN.md §9): both entry points carry a ``jax.custom_vjp`` whose
+backward runs hand-written *adjoint* Pallas kernels. The transpose of the
+window-contract is a halo-overlapped scatter-add — coarse element ``t·s + k``
+receives ``Rᵀ g`` contributions from the ≤ ``q_max+1`` families whose window
+covers it — which fuses exactly like the forward: the adjoint kernel reads
+the fine cotangent twice (main + previous-block halo view), contracts on the
+MXU, and overlap-adds via the same static row-shifted slices as
+``_window_cols`` run in reverse. No gather, no atomic, every BlockSpec stays
+a plain Blocked map. Matrix cotangents (∂R, ∂sqrtD) are parameter-sized
+reductions, computed as jnp einsums outside the kernel and *only* when the
+matrices are perturbed (``symbolic_zeros``): fixed-matrix MAP/ADVI inference
+never materializes the window tensor on the backward pass either.
 """
 from __future__ import annotations
 
@@ -32,7 +45,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.custom_derivatives import SymbolicZero
 from jax.experimental import pallas as pl
+
+from .ref import windows_1d
 
 Array = jnp.ndarray
 
@@ -89,12 +105,88 @@ def _charted_kernel(coarse_ref, halo_ref, xi_ref, r_ref, d_ref, out_ref,
     out_ref[0] = fine.reshape(b_f * n_fsz).astype(out_ref.dtype)
 
 
+def _overlap_add_cols(dw: Array, b_f: int, s: int, n_csz: int) -> Array:
+    """(B_f, s) coarse-cotangent rows from (B_f + q_max, n_csz) window-
+    cotangent rows — ``_window_cols`` run in reverse.
+
+    dcoarse[t'·s + r] = Σ_q dw[t' − q, q·s + r]: each q-term is the same
+    static row-shifted slice the forward used to *build* column ``q·s + r``,
+    only shifted the other way (``q_max − q`` instead of ``q``). The halo
+    families (previous block's tail) arrive as the leading q_max rows, so the
+    scatter-add across the block boundary is a plain slice — no gather.
+    """
+    q_max = (n_csz - 1) // s
+    acc = jnp.zeros((b_f, s), jnp.float32)
+    for q in range(q_max + 1):
+        width = min(s, n_csz - q * s)
+        if width <= 0:
+            break
+        piece = dw[q_max - q : q_max - q + b_f, q * s : q * s + width]
+        if width < s:
+            piece = jnp.concatenate(
+                [piece, jnp.zeros((b_f, s - width), piece.dtype)], axis=-1
+            )
+        acc = acc + piece
+    return acc
+
+
+def _stationary_adjoint_kernel(g_ref, gh_ref, r_ref, d_ref, dc_ref, dxi_ref,
+                               *, b_f: int, s: int, n_csz: int, n_fsz: int):
+    q_max = (n_csz - 1) // s
+    g = g_ref[0]                                          # (B_f, n_fsz)
+    r = r_ref[...]                                        # (n_fsz, n_csz)
+    d = d_ref[...]                                        # (n_fsz, n_fsz)
+    g_ext = g
+    if q_max > 0:
+        g_ext = jnp.concatenate([gh_ref[0, b_f - q_max :], g], axis=0)
+    dw = jnp.dot(g_ext, r, preferred_element_type=jnp.float32)
+    acc = _overlap_add_cols(dw, b_f, s, n_csz)            # (B_f, s)
+    dc_ref[0] = acc.reshape(b_f * s).astype(dc_ref.dtype)
+    dxi = jnp.dot(g, d, preferred_element_type=jnp.float32)
+    dxi_ref[0] = dxi.astype(dxi_ref.dtype)
+
+
+def _charted_adjoint_kernel(g_ref, gh_ref, rm_ref, rh_ref, d_ref,
+                            dc_ref, dxi_ref,
+                            *, b_f: int, s: int, n_csz: int, n_fsz: int):
+    q_max = (n_csz - 1) // s
+    g = g_ref[0]                                          # (B_f, n_fsz)
+    # dw[t] = R[t]ᵀ g[t] — batched matvec, per-family stencils
+    dw = jax.lax.dot_general(
+        rm_ref[...], g, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                     # (B_f, n_csz)
+    if q_max > 0:
+        g_h = gh_ref[0, b_f - q_max :]                    # (q_max, n_fsz)
+        r_h = rh_ref[b_f - q_max :]                       # (q_max, n_fsz, n_csz)
+        dw_h = jax.lax.dot_general(
+            r_h, g_h, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )
+        dw = jnp.concatenate([dw_h, dw], axis=0)
+    acc = _overlap_add_cols(dw, b_f, s, n_csz)
+    dc_ref[0] = acc.reshape(b_f * s).astype(dc_ref.dtype)
+    dxi = jax.lax.dot_general(
+        d_ref[...], g, (((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    dxi_ref[0] = dxi.astype(dxi_ref.dtype)
+
+
+def halo_floor(n_csz: int, n_fsz: int) -> int:
+    """Minimum family block ``q_max``: the kernels' one-block halo view must
+    cover the window overhang, forward and adjoint alike. The single source
+    of truth for this clamp (dispatch autotune uses it too)."""
+    s = max(1, n_fsz // 2)
+    return (n_csz - 1) // s
+
+
 def _common_shapes(coarse, xi, n_csz, n_fsz, block_families):
     if xi.ndim < 2:
         raise ValueError("xi must be (..., T, n_fsz)")
     t = xi.shape[-2]
     s = n_fsz // 2
-    b_f = min(block_families, t)
+    b_f = max(min(block_families, t), halo_floor(n_csz, n_fsz))
     nblk = -(-t // b_f)  # ceil
     return t, s, b_f, nblk
 
@@ -115,19 +207,9 @@ def _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz):
     return coarse, xi
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_csz", "n_fsz", "block_families", "interpret"),
-)
-def refine_stationary_pallas(coarse: Array, xi: Array, r: Array, d: Array,
-                             *, n_csz: int, n_fsz: int,
-                             block_families: int = 256,
-                             interpret: bool = False) -> Array:
-    """Fused stationary refinement. See module docstring.
-
-    coarse: (B, L) halo-padded (L >= T*s + n_csz - s); xi: (B, T, n_fsz)
-    r: (n_fsz, n_csz); d: (n_fsz, n_fsz)  ->  fine: (B, T*n_fsz)
-    """
+def _refine_stationary_impl(meta, coarse: Array, xi: Array, r: Array,
+                            d: Array) -> Array:
+    n_csz, n_fsz, block_families, interpret = meta
     t, s, b_f, nblk = _common_shapes(coarse, xi, n_csz, n_fsz, block_families)
     coarse, xi = _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz)
     batch = coarse.shape[0]
@@ -154,19 +236,9 @@ def refine_stationary_pallas(coarse: Array, xi: Array, r: Array, d: Array,
     return out[:, : t * n_fsz]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("n_csz", "n_fsz", "block_families", "interpret"),
-)
-def refine_charted_pallas(coarse: Array, xi: Array, r: Array, d: Array,
-                          *, n_csz: int, n_fsz: int,
-                          block_families: int = 256,
-                          interpret: bool = False) -> Array:
-    """Fused charted refinement with per-family matrices (paper §4.3).
-
-    coarse: (B, L); xi: (B, T, n_fsz); r: (T, n_fsz, n_csz);
-    d: (T, n_fsz, n_fsz)  ->  fine: (B, T*n_fsz)
-    """
+def _refine_charted_impl(meta, coarse: Array, xi: Array, r: Array,
+                         d: Array) -> Array:
+    n_csz, n_fsz, block_families, interpret = meta
     t, s, b_f, nblk = _common_shapes(coarse, xi, n_csz, n_fsz, block_families)
     coarse, xi = _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz)
     pad_t = nblk * b_f - t
@@ -195,3 +267,217 @@ def refine_charted_pallas(coarse: Array, xi: Array, r: Array, d: Array,
         interpret=interpret,
     )(coarse, coarse, xi, r, d)
     return out[:, : t * n_fsz]
+
+
+# -- adjoint launches -----------------------------------------------------------
+def _adjoint_shapes(g, n_csz, n_fsz, block_families):
+    """Grid/padding for one adjoint launch. g: (B, T, n_fsz) fine cotangent.
+
+    The adjoint flips the halo direction: coarse-block i receives window
+    cotangents from its own g-block plus the *previous* block's tail. Front-
+    padding g by one zero block lets the halo view use index map ``i`` while
+    the main view uses ``i + 1`` (in-bounds at i = 0, zero contribution). One
+    extra grid step (nblk + 1) covers the coarse tail the last windows
+    overhang into; its main g-block is the zero back-padding.
+    """
+    t = g.shape[-2]
+    s = n_fsz // 2
+    b_f = max(min(block_families, t), halo_floor(n_csz, n_fsz))
+    nblk = -(-t // b_f)
+    pad = [(0, 0)] * (g.ndim - 2) + [(b_f, (nblk + 1) * b_f - t), (0, 0)]
+    return t, s, b_f, nblk, jnp.pad(g, pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("coarse_len", "n_csz", "n_fsz", "block_families",
+                     "interpret"),
+)
+def refine_stationary_adjoint_pallas(g: Array, r: Array, d: Array, *,
+                                     coarse_len: int, n_csz: int, n_fsz: int,
+                                     block_families: int = 256,
+                                     interpret: bool = False):
+    """Fused adjoint of ``refine_stationary_pallas`` in (coarse, xi).
+
+    g: (B, T*n_fsz) fine cotangent -> (dcoarse: (B, coarse_len),
+    dxi: (B, T, n_fsz)). One launch computes both: the halo-overlapped
+    scatter-add of the window cotangents ``g R`` and the noise transpose
+    ``g D`` share the fine-cotangent read.
+    """
+    batch = g.shape[0]
+    g = g.reshape(batch, -1, n_fsz)
+    t, s, b_f, nblk, g_pad = _adjoint_shapes(g, n_csz, n_fsz, block_families)
+    b_c = b_f * s
+
+    kern = functools.partial(
+        _stationary_adjoint_kernel, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+    )
+    dc, dxi = pl.pallas_call(
+        kern,
+        grid=(batch, nblk + 1),
+        in_specs=[
+            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i + 1, 0)),  # main
+            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),      # halo
+            pl.BlockSpec((n_fsz, n_csz), lambda b, i: (0, 0)),
+            pl.BlockSpec((n_fsz, n_fsz), lambda b, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b_c), lambda b, i: (b, i)),
+            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, (nblk + 1) * b_c), g.dtype),
+            jax.ShapeDtypeStruct((batch, (nblk + 1) * b_f, n_fsz), g.dtype),
+        ],
+        interpret=interpret,
+    )(g_pad, g_pad, r, d)
+    return dc[:, :coarse_len], dxi[:, :t]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("coarse_len", "n_csz", "n_fsz", "block_families",
+                     "interpret"),
+)
+def refine_charted_adjoint_pallas(g: Array, r: Array, d: Array, *,
+                                  coarse_len: int, n_csz: int, n_fsz: int,
+                                  block_families: int = 256,
+                                  interpret: bool = False):
+    """Fused adjoint of ``refine_charted_pallas`` (per-family matrices).
+
+    The halo families' window cotangents need the *previous* block's
+    stencils, so r rides along twice exactly like g (main + shifted view).
+    """
+    batch = g.shape[0]
+    g = g.reshape(batch, -1, n_fsz)
+    t, s, b_f, nblk, g_pad = _adjoint_shapes(g, n_csz, n_fsz, block_families)
+    b_c = b_f * s
+    pad_fam = [(b_f, (nblk + 1) * b_f - t)]
+    r_pad = jnp.pad(r, pad_fam + [(0, 0), (0, 0)])
+    d_pad = jnp.pad(d, pad_fam + [(0, 0), (0, 0)])
+
+    kern = functools.partial(
+        _charted_adjoint_kernel, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+    )
+    dc, dxi = pl.pallas_call(
+        kern,
+        grid=(batch, nblk + 1),
+        in_specs=[
+            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i + 1, 0)),  # main
+            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),      # halo
+            pl.BlockSpec((b_f, n_fsz, n_csz), lambda b, i: (i + 1, 0, 0)),
+            pl.BlockSpec((b_f, n_fsz, n_csz), lambda b, i: (i, 0, 0)),
+            pl.BlockSpec((b_f, n_fsz, n_fsz), lambda b, i: (i + 1, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b_c), lambda b, i: (b, i)),
+            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, (nblk + 1) * b_c), g.dtype),
+            jax.ShapeDtypeStruct((batch, (nblk + 1) * b_f, n_fsz), g.dtype),
+        ],
+        interpret=interpret,
+    )(g_pad, g_pad, r_pad, r_pad, d_pad)
+    return dc[:, :coarse_len], dxi[:, :t]
+
+
+# -- custom VJP registration ----------------------------------------------------
+# The matrices (r, d) only need cotangents when the kernel parameters θ are
+# being learned; symbolic_zeros=True lets the forward record perturbation per
+# argument so fixed-matrix inference skips the window-tensor einsums. The
+# flags are encoded in the residue *structure* (() vs None) — pytree treedefs
+# are static, so the backward branches at trace time.
+def _matrix_cotangents(coarse, xi, g3, r, d, r_pert, d_pert, *, charted):
+    s = r.shape[-2] // 2
+    t = g3.shape[-2]
+    if r_pert is not None:
+        w = windows_1d(coarse, t, r.shape[-1], s)
+        eq = "...tf,...tc->tfc" if charted else "...tf,...tc->fc"
+        dr = jnp.einsum(eq, g3, w).astype(r.dtype)
+    else:
+        dr = jnp.zeros_like(r)
+    if d_pert is not None:
+        eq = "...tf,...tj->tfj" if charted else "...tf,...tj->fj"
+        dd = jnp.einsum(eq, g3, xi).astype(d.dtype)
+    else:
+        dd = jnp.zeros_like(d)
+    return dr, dd
+
+
+def _make_refine_vjp(impl, adjoint, *, charted):
+    """custom_vjp wrapper shared by both kernel variants: residual packing,
+    symbolic-zero handling, adjoint dispatch and matrix-cotangent gating
+    differ only in (impl, adjoint, charted)."""
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+    def refine(meta, coarse, xi, r, d):
+        return impl(meta, coarse, xi, r, d)
+
+    def fwd(meta, coarse, xi, r, d):
+        out = impl(meta, coarse.value, xi.value, r.value, d.value)
+        res = (coarse.value, xi.value, r.value, d.value,
+               () if r.perturbed else None, () if d.perturbed else None)
+        return out, res
+
+    def bwd(meta, res, g):
+        n_csz, n_fsz, block_families, interpret = meta
+        coarse, xi, r, d, r_pert, d_pert = res
+        if isinstance(g, SymbolicZero):
+            return (jnp.zeros_like(coarse), jnp.zeros_like(xi),
+                    jnp.zeros_like(r), jnp.zeros_like(d))
+        dc, dxi = adjoint(
+            g, r, d, coarse_len=coarse.shape[-1], n_csz=n_csz, n_fsz=n_fsz,
+            block_families=block_families, interpret=interpret,
+        )
+        g3 = g.reshape(g.shape[:-1] + (xi.shape[-2], n_fsz))
+        dr, dd = _matrix_cotangents(coarse, xi, g3, r, d, r_pert, d_pert,
+                                    charted=charted)
+        return dc.astype(coarse.dtype), dxi.astype(xi.dtype), dr, dd
+
+    refine.defvjp(fwd, bwd, symbolic_zeros=True)
+    return refine
+
+
+_refine_stationary = _make_refine_vjp(
+    _refine_stationary_impl, refine_stationary_adjoint_pallas, charted=False)
+_refine_charted = _make_refine_vjp(
+    _refine_charted_impl, refine_charted_adjoint_pallas, charted=True)
+
+
+# -- public entry points --------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_csz", "n_fsz", "block_families", "interpret"),
+)
+def refine_stationary_pallas(coarse: Array, xi: Array, r: Array, d: Array,
+                             *, n_csz: int, n_fsz: int,
+                             block_families: int = 256,
+                             interpret: bool = False) -> Array:
+    """Fused stationary refinement (differentiable). See module docstring.
+
+    coarse: (B, L) halo-padded (L >= T*s + n_csz - s); xi: (B, T, n_fsz)
+    r: (n_fsz, n_csz); d: (n_fsz, n_fsz)  ->  fine: (B, T*n_fsz)
+    """
+    return _refine_stationary(
+        (n_csz, n_fsz, block_families, interpret), coarse, xi, r, d
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_csz", "n_fsz", "block_families", "interpret"),
+)
+def refine_charted_pallas(coarse: Array, xi: Array, r: Array, d: Array,
+                          *, n_csz: int, n_fsz: int,
+                          block_families: int = 256,
+                          interpret: bool = False) -> Array:
+    """Fused charted refinement with per-family matrices (paper §4.3),
+    differentiable via the hand-written adjoint kernels.
+
+    coarse: (B, L); xi: (B, T, n_fsz); r: (T, n_fsz, n_csz);
+    d: (T, n_fsz, n_fsz)  ->  fine: (B, T*n_fsz)
+    """
+    return _refine_charted(
+        (n_csz, n_fsz, block_families, interpret), coarse, xi, r, d
+    )

@@ -21,6 +21,13 @@ pixels per side in HBM once per pass.
 
 The jnp ground truth is ``repro.kernels.ref.refine_axes_ref`` (written
 independently); parity is asserted in tests/test_kernels_pallas.py.
+
+Differentiation: the 1-D kernel entry points carry custom VJPs (fused
+adjoint kernels, DESIGN.md §9), and everything else here — moveaxis,
+reshapes, the ξ pre-contraction einsums, the reflect pad — is plain jnp. So
+``jax.grad`` through ``refine_axes`` runs the per-axis passes in reverse,
+each one a fused adjoint launch: the N-D backward is Kronecker-factored
+exactly like the forward, with no joint window tensor ever materialized.
 """
 from __future__ import annotations
 

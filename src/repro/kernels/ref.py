@@ -22,6 +22,13 @@ def coarse_len(t: int, n_csz: int, n_fsz: int) -> int:
     return t * s + (n_csz - s)
 
 
+def windows_1d(coarse: Array, t: int, n_csz: int, s: int) -> Array:
+    """(..., T, n_csz) family windows from a halo-padded (..., L) coarse
+    array via static strided slices (window t = coarse[t*s : t*s + n_csz])."""
+    return jnp.stack([coarse[..., k : k + s * (t - 1) + 1 : s]
+                      for k in range(n_csz)], axis=-1)
+
+
 def refine_stationary_ref(coarse: Array, xi: Array, r: Array,
                           sqrt_d: Array) -> Array:
     """Stationary refinement (paper Eq. 11–12), one shared stencil.
@@ -34,8 +41,7 @@ def refine_stationary_ref(coarse: Array, xi: Array, r: Array,
     n_fsz, n_csz = r.shape
     s = n_fsz // 2
     t = xi.shape[-2]
-    w = jnp.stack([coarse[..., k : k + s * (t - 1) + 1 : s]
-                   for k in range(n_csz)], axis=-1)  # (..., T, n_csz)
+    w = windows_1d(coarse, t, n_csz, s)  # (..., T, n_csz)
     fine = jnp.einsum("...tc,fc->...tf", w, r)
     fine = fine + jnp.einsum("...tj,fj->...tf", xi, sqrt_d)
     return fine.reshape(*fine.shape[:-2], t * n_fsz)
@@ -111,8 +117,57 @@ def refine_charted_ref(coarse: Array, xi: Array, r: Array,
     """
     t, n_fsz, n_csz = r.shape
     s = n_fsz // 2
-    w = jnp.stack([coarse[..., k : k + s * (t - 1) + 1 : s]
-                   for k in range(n_csz)], axis=-1)  # (..., T, n_csz)
+    w = windows_1d(coarse, t, n_csz, s)  # (..., T, n_csz)
     fine = jnp.einsum("...tc,tfc->...tf", w, r)
     fine = fine + jnp.einsum("...tj,tfj->...tf", xi, sqrt_d)
     return fine.reshape(*fine.shape[:-2], t * n_fsz)
+
+
+# -- adjoints (ground truth for the custom-VJP Pallas kernels) ------------------
+def overlap_add_1d(dw: Array, coarse_len: int, s: int) -> Array:
+    """Adjoint of ``windows_1d``: scatter-add overlapping window cotangents
+    back onto the coarse grid. dw: (..., T, n_csz) -> (..., coarse_len).
+
+    dcoarse[t*s + k] += dw[t, k]; written with the same static strided
+    slices as the forward (``.at[...].add`` on a strided view — the scatter
+    pattern is an overlap-add, never a gather).
+    """
+    t, n_csz = dw.shape[-2], dw.shape[-1]
+    dc = jnp.zeros(dw.shape[:-2] + (coarse_len,), dw.dtype)
+    for k in range(n_csz):
+        dc = dc.at[..., k : k + s * (t - 1) + 1 : s].add(dw[..., k])
+    return dc
+
+
+def refine_stationary_vjp_ref(coarse: Array, xi: Array, r: Array,
+                              sqrt_d: Array, g: Array):
+    """Hand-derived VJP of ``refine_stationary_ref`` (all four cotangents).
+
+    g: (..., T*n_fsz) cotangent of fine -> (dcoarse, dxi, dr, dd).
+    """
+    n_fsz, n_csz = r.shape
+    s = n_fsz // 2
+    t = xi.shape[-2]
+    g3 = g.reshape(g.shape[:-1] + (t, n_fsz))
+    dw = jnp.einsum("...tf,fc->...tc", g3, r)
+    dcoarse = overlap_add_1d(dw, coarse.shape[-1], s)
+    dxi = jnp.einsum("...tf,fj->...tj", g3, sqrt_d)
+    w = windows_1d(coarse, t, n_csz, s)
+    dr = jnp.einsum("...tf,...tc->fc", g3, w)
+    dd = jnp.einsum("...tf,...tj->fj", g3, xi)
+    return dcoarse, dxi, dr, dd
+
+
+def refine_charted_vjp_ref(coarse: Array, xi: Array, r: Array,
+                           sqrt_d: Array, g: Array):
+    """Hand-derived VJP of ``refine_charted_ref`` (per-family matrices)."""
+    t, n_fsz, n_csz = r.shape
+    s = n_fsz // 2
+    g3 = g.reshape(g.shape[:-1] + (t, n_fsz))
+    dw = jnp.einsum("...tf,tfc->...tc", g3, r)
+    dcoarse = overlap_add_1d(dw, coarse.shape[-1], s)
+    dxi = jnp.einsum("...tf,tfj->...tj", g3, sqrt_d)
+    w = windows_1d(coarse, t, n_csz, s)
+    dr = jnp.einsum("...tf,...tc->tfc", g3, w)
+    dd = jnp.einsum("...tf,...tj->tfj", g3, xi)
+    return dcoarse, dxi, dr, dd

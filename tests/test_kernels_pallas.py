@@ -15,6 +15,7 @@ from repro.core.refine import (
     LevelGeom,
     axis_refinement_matrices_level,
     refine_level,
+    refine_level_T,
     refinement_matrices_level,
 )
 from repro.kernels import dispatch, nd
@@ -288,8 +289,33 @@ class TestDispatch:
         per = (2 * small * s + 2 * small * fsz + fsz * csz + fsz * fsz
                + small * (fsz * csz + fsz * fsz))
         assert 2 * 4 * per <= dispatch.VMEM_BUDGET_BYTES
-        # never larger than needed: tiny T yields a tiny block
-        assert dispatch.autotune_block_families(5, 5, 4, charted=False) == 8
+
+    def test_autotune_clamps_to_tiny_family_counts(self):
+        """Regression: levels with t < 8 used to get the floor-8 block (pure
+        padding); the block is now clamped to the family count."""
+        assert dispatch.autotune_block_families(5, 5, 4, charted=False) == 5
+        for t in range(1, 8):
+            b = dispatch.autotune_block_families(t, 5, 4, charted=True)
+            # never exceed t except to cover the halo overhang q_max
+            assert b == max(t, (5 - 1) // 2)
+        # the q_max floor: big window over a tiny level still gets a halo-
+        # covering block (q_max = 4 here), and the kernel must stay correct
+        rng = np.random.default_rng(5)
+        ncsz, nfsz, t = 5, 2, 3
+        b = dispatch.autotune_block_families(t, ncsz, nfsz, charted=False)
+        assert b == 4
+        coarse = _rand(rng, (1, R.coarse_len(t, ncsz, nfsz)), jnp.float32)
+        xi = _rand(rng, (1, t, nfsz), jnp.float32)
+        r = _rand(rng, (nfsz, ncsz), jnp.float32)
+        d = _rand(rng, (nfsz, nfsz), jnp.float32)
+        got = refine_stationary_pallas(coarse, xi, r, d, n_csz=ncsz,
+                                       n_fsz=nfsz, block_families=b,
+                                       interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(got),
+            np.asarray(R.refine_stationary_ref(coarse, xi, r, d)),
+            rtol=1e-5, atol=1e-5,
+        )
 
     def test_plan_dust_chart(self):
         c = galactic_dust_chart((6, 8, 8), n_levels=2)
@@ -338,3 +364,208 @@ class TestStationaryLevel:
             np.asarray(icr_pal.apply_sqrt(mats, xi)),
             rtol=1e-5, atol=1e-5,
         )
+
+
+# -- adjoint kernels / custom VJP (DESIGN.md §9) --------------------------------
+def _vjp_all(fn, args, g):
+    """All input cotangents of fn at args for output cotangent g."""
+    _, vjp = jax.vjp(fn, *args)
+    return vjp(g)
+
+
+@pytest.mark.parametrize("ncsz,nfsz", PARAMS)
+@pytest.mark.parametrize("t", [7, 64, 300])
+def test_stationary_vjp_matches_ref(ncsz, nfsz, t):
+    """jax.vjp of the fused kernel == jax.vjp of the jnp reference, all four
+    cotangents (coarse / xi / R / sqrtD), pinned at 1e-5."""
+    rng = np.random.default_rng(ncsz * 100 + nfsz + t)
+    batch = 2
+    coarse = _rand(rng, (batch, R.coarse_len(t, ncsz, nfsz)), jnp.float32)
+    xi = _rand(rng, (batch, t, nfsz), jnp.float32)
+    r = _rand(rng, (nfsz, ncsz), jnp.float32)
+    d = _rand(rng, (nfsz, nfsz), jnp.float32)
+    g = _rand(rng, (batch, t * nfsz), jnp.float32)
+    want = _vjp_all(R.refine_stationary_ref, (coarse, xi, r, d), g)
+    got = _vjp_all(
+        lambda c, x, rr, dd: refine_stationary_pallas(
+            c, x, rr, dd, n_csz=ncsz, n_fsz=nfsz, block_families=32,
+            interpret=True),
+        (coarse, xi, r, d), g)
+    # the hand-derived oracle must agree with autodiff of the reference too
+    oracle = R.refine_stationary_vjp_ref(coarse, xi, r, d, g)
+    for name, a, b, o in zip("coarse xi r d".split(), want, got, oracle):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-4, atol=1e-5, err_msg=f"d{name}")
+        np.testing.assert_allclose(np.asarray(o), np.asarray(a),
+                                   rtol=1e-4, atol=1e-5, err_msg=f"d{name}")
+
+
+@pytest.mark.parametrize("ncsz,nfsz", PARAMS)
+@pytest.mark.parametrize("t", [9, 128])
+def test_charted_vjp_matches_ref(ncsz, nfsz, t):
+    rng = np.random.default_rng(ncsz * 10 + nfsz + t)
+    coarse = _rand(rng, (2, R.coarse_len(t, ncsz, nfsz)), jnp.float32)
+    xi = _rand(rng, (2, t, nfsz), jnp.float32)
+    r = _rand(rng, (t, nfsz, ncsz), jnp.float32)
+    d = _rand(rng, (t, nfsz, nfsz), jnp.float32)
+    g = _rand(rng, (2, t * nfsz), jnp.float32)
+    want = _vjp_all(R.refine_charted_ref, (coarse, xi, r, d), g)
+    got = _vjp_all(
+        lambda c, x, rr, dd: refine_charted_pallas(
+            c, x, rr, dd, n_csz=ncsz, n_fsz=nfsz, block_families=32,
+            interpret=True),
+        (coarse, xi, r, d), g)
+    oracle = R.refine_charted_vjp_ref(coarse, xi, r, d, g)
+    for name, a, b, o in zip("coarse xi r d".split(), want, got, oracle):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-4, atol=1e-5, err_msg=f"d{name}")
+        np.testing.assert_allclose(np.asarray(o), np.asarray(a),
+                                   rtol=1e-4, atol=1e-5, err_msg=f"d{name}")
+
+
+@pytest.mark.parametrize("block", [4, 16, 1024])
+def test_adjoint_block_size_invariance(block):
+    """The backward must not depend on the VMEM tile size either."""
+    rng = np.random.default_rng(11)
+    ncsz, nfsz, t = 5, 4, 200
+    coarse = _rand(rng, (1, R.coarse_len(t, ncsz, nfsz)), jnp.float32)
+    xi = _rand(rng, (1, t, nfsz), jnp.float32)
+    r = _rand(rng, (nfsz, ncsz), jnp.float32)
+    d = _rand(rng, (nfsz, nfsz), jnp.float32)
+    g = _rand(rng, (1, t * nfsz), jnp.float32)
+    base = R.refine_stationary_vjp_ref(coarse, xi, r, d, g)
+    got = _vjp_all(
+        lambda c, x, rr, dd: refine_stationary_pallas(
+            c, x, rr, dd, n_csz=ncsz, n_fsz=nfsz, block_families=block,
+            interpret=True),
+        (coarse, xi, r, d), g)
+    for a, b in zip(base, got):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("chartf,name", ND_CHARTS,
+                         ids=[n for _, n in ND_CHARTS])
+def test_nd_axes_vjp_matches_oracle(chartf, name):
+    """jax.grad through the fused N-D per-axis passes == grad of the
+    independent jnp oracle, every level, both boundaries."""
+    c = chartf()
+    k = matern32.with_defaults(rho=3.0)()
+    for lvl in range(c.n_levels):
+        geom = LevelGeom.for_level(c, lvl)
+        rs, ds = axis_refinement_matrices_level(c, k, lvl)
+        rng = np.random.default_rng([lvl, *name.encode()])
+        field = jnp.asarray(rng.normal(size=geom.coarse_shape), jnp.float32)
+        f = int(np.prod(geom.T))
+        xi = jnp.asarray(
+            rng.normal(size=(f, geom.n_fsz ** len(geom.T))), jnp.float32)
+        v = jnp.asarray(rng.normal(size=geom.fine_shape), jnp.float32)
+        loss_pal = lambda fl, x: jnp.sum(
+            nd.refine_axes(fl, x, rs, ds, geom, interpret=True) * v)
+        loss_ref = lambda fl, x: jnp.sum(
+            R.refine_axes_ref(fl, x, rs, ds, T=geom.T, n_fsz=geom.n_fsz,
+                              boundary=geom.boundary, b=geom.b) * v)
+        got = jax.grad(loss_pal, argnums=(0, 1))(field, xi)
+        want = jax.grad(loss_ref, argnums=(0, 1))(field, xi)
+        for a, b in zip(want, got):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestICRGradParity:
+    """Acceptance: jax.grad through ICR(use_pallas=True).apply_sqrt matches
+    the reference-path gradient on 1-D/2-D/3-D charts."""
+
+    def _parity(self, icr_ref, icr_pal, mats, key, tol=1e-5):
+        xi = icr_ref.init_xi(key)
+        g_ref = jax.grad(
+            lambda xs: 0.5 * jnp.sum(icr_ref.apply_sqrt(mats, xs) ** 2))(xi)
+        g_pal = jax.grad(
+            lambda xs: 0.5 * jnp.sum(icr_pal.apply_sqrt(mats, xs) ** 2))(xi)
+        for a, b in zip(g_ref, g_pal):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("boundary", ["shrink", "reflect"])
+    def test_1d_stationary(self, boundary):
+        c = regular_chart(64, 2, boundary=boundary)
+        kern = matern32.with_defaults(rho=8.0)
+        icr_ref = ICR(chart=c, kernel=kern)
+        icr_pal = ICR(chart=c, kernel=kern, use_pallas=True)
+        self._parity(icr_ref, icr_pal, icr_ref.matrices(),
+                     jax.random.PRNGKey(0))
+
+    def test_1d_charted(self):
+        c = log_chart(32, 2, n_csz=5, n_fsz=4, delta0=0.05)
+        kern = matern32.with_defaults(rho=1.0)
+        icr_ref = ICR(chart=c, kernel=kern)
+        icr_pal = ICR(chart=c, kernel=kern, use_pallas=True)
+        self._parity(icr_ref, icr_pal, icr_ref.matrices(),
+                     jax.random.PRNGKey(1))
+
+    def test_theta_gradient_through_matrices(self):
+        """Learned-θ path: matrices are perturbed, so the VJP also carries
+        the (R, sqrtD) cotangents — fused must match reference."""
+        c = regular_chart(32, 2, boundary="reflect")
+        kern = matern32.with_defaults(rho=8.0)
+        icr_ref = ICR(chart=c, kernel=kern)
+        icr_pal = ICR(chart=c, kernel=kern, use_pallas=True)
+        xi = icr_ref.init_xi(jax.random.PRNGKey(3))
+        theta = lambda lr: {"rho": jnp.exp(lr), "sigma": 1.0}
+        g_ref = jax.grad(
+            lambda lr: 0.5 * jnp.sum(icr_ref(xi, theta(lr)) ** 2))(
+                jnp.asarray(2.0))
+        g_pal = jax.grad(
+            lambda lr: 0.5 * jnp.sum(icr_pal(xi, theta(lr)) ** 2))(
+                jnp.asarray(2.0))
+        np.testing.assert_allclose(float(g_pal), float(g_ref), rtol=1e-4)
+
+
+class TestApplySqrtT:
+    def test_adjoint_identity_3d_fused(self):
+        """<sqrt(K) ξ, v> == <ξ, sqrt(K)ᵀ v> through the fused adjoints."""
+        c = galactic_dust_chart((6, 8, 8), n_levels=2)
+        icr = ICR(chart=c, kernel=matern32.with_defaults(rho=0.5),
+                  use_pallas=True)
+        mats = icr.matrices()
+        xi = icr.init_xi(jax.random.PRNGKey(1))
+        v = jax.random.normal(jax.random.PRNGKey(2), icr.out_shape)
+        lhs = float(jnp.vdot(icr.apply_sqrt(mats, xi), v))
+        back = icr.apply_sqrt_T(mats, v)
+        assert [b.shape for b in back] == [tuple(s) for s in icr.xi_shapes()]
+        rhs = float(sum(jnp.vdot(a, b) for a, b in zip(xi, back)))
+        np.testing.assert_allclose(rhs, lhs, rtol=1e-4)
+
+    def test_matches_reference_transpose_1d(self):
+        """Fused apply_sqrt_T == reference apply_sqrt_T == per-level
+        refine_level_T chain."""
+        c = regular_chart(64, 2, boundary="reflect")
+        kern = matern32.with_defaults(rho=8.0)
+        icr_ref = ICR(chart=c, kernel=kern)
+        icr_pal = ICR(chart=c, kernel=kern, use_pallas=True)
+        mats = icr_ref.matrices()
+        v = jax.random.normal(jax.random.PRNGKey(4), icr_ref.out_shape)
+        want = icr_ref.apply_sqrt_T(mats, v)
+        got = icr_pal.apply_sqrt_T(mats, v)
+        for a, b in zip(want, got):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-5, atol=1e-5)
+        # hand-walk the levels in reverse with refine_level_T
+        cot = v
+        manual = []
+        for lvl in reversed(range(c.n_levels)):
+            geom = LevelGeom.for_level(c, lvl)
+            cot, dxi = refine_level_T(cot, mats["R"][lvl],
+                                      mats["sqrtD"][lvl], geom)
+            manual.append(dxi)
+        manual.append(mats["sqrt0"].T @ cot.reshape(-1))
+        for a, b in zip(want, reversed(manual)):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_plan_reports_fused_vjp(self):
+        c = galactic_dust_chart((6, 8, 8), n_levels=2)
+        for entry in dispatch.plan(c, platform="cpu"):
+            assert entry["vjp"]["route"] == dispatch.ROUTE_AXES_ND + "-adjoint"
+            assert entry["vjp"]["backend"] == dispatch.BACKEND_INTERPRET
+            assert entry["vjp"]["block_families"] == entry["block_families"]

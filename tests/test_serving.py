@@ -36,6 +36,44 @@ def test_generation_deterministic():
     assert gen() == gen()
 
 
+def test_temperature_sampling():
+    """temperature > 0 must actually sample (the old server always argmaxed)
+    — deterministically for a fixed seed, and usually differently from
+    greedy on a random-init model."""
+    cfg = get_arch("starcoder2-15b").reduced()
+    prompt = np.arange(1, 6)
+
+    def gen(temperature, seed=3):
+        srv = BatchedServer(cfg, batch_slots=1, s_max=32, seed=seed,
+                            temperature=temperature)
+        reqs = [Request(prompt=prompt.copy(), max_new=8)]
+        srv.run(reqs)
+        return reqs[0].out
+
+    assert gen(1.5) == gen(1.5)  # same seed -> same sample path
+    greedy = gen(0.0)
+    assert len(greedy) == 8
+    assert all(0 <= t < cfg.vocab_size for t in gen(1.5))
+    # near-uniform logits at init: 8 sampled tokens matching greedy exactly
+    # is (1/vocab)^8-unlikely; two seeds make a flake astronomically so
+    assert gen(5.0, seed=3) != greedy or gen(5.0, seed=4) != greedy
+
+
+def test_prefill_decode_token_accounting():
+    """tok/s reporting: prefill and decode counted separately (the old
+    tokens_served lumped prompt ingestion into the throughput figure)."""
+    cfg = get_arch("starcoder2-15b").reduced()
+    prompt = np.arange(1, 5)  # 4 prompt tokens
+    srv = BatchedServer(cfg, batch_slots=1, s_max=32, seed=0)
+    reqs = [Request(prompt=prompt.copy(), max_new=6)]
+    srv.run(reqs)
+    # the step that ingests the last prompt token emits the first decode
+    # token, so prefill counts len(prompt) - 1 steps
+    assert srv.decode_tokens == 6
+    assert srv.prefill_tokens == len(prompt) - 1
+    assert srv.tokens_served == srv.prefill_tokens + srv.decode_tokens
+
+
 def test_batching_does_not_change_output():
     """A request decoded alone must match the same request decoded
     alongside others (slot isolation)."""
