@@ -2,22 +2,39 @@
 
   accuracy  — paper Fig. 3 / §5.1 (covariance errors, KL parameter sweep)
   speed     — paper Fig. 4 / §5.2 (forward pass: ICR vs KISS-GP)
-  nd        — fused N-D Pallas path: 2-D/3-D parity (<=1e-5) + wall time
+  nd        — N-D Pallas paths: fused level megakernel vs per-axis passes
+              vs jnp reference — 2-D/3-D parity (<=1e-5) + wall time
+  batch     — batched-sample throughput: native sample-batch kernel dim
+              vs a per-sample loop (DESIGN.md §10)
   scaling   — paper Eq. 13 (O(N) check, log-log slope)
   vi        — §3.2 end-to-end: standardized GP regression (MAP)
   grad      — one value_and_grad step of the §3.2 loss: fused adjoint
               kernels vs the jnp reference path (training-time cost)
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--quick`` trims sizes for
-CI; ``--only <name>`` runs one table.
+CI; ``--only <name>`` runs one table; ``--json <path>`` additionally emits
+machine-readable rows (name, us_per_call, route, backend, estimated HBM
+bytes, bandwidth utilization against the TPU-v5e roofline constant — on
+CPU/interpret backends the utilization is the *would-be* number at TPU
+bandwidth, a traffic metric, not a measurement) so the perf trajectory is
+tracked across PRs (CI uploads ``BENCH_PR3.json``).
 """
 import argparse
+import json
+import platform
 import sys
 import time
 
+_ROWS = []
 
-def _report(name: str, value: float, derived: str = ""):
+
+def _report(name: str, value: float, derived: str = "", **extra):
     print(f"{name},{value:.6g},{derived}", flush=True)
+    row = {"name": name, "us_per_call": float(value), "derived": derived}
+    for key in ("route", "backend", "hbm_bytes", "bw_util"):
+        if key in extra and extra[key] is not None:
+            row[key] = extra[key]
+    _ROWS.append(row)
 
 
 def run_vi(report):
@@ -98,16 +115,39 @@ def run_grad(report, *, quick: bool = False):
             us = (time.perf_counter() - t0) / reps * 1e6
             timings[fused] = us
             bk = backend if fused else "jnp"
+            route = (dispatch.plan(chart)[-1]["route"] if fused
+                     else "reference")
             report(f"grad/{name}/{'fused' if fused else 'reference'}", us,
-                   f"N={int(np.prod(chart.final_shape))} backend={bk}")
+                   f"N={int(np.prod(chart.final_shape))} backend={bk}",
+                   route=route, backend=bk)
         report(f"grad/{name}/speedup", timings[False] / timings[True],
                f"reference/fused wall-time ratio ({backend})")
+
+
+def _write_json(path: str, *, quick: bool) -> None:
+    import jax
+
+    doc = {
+        "meta": {
+            "pr": "PR3",
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "quick": bool(quick),
+        },
+        "rows": _ROWS,
+    }
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+    print(f"wrote {len(_ROWS)} rows to {path}", file=sys.stderr)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable rows (BENCH_PR3.json)")
     args = ap.parse_args()
 
     from . import accuracy, speed
@@ -119,6 +159,7 @@ def main() -> None:
             else (256, 1024, 4096, 16384, 65536)),
         "nd": lambda: (speed.run_nd(_report),
                        accuracy.run_nd_cov(_report)),
+        "batch": lambda: speed.run_batch(_report, quick=args.quick),
         "scaling": lambda: speed.run_scaling(
             _report, sizes=(1024, 4096, 16384) if args.quick
             else (1024, 4096, 16384, 65536, 262144)),
@@ -132,6 +173,8 @@ def main() -> None:
         t0 = time.time()
         fn()
         _report(f"{name}/_table_wall_s", (time.time() - t0) * 1e6, "")
+    if args.json:
+        _write_json(args.json, quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -58,22 +58,37 @@ def run(report, sizes=(256, 1024, 4096, 16384, 65536)):
         report(f"speed/kissgp_n{n}", t_k * 1e6, f"N={n} t={t_k*1e3:.2f}ms")
 
 
-def run_nd(report):
-    """2-D and 3-D refinement through the fused Pallas path (DESIGN.md §4).
+def _bw_util(hbm_bytes: int, seconds: float) -> float:
+    """Achieved bytes/s over the TPU-v5e HBM roofline constant. On the CPU
+    interpret backend this is the *would-be* utilization at TPU bandwidth —
+    a traffic metric for the JSON trajectory, not a measurement."""
+    from repro.launch.mesh import HBM_BW
 
-    Runs each case through ``repro.kernels.nd.refine_axes`` (interpret mode
-    on CPU — the kernel body executes as pure jnp, checking the exact tiling)
-    and through the jnp reference ``repro.kernels.ref.refine_axes_ref``, and
-    reports wall time for both plus their relative error, which must be
-    <= 1e-5 (acceptance bar — the fused path is exact vs the reference).
+    return hbm_bytes / max(seconds, 1e-12) / HBM_BW
+
+
+def run_nd(report):
+    """2-D and 3-D refinement through the N-D Pallas paths (DESIGN.md §4/§10).
+
+    Benches the finest level three ways — the single-launch fused megakernel
+    (``nd_fused``), the per-axis passes (``nd.refine_axes``) and the jnp
+    reference oracle — in interpret mode on CPU (the kernel bodies execute
+    as pure jnp, checking the exact tiling). Both kernel paths must agree
+    with the oracle to <= 1e-5 (acceptance bar). Each row carries the
+    roofline HBM-byte estimate of its route so the JSON tracks the traffic
+    win next to the wall time (interpret-mode wall time measures emulation
+    overhead, not kernel speed).
     """
     from repro.core import matern32, regular_chart
     from repro.core.charts import galactic_dust_chart
     from repro.core.refine import LevelGeom, axis_refinement_matrices_level
     from repro.kernels import nd as knd
+    from repro.kernels import nd_fused as kfu
     from repro.kernels import ref as kref
-    from repro.kernels.dispatch import plan, ROUTE_AXES_ND
+    from repro.kernels.dispatch import ROUTE_ND_FUSED, plan, select_backend
+    from repro.roofline import refine_level_traffic
 
+    backend = select_backend()
     cases = [
         ("2d", regular_chart((64, 64), 2, boundary="reflect"), 4.0),
         ("3d", galactic_dust_chart((6, 16, 16), n_levels=2), 0.5),
@@ -81,7 +96,7 @@ def run_nd(report):
     for name, c, rho in cases:
         k = matern32.with_defaults(rho=rho)()
         routes = [e["route"] for e in plan(c)]
-        assert all(r == ROUTE_AXES_ND for r in routes), routes
+        assert all(r == ROUTE_ND_FUSED for r in routes), routes
         lvl = c.n_levels - 1  # finest (dominant) level
         geom = LevelGeom.for_level(c, lvl)
         rs, ds = axis_refinement_matrices_level(c, k, lvl)
@@ -91,22 +106,92 @@ def run_nd(report):
         xi = jnp.asarray(
             rng.normal(size=(f, geom.n_fsz ** c.ndim)), jnp.float32)
 
-        pal = jax.jit(lambda fl, x: knd.refine_axes(
+        fused = jax.jit(lambda fl, x: kfu.refine_nd_fused(
+            fl, x, rs, ds, geom, interpret=True))
+        axes = jax.jit(lambda fl, x: knd.refine_axes(
             fl, x, rs, ds, geom, interpret=True))
         ref = jax.jit(lambda fl, x: kref.refine_axes_ref(
             fl, x, rs, ds, T=geom.T, n_fsz=geom.n_fsz,
             boundary=geom.boundary, b=geom.b))
-        out_p, out_r = pal(field, xi), ref(field, xi)
-        rel = float(jnp.abs(out_p - out_r).max()
-                    / (jnp.abs(out_r).max() + 1e-30))
-        assert rel <= 1e-5, f"nd/{name} pallas-vs-ref rel err {rel:.2e}"
-        t_p = _bench(pal, field, xi)
-        t_r = _bench(ref, field, xi)
+        out_r = ref(field, xi)
+        scale = float(jnp.abs(out_r).max() + 1e-30)
+        for label, fn in [("fused", fused), ("axes", axes)]:
+            rel = float(jnp.abs(fn(field, xi) - out_r).max() / scale)
+            assert rel <= 1e-5, f"nd/{name}/{label} vs oracle rel {rel:.2e}"
         n = int(np.prod(geom.fine_shape))
-        report(f"nd/pallas_{name}", t_p * 1e6,
-               f"N={n} t={t_p*1e3:.2f}ms rel_err={rel:.1e}")
-        report(f"nd/ref_{name}", t_r * 1e6,
-               f"N={n} t={t_r*1e3:.2f}ms ratio={t_p/t_r:.2f}x")
+        # the jnp oracle row carries no byte estimate: XLA fuses it
+        # unpredictably and the roofline "reference" model describes the
+        # joint-window path, not the per-axis oracle timed here
+        rows = [
+            ("fused", fused, "nd-fused"),
+            ("axes", axes, "nd-axes"),
+            ("ref", ref, None),
+        ]
+        for label, fn, route in rows:
+            t = _bench(fn, field, xi)
+            hbm = (refine_level_traffic(geom, route)["total"]
+                   if route else None)
+            report(f"nd/{label}_{name}", t * 1e6,
+                   f"N={n} t={t*1e3:.2f}ms"
+                   + (f" est_bytes={hbm:,}" if hbm else ""),
+                   route=route or "jnp-oracle",
+                   backend=backend if route else "jnp",
+                   hbm_bytes=hbm,
+                   bw_util=_bw_util(hbm, t) if hbm else None)
+        report(f"nd/{name}_fused_vs_axes_bytes",
+               refine_level_traffic(geom, "nd-axes")["total"]
+               / refine_level_traffic(geom, "nd-fused")["total"],
+               "modeled per-level HBM traffic ratio (axes/fused)")
+
+
+def run_batch(report, *, quick: bool = False):
+    """Batched-sample throughput (DESIGN.md §10): the native sample-batch
+    kernel dimension vs a per-sample Python loop, on the 1-D charted chart
+    and the 3-D dust chart. Off-TPU both run interpret mode — the ratio
+    shows launch/emulation amortization, the JSON bytes column the traffic.
+    """
+    from repro.core import ICR, matern32
+    from repro.core.charts import galactic_dust_chart, log_chart
+    from repro.core.refine import LevelGeom
+    from repro.kernels.dispatch import plan, select_backend
+    from repro.roofline import refine_level_traffic
+
+    backend = select_backend()
+    n_s = 4 if quick else 8
+    cases = [
+        ("1d-charted", log_chart(64, 2 if quick else 4, n_csz=5, n_fsz=4,
+                                 delta0=0.05), 1.0),
+        ("3d-dust", galactic_dust_chart((6, 8, 8), n_levels=2), 0.5),
+    ]
+    for name, c, rho in cases:
+        icr = ICR(chart=c, kernel=matern32.with_defaults(rho=rho),
+                  use_pallas=True)
+        mats = icr.matrices()
+        xi = icr.init_xi(jax.random.PRNGKey(0), batch=n_s)
+        batched = jax.jit(lambda m, xs: icr.apply_sqrt_batch(m, xs))
+        looped = jax.jit(lambda m, xs: jnp.stack(
+            [icr.apply_sqrt(m, [x[i] for x in xs]) for i in range(n_s)]))
+        err = float(jnp.abs(batched(mats, xi) - looped(mats, xi)).max())
+        assert err <= 1e-4, f"batch/{name} batched-vs-loop {err:.2e}"
+        t_b = _bench(batched, mats, xi)
+        t_l = _bench(looped, mats, xi)
+        entries = plan(c, samples=n_s)
+        # samples= keeps the matrix bytes counted once — the amortization
+        # this table exists to track
+        hbm = sum(
+            refine_level_traffic(LevelGeom.for_level(c, lvl),
+                                 entries[lvl]["route"],
+                                 samples=n_s)["total"]
+            for lvl in range(c.n_levels))
+        route = entries[-1]["route"]
+        report(f"batch/{name}/native", t_b * 1e6,
+               f"S={n_s} {n_s/t_b:.1f} samples/s", route=route,
+               backend=backend, hbm_bytes=hbm, bw_util=_bw_util(hbm, t_b))
+        report(f"batch/{name}/loop", t_l * 1e6,
+               f"S={n_s} {n_s/t_l:.1f} samples/s", route=route,
+               backend=backend)
+        report(f"batch/{name}/speedup", t_l / t_b,
+               f"loop/native wall-time ratio ({backend})")
 
 
 def run_scaling(report, sizes=(1024, 4096, 16384, 65536, 262144)):

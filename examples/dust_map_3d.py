@@ -34,22 +34,33 @@ def main():
           np.round(np.diff(np.exp(chart.axis_coords(chart.n_levels, 0)))[:5],
                    4))
 
-    # every level must route through the fused path — no reference fallback,
-    # forward or backward (the adjoint kernels cover inference too)
+    # every level must route through the single-launch fused megakernel
+    # (DESIGN.md §10) — forward and backward; if a level ever outgrows the
+    # VMEM budget the documented fallback is the per-axis passes (nd-axes),
+    # never the jnp reference
     plan = dispatch.plan(chart)
     for entry in plan:
+        hb = entry["hbm_bytes"]
         print(f"  level {entry['level']}: route={entry['route']} "
               f"backend={entry['backend']} blocks={entry['block_families']} "
-              f"vjp={entry['vjp']['route']}")
-        assert entry["route"] != dispatch.ROUTE_REFERENCE, (
-            "fused path fell back to the jnp reference", entry)
+              f"vjp={entry['vjp']['route']} "
+              f"est HBM {hb['selected']/1e6:.1f} MB "
+              f"({hb['nd-axes']/hb['nd-fused']:.1f}x less than per-axis)")
+        assert entry["route"] in (dispatch.ROUTE_ND_FUSED,
+                                  dispatch.ROUTE_AXES_ND), (
+            "N-D level fell back to the jnp reference", entry)
         assert entry["vjp"]["route"] != dispatch.ROUTE_REFERENCE, (
-            "fused backward fell back to the jnp reference", entry)
+            "fused backward fell back", entry)
+        # this chart fits the VMEM budget at every level, so pin the
+        # stronger property too: if this fires, the autotune model regressed
+        assert entry["route"] == dispatch.ROUTE_ND_FUSED, (
+            "dust-map level fell off the megakernel route", entry)
 
     # single-device sample through the fused kernels
     sample = icr.sample(jax.random.PRNGKey(0))
     print(f"sample: shape={sample.shape} mean={float(sample.mean()):+.3f} "
           f"std={float(sample.std()):.3f}")
+
 
     # one inference-style gradient through the fused path: MAP/ADVI cost is
     # two sqrt applications + the VJP (paper §1) — all adjoint kernels here
@@ -67,6 +78,14 @@ def main():
     # Wiener-filter-style transpose diagnostics share the same adjoints
     back = icr_s.apply_sqrt_T(mats, icr_s.sample(jax.random.PRNGKey(2)))
     print(f"sqrt(K)^T residual map: level sizes = {[b.size for b in back]}")
+
+    # batched posterior-style sampling: the sample batch rides natively
+    # inside the kernel tiles (matrices fetched once per tile slab) instead
+    # of looping — the serving fast path (demoed on the half-size chart;
+    # interpret mode pays emulation overhead per launch)
+    batch = icr_s.sample_batch(jax.random.PRNGKey(42), 3)
+    print(f"sample_batch(3): shape={batch.shape} "
+          f"per-sample std={[round(float(b.std()), 3) for b in batch]}")
 
     # distributed sample across every local device (spatial ring over the
     # middle angular axis — halo exchange via collective_permute)

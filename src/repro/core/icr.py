@@ -67,10 +67,14 @@ class ICR:
         return self.chart.final_shape
 
     # -- parameters -----------------------------------------------------------
-    def init_xi(self, key, dtype=jnp.float32) -> List[Array]:
+    def init_xi(self, key, dtype=jnp.float32, *,
+                batch: int | None = None) -> List[Array]:
+        """Standard-normal excitations; ``batch`` prepends a sample dim to
+        every level (the layout ``apply_sqrt_batch`` consumes)."""
         keys = jax.random.split(key, self.chart.n_levels + 1)
+        lead = () if batch is None else (batch,)
         return [
-            jax.random.normal(k, s, dtype)
+            jax.random.normal(k, lead + s, dtype)
             for k, s in zip(keys, self.xi_shapes())
         ]
 
@@ -118,9 +122,11 @@ class ICR:
         return out
 
     # -- forward --------------------------------------------------------------
-    def apply_sqrt(self, mats: dict, xi: Sequence[Array]) -> Array:
-        """Apply sqrt(K_ICR) to ξ (paper Alg. 1). Returns the finest field."""
-        field = (mats["sqrt0"] @ xi[0]).reshape(self.chart.shape0)
+    def _refine_levels(self, mats: dict, xi: Sequence[Array], field: Array,
+                       *, sample_axis: bool) -> Array:
+        """Run every refinement level on `field` (the shared body of
+        apply_sqrt and apply_sqrt_batch; `sample_axis` marks a leading
+        sample dimension that the kernels consume natively)."""
         for lvl in range(self.chart.n_levels):
             geom = LevelGeom.for_level(self.chart, lvl)
             if self.use_pallas:
@@ -133,13 +139,44 @@ class ICR:
                 d = mats["sqrtD"][lvl] if "sqrtD" in mats else None
                 field = dispatch.refine(
                     field, xi[lvl + 1], r, d, geom, axis_mats=axis_mats,
+                    sample_axis=sample_axis,
                 )
             else:
-                field = refine_level(
-                    field, xi[lvl + 1], mats["R"][lvl], mats["sqrtD"][lvl],
-                    geom,
-                )
+                ref = lambda f, x: refine_level(
+                    f, x, mats["R"][lvl], mats["sqrtD"][lvl], geom)
+                field = (jax.vmap(ref)(field, xi[lvl + 1]) if sample_axis
+                         else ref(field, xi[lvl + 1]))
         return field
+
+    def apply_sqrt(self, mats: dict, xi: Sequence[Array]) -> Array:
+        """Apply sqrt(K_ICR) to ξ (paper Alg. 1). Returns the finest field."""
+        field = (mats["sqrt0"] @ xi[0]).reshape(self.chart.shape0)
+        return self._refine_levels(mats, xi, field, sample_axis=False)
+
+    def apply_sqrt_batch(self, mats: dict, xi: Sequence[Array]) -> Array:
+        """Apply sqrt(K_ICR) to a whole batch of excitations at once.
+
+        xi: ξ-shaped list with a leading sample dimension S on every level
+        (``init_xi(key, batch=S)``). Returns (S, *final_shape).
+
+        This is the batched-serving fast path (DESIGN.md §10): with
+        ``use_pallas=True`` the sample dimension is threaded through the
+        kernels natively — a whole sample slab per VMEM tile, matrices
+        fetched once per tile — instead of being lifted into the launch
+        grid the way ``jax.vmap(apply_sqrt)`` would. The reference path
+        falls back to a vmap of the per-level jnp apply.
+        """
+        n_s = xi[0].shape[0]
+        field = (xi[0] @ mats["sqrt0"].T).reshape(
+            (n_s,) + self.chart.shape0)
+        return self._refine_levels(mats, xi, field, sample_axis=True)
+
+    def sample_batch(self, key, n: int, theta=None,
+                     dtype=jnp.float32) -> Array:
+        """Draw ``n`` approximate GP samples in one batched application —
+        (n, *final_shape). Amortizes every matrix load across the batch."""
+        return self.apply_sqrt_batch(
+            self.matrices(theta), self.init_xi(key, dtype, batch=n))
 
     def apply_sqrt_T(self, mats: dict, v: Array) -> List[Array]:
         """Apply sqrt(K_ICR)ᵀ to a field-space vector (paper §3.2, Eq. 3).

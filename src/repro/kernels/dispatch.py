@@ -1,8 +1,9 @@
-"""Backend dispatch for the fused ICR refinement kernels (DESIGN.md §5).
+"""Backend dispatch for the fused ICR refinement kernels (DESIGN.md §5/§10).
 
 One refinement application (paper Eq. 9) can execute three ways:
 
-  * ``"pallas"``    — the fused TPU kernels (icr_refine.py); chosen on TPU.
+  * ``"pallas"``    — the fused TPU kernels (icr_refine.py, nd_fused.py);
+                      chosen on TPU.
   * ``"interpret"`` — the same kernels in Pallas interpret mode (the body
                       runs as pure jnp); chosen off-TPU so CPU/GPU runs
                       exercise the exact BlockSpec tiling bit-for-bit.
@@ -13,19 +14,24 @@ Routing is decided per level from the geometry alone:
 
   1-D, all ``kept_T == 1``   -> stationary kernel (one shared stencil)
   1-D, per-family matrices   -> charted kernel (batched small-matmul)
-  N-D with per-axis factors  -> per-axis fused passes (repro.kernels.nd)
+  N-D, tile fits VMEM        -> single-launch fused level megakernel
+                                (repro.kernels.nd_fused, DESIGN.md §10)
+  N-D, tile too large        -> per-axis fused passes (repro.kernels.nd)
   otherwise                  -> reference
 
 This replaces the ad-hoc shape guards that used to live in
-``repro.kernels.ops``. The VMEM tile size (``block_families``) is autotuned
-against a per-core VMEM budget instead of being a hard-coded 256.
+``repro.kernels.ops``. VMEM tile sizes (``block_families`` for the 1-D
+kernels, the ``(b_f, s_b)`` family/sample blocks for the N-D megakernel)
+are autotuned against a per-core VMEM budget instead of being hard-coded.
 
-``refine`` is fully differentiable on every route: the 1-D kernel entry
-points carry hand-written adjoint Pallas kernels via ``jax.custom_vjp``
-(icr_refine.py, DESIGN.md §9), so ``jax.grad``/``jax.vjp`` through any
-structured route — including the per-axis N-D passes and the interpret
-backend — runs the fused backward, never the jnp reference. ``plan()``
-reports the backward routing per level next to the forward.
+``refine`` is fully differentiable on every route: the kernel entry points
+carry hand-written adjoint Pallas kernels via ``jax.custom_vjp``
+(icr_refine.py, DESIGN.md §9; the megakernel's backward composes them in
+reverse axis order), so ``jax.grad``/``jax.vjp`` through any structured
+route — including the interpret backend — runs the fused backward, never
+the jnp reference. ``plan()`` reports the backward routing per level next
+to the forward, plus the per-level HBM-byte estimates of
+``repro.roofline.level_traffic`` for every candidate route.
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.refine import LevelGeom, refine_level
+from repro.roofline.level_traffic import refine_level_traffic
 
 from . import nd as _nd
 from .icr_refine import (
@@ -49,6 +56,7 @@ BACKEND_REFERENCE = "reference"
 
 ROUTE_STATIONARY_1D = "stationary-1d"
 ROUTE_CHARTED_1D = "charted-1d"
+ROUTE_ND_FUSED = "nd-fused"
 ROUTE_AXES_ND = "nd-axes"
 ROUTE_REFERENCE = "reference"
 
@@ -59,26 +67,29 @@ VMEM_BUDGET_BYTES = 64 * 2**20
 
 
 def autotune_block_families(t: int, n_csz: int, n_fsz: int, *, charted: bool,
-                            itemsize: int = 4,
+                            batch_block: int = 1, itemsize: int = 4,
                             vmem_budget: int = VMEM_BUDGET_BYTES) -> int:
     """Largest power-of-two family block whose working set fits the budget,
     clamped to the family count ``t`` (a block larger than the level is pure
     padding — tiny levels used to get the floor of 8 regardless of ``t``).
 
     Per grid step the kernel holds: the coarse block + its halo view
-    (``2*b_f*s``), the xi block and the output block (``2*b_f*n_fsz``), and
-    the matrices — shared ``(n_fsz, n_csz)+(n_fsz, n_fsz)`` when stationary,
-    per-family (scaling with ``b_f``) when charted. Everything is double
-    buffered by the Pallas pipeline, hence the factor 2.
+    (``2*b_f*s``), the xi block and the output block (``2*b_f*n_fsz``) —
+    each times the ``batch_block`` slab — and the matrices: shared
+    ``(n_fsz, n_csz)+(n_fsz, n_fsz)`` when stationary, per-family (scaling
+    with ``b_f``) when charted. Everything is double buffered by the Pallas
+    pipeline, hence the factor 2.
 
     The returned block never drops below ``q_max = (n_csz-1)//s``: the
     kernels' one-block halo view must cover the window overhang.
     """
     s = max(1, n_fsz // 2)
+    b_b = max(1, batch_block)
     floor = max(min(8, t), halo_floor(n_csz, n_fsz), 1)
     best, b_f = floor, floor
     while True:
-        per = 2 * b_f * s + 2 * b_f * n_fsz + n_fsz * n_csz + n_fsz * n_fsz
+        per = b_b * (2 * b_f * s + 2 * b_f * n_fsz) \
+            + n_fsz * n_csz + n_fsz * n_fsz
         if charted:
             per += b_f * (n_fsz * n_csz + n_fsz * n_fsz)
         if b_f > floor and 2 * itemsize * per > vmem_budget:
@@ -88,6 +99,121 @@ def autotune_block_families(t: int, n_csz: int, n_fsz: int, *, charted: bool,
             break
         b_f = min(2 * b_f, t)
     return best
+
+
+def autotune_batch_block(samples: int, t: int, n_csz: int, n_fsz: int, *,
+                         charted: bool, block_families: int,
+                         itemsize: int = 4,
+                         vmem_budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Largest power-of-two sample slab the 1-D kernels can hold per grid
+    step at the given family block — the native sample-batch dimension that
+    amortizes matrix loads across batched sampling / serving."""
+    s = max(1, n_fsz // 2)
+    b_f = block_families
+    mats = n_fsz * n_csz + n_fsz * n_fsz
+    if charted:
+        mats += b_f * (n_fsz * n_csz + n_fsz * n_fsz)
+    best, b_b = 1, 1
+    while True:
+        per = b_b * (2 * b_f * s + 2 * b_f * n_fsz) + mats
+        if b_b > 1 and 2 * itemsize * per > vmem_budget:
+            break
+        best = b_b
+        if b_b >= samples:
+            break
+        b_b = min(2 * b_b, samples)
+    return best
+
+
+def _fused_tile_bytes(geom: LevelGeom, charted: tuple, b_f: int, s_b: int,
+                      itemsize: int) -> int:
+    """VMEM working set of one megakernel grid step (model, DESIGN.md §10).
+
+    Counted: the coarse tile + its axis-0 halo view, the ξ and output tiles
+    (all double-buffered by the pipeline), the matrices (axis-0 factors
+    blocked when charted), and the peak in-flight stage of the back-to-back
+    contraction chain (input + window tensor + output of the widest stage).
+    """
+    nd = len(geom.coarse_shape)
+    fsz, csz = geom.n_fsz, geom.n_csz
+    s = max(1, fsz // 2)
+    q = (csz - 1) // s
+    T = geom.T
+    lp_trail = []
+    for a in range(1, nd):
+        n = geom.coarse_shape[a] + (2 * geom.b if geom.boundary == "reflect"
+                                    else 0)
+        lp_trail.append(max(n, (T[a] + q) * s))
+    prod_f = 1
+    for a in range(1, nd):
+        prod_f *= T[a] * fsz
+
+    def prod(xs):
+        out = 1
+        for x in xs:
+            out *= x
+        return out
+
+    tile_in = 2 * s_b * b_f * s * prod(lp_trail)         # main + halo views
+    xi_tile = s_b * b_f * fsz * prod_f
+    out_tile = s_b * b_f * fsz * prod_f
+
+    # contraction chain peak: stage extents start at the coarse tile and
+    # graduate one axis at a time to fine resolution
+    stage = [(b_f + q) * s] + [(T[a] + q) * s for a in range(1, nd)]
+    peak = 0
+    for a in range(nd - 1, -1, -1):
+        before = prod(stage)
+        win = stage.copy()
+        win[a] = (T[a] if a else b_f) * csz
+        after = stage.copy()
+        after[a] = (T[a] if a else b_f) * fsz
+        peak = max(peak, before + prod(win) + prod(after))
+        stage = after
+    scratch = s_b * peak
+
+    mats = 0
+    per = fsz * csz + fsz * fsz
+    mats += (b_f if charted[0] else 1) * per
+    for a in range(1, nd):
+        mats += (T[a] if charted[a] else 1) * per
+
+    return itemsize * (2 * (tile_in + xi_tile + out_tile + mats) + scratch)
+
+
+def autotune_nd_fused(geom: LevelGeom, *, charted: tuple | None = None,
+                      samples: int = 1, itemsize: int = 4,
+                      vmem_budget: int = VMEM_BUDGET_BYTES):
+    """Family/sample blocks ``(b_f, s_b)`` for the fused N-D level kernel,
+    or None when even the minimal tile busts the VMEM budget — the fallback
+    rule: dispatch then routes the level to the per-axis passes.
+
+    Grows the axis-0 family block first (powers of two up to ``T_0``), then
+    the sample slab (up to ``samples``), keeping the §10 working-set model
+    under the budget.
+    """
+    nd = len(geom.coarse_shape)
+    if nd < 2:
+        return None
+    if charted is None:
+        charted = tuple(k > 1 for k in geom.kept_T)
+    q = halo_floor(geom.n_csz, geom.n_fsz)
+    floor = max(min(8, geom.T[0]), q, 1)
+    if _fused_tile_bytes(geom, charted, floor, 1, itemsize) > vmem_budget:
+        return None
+    b_f = floor
+    while b_f < geom.T[0]:
+        nxt = min(2 * b_f, geom.T[0])
+        if _fused_tile_bytes(geom, charted, nxt, 1, itemsize) > vmem_budget:
+            break
+        b_f = nxt
+    s_b = 1
+    while s_b < samples:
+        nxt = min(2 * s_b, samples)
+        if _fused_tile_bytes(geom, charted, b_f, nxt, itemsize) > vmem_budget:
+            break
+        s_b = nxt
+    return b_f, s_b
 
 
 def select_backend(*, platform: str | None = None) -> str:
@@ -104,11 +230,15 @@ def route_for(geom: LevelGeom, *, have_axis_mats: bool = False) -> str:
         if all(k == 1 for k in geom.kept_T):
             return ROUTE_STATIONARY_1D
         return ROUTE_CHARTED_1D
-    return ROUTE_AXES_ND if have_axis_mats else ROUTE_REFERENCE
+    if not have_axis_mats:
+        return ROUTE_REFERENCE
+    if autotune_nd_fused(geom) is not None:
+        return ROUTE_ND_FUSED
+    return ROUTE_AXES_ND
 
 
 def plan(chart, *, have_axis_mats: bool | None = None,
-         platform: str | None = None) -> list:
+         platform: str | None = None, samples: int = 1) -> list:
     """Per-level forward AND backward routing decisions for `chart` —
     introspection for examples, benchmarks and tests (no arrays touched).
 
@@ -116,9 +246,12 @@ def plan(chart, *, have_axis_mats: bool | None = None,
     per-axis factors for every N-D chart when use_pallas=True).
 
     Each entry carries a ``"vjp"`` sub-dict describing how the *backward*
-    pass of that level executes: structured routes run the hand-written
-    adjoint kernels (same backend, same tiling — the adjoint's working set
-    mirrors the forward's), the reference route is jnp autodiff.
+    pass of that level executes (structured routes run the hand-written
+    adjoint kernels; the megakernel's backward composes the 1-D adjoints in
+    reverse axis order; the reference route is jnp autodiff) and an
+    ``"hbm_bytes"`` sub-dict: the ``roofline.level_traffic`` estimate for
+    the selected route next to every candidate route, so the traffic win of
+    the fused path is visible without running anything.
     """
     if have_axis_mats is None:
         have_axis_mats = chart.ndim > 1
@@ -129,11 +262,21 @@ def plan(chart, *, have_axis_mats: bool | None = None,
         backend = (BACKEND_REFERENCE if route == ROUTE_REFERENCE
                    else select_backend(platform=platform))
         blocks = {}
+        sample_block = None
         if route in (ROUTE_STATIONARY_1D, ROUTE_CHARTED_1D):
             blocks[0] = autotune_block_families(
                 geom.T[0], geom.n_csz, geom.n_fsz,
                 charted=route == ROUTE_CHARTED_1D,
             )
+            sample_block = autotune_batch_block(
+                samples, geom.T[0], geom.n_csz, geom.n_fsz,
+                charted=route == ROUTE_CHARTED_1D,
+                block_families=blocks[0],
+            )
+        elif route == ROUTE_ND_FUSED:
+            b_f, s_b = autotune_nd_fused(geom, samples=samples)
+            blocks[0] = b_f
+            sample_block = s_b
         elif route == ROUTE_AXES_ND:
             for a in range(len(geom.T)):
                 ag = geom.axis(a)
@@ -141,6 +284,14 @@ def plan(chart, *, have_axis_mats: bool | None = None,
                     ag.T[0], ag.n_csz, ag.n_fsz,
                     charted=ag.kept_T[0] > 1,
                 )
+        candidates = ([ROUTE_ND_FUSED, ROUTE_AXES_ND, ROUTE_REFERENCE]
+                      if len(geom.coarse_shape) > 1
+                      else [route, ROUTE_REFERENCE])
+        hbm = {
+            rt: refine_level_traffic(geom, rt, samples=samples)["total"]
+            for rt in candidates
+        }
+        hbm["selected"] = hbm[route]
         vjp = {
             "route": (ROUTE_REFERENCE if route == ROUTE_REFERENCE
                       else route + "-adjoint"),
@@ -148,19 +299,26 @@ def plan(chart, *, have_axis_mats: bool | None = None,
             "block_families": dict(blocks),
         }
         out.append({"level": lvl, "route": route, "backend": backend,
-                    "block_families": blocks, "vjp": vjp})
+                    "block_families": blocks, "sample_block": sample_block,
+                    "hbm_bytes": hbm, "vjp": vjp})
     return out
 
 
 def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
            axis_mats=None, backend: str | None = None,
-           block_families: int | None = None) -> Array:
+           block_families: int | None = None,
+           sample_axis: bool = False,
+           sample_block: int | None = None) -> Array:
     """Route one refinement application to the best available backend.
 
     Arguments follow ``core.refine.refine_level``; ``axis_mats`` optionally
     carries the per-axis factors ``(rs, ds)`` from
-    ``axis_refinement_matrices_level``, enabling the fused N-D path (when
+    ``axis_refinement_matrices_level``, enabling the fused N-D paths (when
     present, the joint ``r``/``d`` are ignored on N-D levels).
+
+    ``sample_axis=True`` marks the leading dimension of ``field``/``xi`` as
+    a sample batch: the kernels process a whole sample slab per grid step
+    (matrix loads amortized — DESIGN.md §10) instead of looping.
 
     Differentiable w.r.t. every array argument on every route: the kernel
     entry points carry custom VJPs running the fused adjoint kernels, the
@@ -176,33 +334,57 @@ def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
                 "has none (ICR.matrices skipped the joint build) — pass "
                 "matrices(joint=True) or provide axis_mats covering it"
             )
+        if sample_axis:
+            return jax.vmap(
+                lambda f, x: refine_level(f, x, r, d, geom))(field, xi)
         return refine_level(field, xi, r, d, geom)
     interpret = backend != BACKEND_PALLAS
 
+    if route == ROUTE_ND_FUSED:
+        from . import nd_fused  # lazy: keeps import order flexible
+
+        return nd_fused.refine_nd_fused(
+            field, xi, axis_mats[0], axis_mats[1], geom,
+            interpret=interpret, block_families=block_families,
+            sample_block=sample_block, sample_axis=sample_axis,
+        )
     if route == ROUTE_AXES_ND:
         return _nd.refine_axes(field, xi, axis_mats[0], axis_mats[1], geom,
                                interpret=interpret,
-                               block_families=block_families)
+                               block_families=block_families,
+                               sample_axis=sample_axis)
 
     n_csz, n_fsz = geom.n_csz, geom.n_fsz
     t = geom.T[0]
-    coarse = field.reshape(1, -1)
+    charted = route == ROUTE_CHARTED_1D
+    if sample_axis:
+        n_s = field.shape[0]
+        coarse = field.reshape(n_s, -1)
+        xi_k = xi.reshape(n_s, t, n_fsz)
+    else:
+        n_s = 1
+        coarse = field.reshape(1, -1)
+        xi_k = xi.reshape(1, t, n_fsz)
     if geom.boundary == "reflect":
         coarse = jnp.pad(coarse, [(0, 0), (geom.b, geom.b)], mode="reflect")
-    charted = route == ROUTE_CHARTED_1D
     b_f = block_families or autotune_block_families(
         t, n_csz, n_fsz, charted=charted
     )
+    b_b = sample_block or autotune_batch_block(
+        n_s, t, n_csz, n_fsz, charted=charted, block_families=b_f
+    )
     if charted:
         out = refine_charted_pallas(
-            coarse, xi.reshape(1, t, n_fsz), r.reshape(t, n_fsz, n_csz),
+            coarse, xi_k, r.reshape(t, n_fsz, n_csz),
             d.reshape(t, n_fsz, n_fsz), n_csz=n_csz, n_fsz=n_fsz,
-            block_families=b_f, interpret=interpret,
+            block_families=b_f, batch_block=b_b, interpret=interpret,
         )
     else:
         out = refine_stationary_pallas(
-            coarse, xi.reshape(1, t, n_fsz), r.reshape(n_fsz, n_csz),
+            coarse, xi_k, r.reshape(n_fsz, n_csz),
             d.reshape(n_fsz, n_fsz), n_csz=n_csz, n_fsz=n_fsz,
-            block_families=b_f, interpret=interpret,
+            block_families=b_f, batch_block=b_b, interpret=interpret,
         )
+    if sample_axis:
+        return out.reshape((n_s,) + geom.fine_shape)
     return out.reshape(geom.fine_shape)

@@ -24,9 +24,22 @@ Two variants:
     paper §4.3), a batched small-matmul.
 
 Both carry arbitrary leading batch dims (chart-invariant axes broadcast,
-paper §4.3 symmetry optimization).
+paper §4.3 symmetry optimization) and a **batch block** (``batch_block``,
+DESIGN.md §10): the kernel processes ``b_b`` leading-batch rows per grid
+step instead of one, so the stencil matrices are fetched once per family
+block for the whole batch slab and the MXU sees ``b_b``-fold taller GEMMs.
+That is how batched posterior sampling / serving amortizes matrix loads —
+the sample dimension rides *inside* the kernel block, it is not lifted into
+the grid the way a plain ``vmap`` would.
 
-Adjoints (DESIGN.md §9): both entry points carry a ``jax.custom_vjp`` whose
+``noise=False`` mode (DESIGN.md §10): every N-D per-axis pass except the
+final one injects no excitation — its noise factor is pre-contracted into ξ
+outside the kernel — so those passes used to read an all-zeros ξ array from
+HBM for nothing. The noise-free variants drop the ξ and sqrt(D) operands
+entirely (forward skips the read and the add, the adjoint skips the ``dxi``
+computation and its write).
+
+Adjoints (DESIGN.md §9): all entry points carry a ``jax.custom_vjp`` whose
 backward runs hand-written *adjoint* Pallas kernels. The transpose of the
 window-contract is a halo-overlapped scatter-add — coarse element ``t·s + k``
 receives ``Rᵀ g`` contributions from the ≤ ``q_max+1`` families whose window
@@ -53,61 +66,86 @@ from .ref import windows_1d
 Array = jnp.ndarray
 
 
-def _window_cols(buf: Array, b_f: int, s: int, n_csz: int) -> Array:
-    """(B_f, n_csz) window matrix from a (B_f + q_max)*s element buffer.
+def interpret_default() -> bool:
+    """Pallas interpret mode off-TPU (the shared backend-default predicate
+    for every kernel module)."""
+    return jax.default_backend() != "tpu"
 
-    Element (t, k) = buf[t*s + k] built with static slices of the (rows, s)
-    reshape — no gather, no strided access.
+
+def _window_cols(buf: Array, b_f: int, s: int, n_csz: int) -> Array:
+    """(b_b, B_f, n_csz) window matrix from (b_b, >= (B_f + q_max)*s) buffers.
+
+    Element (·, t, k) = buf[·, t*s + k] built with static slices of the
+    (b_b, rows, s) reshape — no gather, no strided access.
     """
     q_max = (n_csz - 1) // s
-    resh = buf[: (b_f + q_max) * s].reshape(b_f + q_max, s)
+    resh = buf[:, : (b_f + q_max) * s].reshape(buf.shape[0], b_f + q_max, s)
     cols = []
     for k in range(n_csz):
         q, r = divmod(k, s)
-        cols.append(resh[q : q + b_f, r])
+        cols.append(resh[:, q : q + b_f, r])
     return jnp.stack(cols, axis=-1)
 
 
 def _stationary_kernel(coarse_ref, halo_ref, xi_ref, r_ref, d_ref, out_ref,
-                       *, b_f: int, s: int, n_csz: int, n_fsz: int):
+                       *, b_b: int, b_f: int, s: int, n_csz: int, n_fsz: int):
     q_max = (n_csz - 1) // s
     buf = jnp.concatenate(
-        [coarse_ref[0], halo_ref[0, : q_max * s]], axis=-1
+        [coarse_ref[...], halo_ref[:, : q_max * s]], axis=-1
     )
-    w = _window_cols(buf, b_f, s, n_csz)                  # (B_f, n_csz)
+    w = _window_cols(buf, b_f, s, n_csz)                  # (b_b, B_f, n_csz)
     r = r_ref[...]                                        # (n_fsz, n_csz)
     d = d_ref[...]                                        # (n_fsz, n_fsz)
-    xi = xi_ref[0]                                        # (B_f, n_fsz)
-    fine = jnp.dot(w, r.T, preferred_element_type=jnp.float32)
+    xi = xi_ref[...].reshape(b_b * b_f, n_fsz)
+    fine = jnp.dot(w.reshape(b_b * b_f, n_csz), r.T,
+                   preferred_element_type=jnp.float32)
     fine = fine + jnp.dot(xi, d.T, preferred_element_type=jnp.float32)
-    out_ref[0] = fine.reshape(b_f * n_fsz).astype(out_ref.dtype)
+    out_ref[...] = fine.reshape(b_b, b_f * n_fsz).astype(out_ref.dtype)
+
+
+def _stationary_nn_kernel(coarse_ref, halo_ref, r_ref, out_ref,
+                          *, b_b: int, b_f: int, s: int, n_csz: int,
+                          n_fsz: int):
+    """Noise-free stationary forward: no ξ read, no sqrt(D) operand."""
+    q_max = (n_csz - 1) // s
+    buf = jnp.concatenate(
+        [coarse_ref[...], halo_ref[:, : q_max * s]], axis=-1
+    )
+    w = _window_cols(buf, b_f, s, n_csz)
+    fine = jnp.dot(w.reshape(b_b * b_f, n_csz), r_ref[...].T,
+                   preferred_element_type=jnp.float32)
+    out_ref[...] = fine.reshape(b_b, b_f * n_fsz).astype(out_ref.dtype)
 
 
 def _charted_kernel(coarse_ref, halo_ref, xi_ref, r_ref, d_ref, out_ref,
-                    *, b_f: int, s: int, n_csz: int, n_fsz: int):
-    q_max = (n_csz - 1) // s
+                    *, b_b: int, b_f: int, s: int, n_csz: int, n_fsz: int):
     buf = jnp.concatenate(
-        [coarse_ref[0], halo_ref[0, : q_max * s]], axis=-1
+        [coarse_ref[...], halo_ref[:, : ((n_csz - 1) // s) * s]], axis=-1
     )
-    w = _window_cols(buf, b_f, s, n_csz)                  # (B_f, n_csz)
-    r = r_ref[...]                                        # (B_f, n_fsz, n_csz)
-    d = d_ref[...]                                        # (B_f, n_fsz, n_fsz)
-    xi = xi_ref[0]                                        # (B_f, n_fsz)
-    # batched matvec on the MXU: (B_f; n_fsz, n_csz) x (B_f; n_csz)
-    fine = jax.lax.dot_general(
-        r, w, (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32,
-    )                                                     # (B_f, n_fsz)
-    fine = fine + jax.lax.dot_general(
-        d, xi, (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32,
+    w = _window_cols(buf, b_f, s, n_csz)                  # (b_b, B_f, n_csz)
+    # batched matvec on the MXU, families as the dot_general batch dim,
+    # batch rows as the free dim: matrices are loaded once per family block
+    fine = jnp.einsum("btc,tfc->btf", w, r_ref[...],
+                      preferred_element_type=jnp.float32)
+    fine = fine + jnp.einsum("btj,tfj->btf", xi_ref[...], d_ref[...],
+                             preferred_element_type=jnp.float32)
+    out_ref[...] = fine.reshape(b_b, b_f * n_fsz).astype(out_ref.dtype)
+
+
+def _charted_nn_kernel(coarse_ref, halo_ref, r_ref, out_ref,
+                       *, b_b: int, b_f: int, s: int, n_csz: int, n_fsz: int):
+    buf = jnp.concatenate(
+        [coarse_ref[...], halo_ref[:, : ((n_csz - 1) // s) * s]], axis=-1
     )
-    out_ref[0] = fine.reshape(b_f * n_fsz).astype(out_ref.dtype)
+    w = _window_cols(buf, b_f, s, n_csz)
+    fine = jnp.einsum("btc,tfc->btf", w, r_ref[...],
+                      preferred_element_type=jnp.float32)
+    out_ref[...] = fine.reshape(b_b, b_f * n_fsz).astype(out_ref.dtype)
 
 
 def _overlap_add_cols(dw: Array, b_f: int, s: int, n_csz: int) -> Array:
-    """(B_f, s) coarse-cotangent rows from (B_f + q_max, n_csz) window-
-    cotangent rows — ``_window_cols`` run in reverse.
+    """(b_b, B_f, s) coarse-cotangent rows from (b_b, B_f + q_max, n_csz)
+    window-cotangent rows — ``_window_cols`` run in reverse.
 
     dcoarse[t'·s + r] = Σ_q dw[t' − q, q·s + r]: each q-term is the same
     static row-shifted slice the forward used to *build* column ``q·s + r``,
@@ -116,61 +154,95 @@ def _overlap_add_cols(dw: Array, b_f: int, s: int, n_csz: int) -> Array:
     scatter-add across the block boundary is a plain slice — no gather.
     """
     q_max = (n_csz - 1) // s
-    acc = jnp.zeros((b_f, s), jnp.float32)
+    b_b = dw.shape[0]
+    acc = jnp.zeros((b_b, b_f, s), jnp.float32)
     for q in range(q_max + 1):
         width = min(s, n_csz - q * s)
         if width <= 0:
             break
-        piece = dw[q_max - q : q_max - q + b_f, q * s : q * s + width]
+        piece = dw[:, q_max - q : q_max - q + b_f, q * s : q * s + width]
         if width < s:
             piece = jnp.concatenate(
-                [piece, jnp.zeros((b_f, s - width), piece.dtype)], axis=-1
+                [piece, jnp.zeros((b_b, b_f, s - width), piece.dtype)],
+                axis=-1,
             )
         acc = acc + piece
     return acc
 
 
 def _stationary_adjoint_kernel(g_ref, gh_ref, r_ref, d_ref, dc_ref, dxi_ref,
-                               *, b_f: int, s: int, n_csz: int, n_fsz: int):
+                               *, b_b: int, b_f: int, s: int, n_csz: int,
+                               n_fsz: int):
     q_max = (n_csz - 1) // s
-    g = g_ref[0]                                          # (B_f, n_fsz)
-    r = r_ref[...]                                        # (n_fsz, n_csz)
-    d = d_ref[...]                                        # (n_fsz, n_fsz)
+    g = g_ref[...]                                        # (b_b, B_f, n_fsz)
+    r = r_ref[...]
+    d = d_ref[...]
     g_ext = g
     if q_max > 0:
-        g_ext = jnp.concatenate([gh_ref[0, b_f - q_max :], g], axis=0)
-    dw = jnp.dot(g_ext, r, preferred_element_type=jnp.float32)
-    acc = _overlap_add_cols(dw, b_f, s, n_csz)            # (B_f, s)
-    dc_ref[0] = acc.reshape(b_f * s).astype(dc_ref.dtype)
-    dxi = jnp.dot(g, d, preferred_element_type=jnp.float32)
-    dxi_ref[0] = dxi.astype(dxi_ref.dtype)
+        g_ext = jnp.concatenate([gh_ref[:, b_f - q_max :], g], axis=1)
+    dw = jnp.dot(g_ext.reshape(-1, n_fsz), r,
+                 preferred_element_type=jnp.float32)
+    dw = dw.reshape(b_b, b_f + q_max, n_csz)
+    acc = _overlap_add_cols(dw, b_f, s, n_csz)            # (b_b, B_f, s)
+    dc_ref[...] = acc.reshape(b_b, b_f * s).astype(dc_ref.dtype)
+    dxi = jnp.dot(g.reshape(-1, n_fsz), d,
+                  preferred_element_type=jnp.float32)
+    dxi_ref[...] = dxi.reshape(b_b, b_f, n_fsz).astype(dxi_ref.dtype)
+
+
+def _stationary_adjoint_nn_kernel(g_ref, gh_ref, r_ref, dc_ref,
+                                  *, b_b: int, b_f: int, s: int, n_csz: int,
+                                  n_fsz: int):
+    """Noise-free adjoint: scatter-add only, no dxi output."""
+    q_max = (n_csz - 1) // s
+    g = g_ref[...]
+    g_ext = g
+    if q_max > 0:
+        g_ext = jnp.concatenate([gh_ref[:, b_f - q_max :], g], axis=1)
+    dw = jnp.dot(g_ext.reshape(-1, n_fsz), r_ref[...],
+                 preferred_element_type=jnp.float32)
+    dw = dw.reshape(b_b, b_f + q_max, n_csz)
+    acc = _overlap_add_cols(dw, b_f, s, n_csz)
+    dc_ref[...] = acc.reshape(b_b, b_f * s).astype(dc_ref.dtype)
 
 
 def _charted_adjoint_kernel(g_ref, gh_ref, rm_ref, rh_ref, d_ref,
                             dc_ref, dxi_ref,
-                            *, b_f: int, s: int, n_csz: int, n_fsz: int):
+                            *, b_b: int, b_f: int, s: int, n_csz: int,
+                            n_fsz: int):
     q_max = (n_csz - 1) // s
-    g = g_ref[0]                                          # (B_f, n_fsz)
-    # dw[t] = R[t]ᵀ g[t] — batched matvec, per-family stencils
-    dw = jax.lax.dot_general(
-        rm_ref[...], g, (((1,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32,
-    )                                                     # (B_f, n_csz)
+    g = g_ref[...]                                        # (b_b, B_f, n_fsz)
+    # dw[·, t] = R[t]ᵀ g[·, t] — batched matvec, per-family stencils
+    dw = jnp.einsum("btf,tfc->btc", g, rm_ref[...],
+                    preferred_element_type=jnp.float32)
     if q_max > 0:
-        g_h = gh_ref[0, b_f - q_max :]                    # (q_max, n_fsz)
-        r_h = rh_ref[b_f - q_max :]                       # (q_max, n_fsz, n_csz)
-        dw_h = jax.lax.dot_general(
-            r_h, g_h, (((1,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32,
-        )
-        dw = jnp.concatenate([dw_h, dw], axis=0)
+        g_h = gh_ref[:, b_f - q_max :]                    # (b_b, q_max, f)
+        r_h = rh_ref[b_f - q_max :]                       # (q_max, f, c)
+        dw_h = jnp.einsum("bqf,qfc->bqc", g_h, r_h,
+                          preferred_element_type=jnp.float32)
+        dw = jnp.concatenate([dw_h, dw], axis=1)
     acc = _overlap_add_cols(dw, b_f, s, n_csz)
-    dc_ref[0] = acc.reshape(b_f * s).astype(dc_ref.dtype)
-    dxi = jax.lax.dot_general(
-        d_ref[...], g, (((1,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32,
-    )
-    dxi_ref[0] = dxi.astype(dxi_ref.dtype)
+    dc_ref[...] = acc.reshape(b_b, b_f * s).astype(dc_ref.dtype)
+    dxi = jnp.einsum("btf,tfj->btj", g, d_ref[...],
+                     preferred_element_type=jnp.float32)
+    dxi_ref[...] = dxi.astype(dxi_ref.dtype)
+
+
+def _charted_adjoint_nn_kernel(g_ref, gh_ref, rm_ref, rh_ref, dc_ref,
+                               *, b_b: int, b_f: int, s: int, n_csz: int,
+                               n_fsz: int):
+    q_max = (n_csz - 1) // s
+    g = g_ref[...]
+    dw = jnp.einsum("btf,tfc->btc", g, rm_ref[...],
+                    preferred_element_type=jnp.float32)
+    if q_max > 0:
+        g_h = gh_ref[:, b_f - q_max :]
+        r_h = rh_ref[b_f - q_max :]
+        dw_h = jnp.einsum("bqf,qfc->bqc", g_h, r_h,
+                          preferred_element_type=jnp.float32)
+        dw = jnp.concatenate([dw_h, dw], axis=1)
+    acc = _overlap_add_cols(dw, b_f, s, n_csz)
+    dc_ref[...] = acc.reshape(b_b, b_f * s).astype(dc_ref.dtype)
 
 
 def halo_floor(n_csz: int, n_fsz: int) -> int:
@@ -181,14 +253,14 @@ def halo_floor(n_csz: int, n_fsz: int) -> int:
     return (n_csz - 1) // s
 
 
-def _common_shapes(coarse, xi, n_csz, n_fsz, block_families):
-    if xi.ndim < 2:
-        raise ValueError("xi must be (..., T, n_fsz)")
-    t = xi.shape[-2]
+def _block_shapes(t: int, batch: int, n_csz: int, n_fsz: int,
+                  block_families: int, batch_block: int):
     s = n_fsz // 2
     b_f = max(min(block_families, t), halo_floor(n_csz, n_fsz))
     nblk = -(-t // b_f)  # ceil
-    return t, s, b_f, nblk
+    b_b = max(1, min(batch_block, batch))
+    nbb = -(-batch // b_b)
+    return s, b_f, nblk, b_b, nbb
 
 
 def _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz):
@@ -199,78 +271,154 @@ def _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz):
     pad_c = need - coarse.shape[-1]
     if pad_c > 0:
         coarse = jnp.pad(coarse, [(0, 0)] * (coarse.ndim - 1) + [(0, pad_c)])
-    pad_t = nblk * b_f - t
-    if pad_t > 0:
-        xi = jnp.pad(
-            xi, [(0, 0)] * (xi.ndim - 2) + [(0, pad_t), (0, 0)]
-        )
+    if xi is not None:
+        pad_t = nblk * b_f - t
+        if pad_t > 0:
+            xi = jnp.pad(
+                xi, [(0, 0)] * (xi.ndim - 2) + [(0, pad_t), (0, 0)]
+            )
     return coarse, xi
+
+
+def _pad_batch(arrs, batch, b_b, nbb):
+    pad_b = nbb * b_b - batch
+    if pad_b == 0:
+        return arrs
+    return [None if a is None
+            else jnp.pad(a, [(0, pad_b)] + [(0, 0)] * (a.ndim - 1))
+            for a in arrs]
 
 
 def _refine_stationary_impl(meta, coarse: Array, xi: Array, r: Array,
                             d: Array) -> Array:
-    n_csz, n_fsz, block_families, interpret = meta
-    t, s, b_f, nblk = _common_shapes(coarse, xi, n_csz, n_fsz, block_families)
-    coarse, xi = _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz)
+    n_csz, n_fsz, block_families, batch_block, interpret = meta
+    t = xi.shape[-2]
     batch = coarse.shape[0]
+    s, b_f, nblk, b_b, nbb = _block_shapes(
+        t, batch, n_csz, n_fsz, block_families, batch_block)
+    coarse, xi = _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz)
+    coarse, xi = _pad_batch([coarse, xi], batch, b_b, nbb)
     b_c = b_f * s
 
     kern = functools.partial(
-        _stationary_kernel, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+        _stationary_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
     )
     out = pl.pallas_call(
         kern,
-        grid=(batch, nblk),
+        grid=(nblk, nbb),  # batch innermost: blocked operands stay resident
         in_specs=[
-            pl.BlockSpec((1, b_c), lambda b, i: (b, i)),        # main
-            pl.BlockSpec((1, b_c), lambda b, i: (b, i + 1)),    # halo view
-            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((n_fsz, n_csz), lambda b, i: (0, 0)),
-            pl.BlockSpec((n_fsz, n_fsz), lambda b, i: (0, 0)),
+            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),        # main
+            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i + 1)),    # halo view
+            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
+            pl.BlockSpec((n_fsz, n_csz), lambda i, b: (0, 0)),
+            pl.BlockSpec((n_fsz, n_fsz), lambda i, b: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, b_f * n_fsz), lambda b, i: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((batch, nblk * b_f * n_fsz),
+        out_specs=pl.BlockSpec((b_b, b_f * n_fsz), lambda i, b: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((nbb * b_b, nblk * b_f * n_fsz),
                                        coarse.dtype),
         interpret=interpret,
     )(coarse, coarse, xi, r, d)
-    return out[:, : t * n_fsz]
+    return out[:batch, : t * n_fsz]
+
+
+def _refine_stationary_nn_impl(meta, coarse: Array, r: Array) -> Array:
+    t, n_csz, n_fsz, block_families, batch_block, interpret = meta
+    batch = coarse.shape[0]
+    s, b_f, nblk, b_b, nbb = _block_shapes(
+        t, batch, n_csz, n_fsz, block_families, batch_block)
+    coarse, _ = _pad_operands(coarse, None, t, s, b_f, nblk, n_csz)
+    (coarse,) = _pad_batch([coarse], batch, b_b, nbb)
+    b_c = b_f * s
+
+    kern = functools.partial(
+        _stationary_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
+        n_fsz=n_fsz
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(nblk, nbb),
+        in_specs=[
+            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
+            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i + 1)),
+            pl.BlockSpec((n_fsz, n_csz), lambda i, b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_b, b_f * n_fsz), lambda i, b: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((nbb * b_b, nblk * b_f * n_fsz),
+                                       coarse.dtype),
+        interpret=interpret,
+    )(coarse, coarse, r)
+    return out[:batch, : t * n_fsz]
 
 
 def _refine_charted_impl(meta, coarse: Array, xi: Array, r: Array,
                          d: Array) -> Array:
-    n_csz, n_fsz, block_families, interpret = meta
-    t, s, b_f, nblk = _common_shapes(coarse, xi, n_csz, n_fsz, block_families)
+    n_csz, n_fsz, block_families, batch_block, interpret = meta
+    t = xi.shape[-2]
+    batch = coarse.shape[0]
+    s, b_f, nblk, b_b, nbb = _block_shapes(
+        t, batch, n_csz, n_fsz, block_families, batch_block)
     coarse, xi = _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz)
+    coarse, xi = _pad_batch([coarse, xi], batch, b_b, nbb)
     pad_t = nblk * b_f - t
     if pad_t > 0:
         r = jnp.pad(r, [(0, pad_t), (0, 0), (0, 0)])
         d = jnp.pad(d, [(0, pad_t), (0, 0), (0, 0)])
-    batch = coarse.shape[0]
     b_c = b_f * s
 
     kern = functools.partial(
-        _charted_kernel, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+        _charted_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
     )
     out = pl.pallas_call(
         kern,
-        grid=(batch, nblk),
+        grid=(nblk, nbb),
         in_specs=[
-            pl.BlockSpec((1, b_c), lambda b, i: (b, i)),
-            pl.BlockSpec((1, b_c), lambda b, i: (b, i + 1)),
-            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((b_f, n_fsz, n_csz), lambda b, i: (i, 0, 0)),
-            pl.BlockSpec((b_f, n_fsz, n_fsz), lambda b, i: (i, 0, 0)),
+            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
+            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i + 1)),
+            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
+            pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i, 0, 0)),
+            pl.BlockSpec((b_f, n_fsz, n_fsz), lambda i, b: (i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, b_f * n_fsz), lambda b, i: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((batch, nblk * b_f * n_fsz),
+        out_specs=pl.BlockSpec((b_b, b_f * n_fsz), lambda i, b: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((nbb * b_b, nblk * b_f * n_fsz),
                                        coarse.dtype),
         interpret=interpret,
     )(coarse, coarse, xi, r, d)
-    return out[:, : t * n_fsz]
+    return out[:batch, : t * n_fsz]
+
+
+def _refine_charted_nn_impl(meta, coarse: Array, r: Array) -> Array:
+    t, n_csz, n_fsz, block_families, batch_block, interpret = meta
+    batch = coarse.shape[0]
+    s, b_f, nblk, b_b, nbb = _block_shapes(
+        t, batch, n_csz, n_fsz, block_families, batch_block)
+    coarse, _ = _pad_operands(coarse, None, t, s, b_f, nblk, n_csz)
+    (coarse,) = _pad_batch([coarse], batch, b_b, nbb)
+    pad_t = nblk * b_f - t
+    if pad_t > 0:
+        r = jnp.pad(r, [(0, pad_t), (0, 0), (0, 0)])
+    b_c = b_f * s
+
+    kern = functools.partial(
+        _charted_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(nblk, nbb),
+        in_specs=[
+            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
+            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i + 1)),
+            pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_b, b_f * n_fsz), lambda i, b: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((nbb * b_b, nblk * b_f * n_fsz),
+                                       coarse.dtype),
+        interpret=interpret,
+    )(coarse, coarse, r)
+    return out[:batch, : t * n_fsz]
 
 
 # -- adjoint launches -----------------------------------------------------------
-def _adjoint_shapes(g, n_csz, n_fsz, block_families):
+def _adjoint_shapes(g, n_csz, n_fsz, block_families, batch_block):
     """Grid/padding for one adjoint launch. g: (B, T, n_fsz) fine cotangent.
 
     The adjoint flips the halo direction: coarse-block i receives window
@@ -281,68 +429,96 @@ def _adjoint_shapes(g, n_csz, n_fsz, block_families):
     overhang into; its main g-block is the zero back-padding.
     """
     t = g.shape[-2]
-    s = n_fsz // 2
-    b_f = max(min(block_families, t), halo_floor(n_csz, n_fsz))
-    nblk = -(-t // b_f)
-    pad = [(0, 0)] * (g.ndim - 2) + [(b_f, (nblk + 1) * b_f - t), (0, 0)]
-    return t, s, b_f, nblk, jnp.pad(g, pad)
+    batch = g.shape[0]
+    s, b_f, nblk, b_b, nbb = _block_shapes(
+        t, batch, n_csz, n_fsz, block_families, batch_block)
+    pad = [(0, nbb * b_b - batch), (b_f, (nblk + 1) * b_f - t), (0, 0)]
+    return t, s, b_f, nblk, b_b, nbb, jnp.pad(g, pad)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("coarse_len", "n_csz", "n_fsz", "block_families",
-                     "interpret"),
+                     "batch_block", "interpret", "noise"),
 )
-def refine_stationary_adjoint_pallas(g: Array, r: Array, d: Array, *,
+def refine_stationary_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
                                      coarse_len: int, n_csz: int, n_fsz: int,
                                      block_families: int = 256,
-                                     interpret: bool = False):
+                                     batch_block: int = 1,
+                                     interpret: bool = False,
+                                     noise: bool = True):
     """Fused adjoint of ``refine_stationary_pallas`` in (coarse, xi).
 
     g: (B, T*n_fsz) fine cotangent -> (dcoarse: (B, coarse_len),
     dxi: (B, T, n_fsz)). One launch computes both: the halo-overlapped
     scatter-add of the window cotangents ``g R`` and the noise transpose
-    ``g D`` share the fine-cotangent read.
+    ``g D`` share the fine-cotangent read. With ``noise=False`` the launch
+    computes (and returns) only ``dcoarse``.
     """
     batch = g.shape[0]
     g = g.reshape(batch, -1, n_fsz)
-    t, s, b_f, nblk, g_pad = _adjoint_shapes(g, n_csz, n_fsz, block_families)
+    t, s, b_f, nblk, b_b, nbb, g_pad = _adjoint_shapes(
+        g, n_csz, n_fsz, block_families, batch_block)
     b_c = b_f * s
 
+    if noise:
+        kern = functools.partial(
+            _stationary_adjoint_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
+            n_fsz=n_fsz
+        )
+        dc, dxi = pl.pallas_call(
+            kern,
+            grid=(nblk + 1, nbb),
+            in_specs=[
+                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i + 1, 0)),
+                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
+                pl.BlockSpec((n_fsz, n_csz), lambda i, b: (0, 0)),
+                pl.BlockSpec((n_fsz, n_fsz), lambda i, b: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
+                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_c), g.dtype),
+                jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_f, n_fsz),
+                                     g.dtype),
+            ],
+            interpret=interpret,
+        )(g_pad, g_pad, r, d)
+        return dc[:batch, :coarse_len], dxi[:batch, :t]
+
     kern = functools.partial(
-        _stationary_adjoint_kernel, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+        _stationary_adjoint_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
+        n_fsz=n_fsz
     )
-    dc, dxi = pl.pallas_call(
+    dc = pl.pallas_call(
         kern,
-        grid=(batch, nblk + 1),
+        grid=(nblk + 1, nbb),
         in_specs=[
-            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i + 1, 0)),  # main
-            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),      # halo
-            pl.BlockSpec((n_fsz, n_csz), lambda b, i: (0, 0)),
-            pl.BlockSpec((n_fsz, n_fsz), lambda b, i: (0, 0)),
+            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i + 1, 0)),
+            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
+            pl.BlockSpec((n_fsz, n_csz), lambda i, b: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, b_c), lambda b, i: (b, i)),
-            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((batch, (nblk + 1) * b_c), g.dtype),
-            jax.ShapeDtypeStruct((batch, (nblk + 1) * b_f, n_fsz), g.dtype),
-        ],
+        out_specs=pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_c),
+                                       g.dtype),
         interpret=interpret,
-    )(g_pad, g_pad, r, d)
-    return dc[:, :coarse_len], dxi[:, :t]
+    )(g_pad, g_pad, r)
+    return dc[:batch, :coarse_len]
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("coarse_len", "n_csz", "n_fsz", "block_families",
-                     "interpret"),
+                     "batch_block", "interpret", "noise"),
 )
-def refine_charted_adjoint_pallas(g: Array, r: Array, d: Array, *,
+def refine_charted_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
                                   coarse_len: int, n_csz: int, n_fsz: int,
                                   block_families: int = 256,
-                                  interpret: bool = False):
+                                  batch_block: int = 1,
+                                  interpret: bool = False,
+                                  noise: bool = True):
     """Fused adjoint of ``refine_charted_pallas`` (per-family matrices).
 
     The halo families' window cotangents need the *previous* block's
@@ -350,36 +526,60 @@ def refine_charted_adjoint_pallas(g: Array, r: Array, d: Array, *,
     """
     batch = g.shape[0]
     g = g.reshape(batch, -1, n_fsz)
-    t, s, b_f, nblk, g_pad = _adjoint_shapes(g, n_csz, n_fsz, block_families)
+    t, s, b_f, nblk, b_b, nbb, g_pad = _adjoint_shapes(
+        g, n_csz, n_fsz, block_families, batch_block)
     b_c = b_f * s
     pad_fam = [(b_f, (nblk + 1) * b_f - t)]
     r_pad = jnp.pad(r, pad_fam + [(0, 0), (0, 0)])
-    d_pad = jnp.pad(d, pad_fam + [(0, 0), (0, 0)])
+
+    if noise:
+        d_pad = jnp.pad(d, pad_fam + [(0, 0), (0, 0)])
+        kern = functools.partial(
+            _charted_adjoint_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
+            n_fsz=n_fsz
+        )
+        dc, dxi = pl.pallas_call(
+            kern,
+            grid=(nblk + 1, nbb),
+            in_specs=[
+                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i + 1, 0)),
+                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
+                pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i + 1, 0, 0)),
+                pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i, 0, 0)),
+                pl.BlockSpec((b_f, n_fsz, n_fsz), lambda i, b: (i + 1, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
+                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_c), g.dtype),
+                jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_f, n_fsz),
+                                     g.dtype),
+            ],
+            interpret=interpret,
+        )(g_pad, g_pad, r_pad, r_pad, d_pad)
+        return dc[:batch, :coarse_len], dxi[:batch, :t]
 
     kern = functools.partial(
-        _charted_adjoint_kernel, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+        _charted_adjoint_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
+        n_fsz=n_fsz
     )
-    dc, dxi = pl.pallas_call(
+    dc = pl.pallas_call(
         kern,
-        grid=(batch, nblk + 1),
+        grid=(nblk + 1, nbb),
         in_specs=[
-            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i + 1, 0)),  # main
-            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),      # halo
-            pl.BlockSpec((b_f, n_fsz, n_csz), lambda b, i: (i + 1, 0, 0)),
-            pl.BlockSpec((b_f, n_fsz, n_csz), lambda b, i: (i, 0, 0)),
-            pl.BlockSpec((b_f, n_fsz, n_fsz), lambda b, i: (i + 1, 0, 0)),
+            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i + 1, 0)),
+            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
+            pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i + 1, 0, 0)),
+            pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i, 0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, b_c), lambda b, i: (b, i)),
-            pl.BlockSpec((1, b_f, n_fsz), lambda b, i: (b, i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((batch, (nblk + 1) * b_c), g.dtype),
-            jax.ShapeDtypeStruct((batch, (nblk + 1) * b_f, n_fsz), g.dtype),
-        ],
+        out_specs=pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_c),
+                                       g.dtype),
         interpret=interpret,
-    )(g_pad, g_pad, r_pad, r_pad, d_pad)
-    return dc[:, :coarse_len], dxi[:, :t]
+    )(g_pad, g_pad, r_pad, r_pad)
+    return dc[:batch, :coarse_len]
 
 
 # -- custom VJP registration ----------------------------------------------------
@@ -421,14 +621,15 @@ def _make_refine_vjp(impl, adjoint, *, charted):
         return out, res
 
     def bwd(meta, res, g):
-        n_csz, n_fsz, block_families, interpret = meta
+        n_csz, n_fsz, block_families, batch_block, interpret = meta
         coarse, xi, r, d, r_pert, d_pert = res
         if isinstance(g, SymbolicZero):
             return (jnp.zeros_like(coarse), jnp.zeros_like(xi),
                     jnp.zeros_like(r), jnp.zeros_like(d))
         dc, dxi = adjoint(
             g, r, d, coarse_len=coarse.shape[-1], n_csz=n_csz, n_fsz=n_fsz,
-            block_families=block_families, interpret=interpret,
+            block_families=block_families, batch_block=batch_block,
+            interpret=interpret,
         )
         g3 = g.reshape(g.shape[:-1] + (xi.shape[-2], n_fsz))
         dr, dd = _matrix_cotangents(coarse, xi, g3, r, d, r_pert, d_pert,
@@ -439,45 +640,115 @@ def _make_refine_vjp(impl, adjoint, *, charted):
     return refine
 
 
+def _make_refine_nn_vjp(impl, adjoint, *, charted):
+    """Noise-free counterpart: two diff args (coarse, r), the adjoint launch
+    skips the dxi computation entirely."""
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+    def refine(meta, coarse, r):
+        return impl(meta, coarse, r)
+
+    def fwd(meta, coarse, r):
+        out = impl(meta, coarse.value, r.value)
+        return out, (coarse.value, r.value, () if r.perturbed else None)
+
+    def bwd(meta, res, g):
+        t, n_csz, n_fsz, block_families, batch_block, interpret = meta
+        coarse, r, r_pert = res
+        if isinstance(g, SymbolicZero):
+            return jnp.zeros_like(coarse), jnp.zeros_like(r)
+        dc = adjoint(
+            g, r, coarse_len=coarse.shape[-1], n_csz=n_csz, n_fsz=n_fsz,
+            block_families=block_families, batch_block=batch_block,
+            interpret=interpret, noise=False,
+        )
+        if r_pert is not None:
+            g3 = g.reshape(g.shape[:-1] + (t, n_fsz))
+            w = windows_1d(coarse, t, n_csz, n_fsz // 2)
+            eq = "...tf,...tc->tfc" if charted else "...tf,...tc->fc"
+            dr = jnp.einsum(eq, g3, w).astype(r.dtype)
+        else:
+            dr = jnp.zeros_like(r)
+        return dc.astype(coarse.dtype), dr
+
+    refine.defvjp(fwd, bwd, symbolic_zeros=True)
+    return refine
+
+
 _refine_stationary = _make_refine_vjp(
     _refine_stationary_impl, refine_stationary_adjoint_pallas, charted=False)
 _refine_charted = _make_refine_vjp(
     _refine_charted_impl, refine_charted_adjoint_pallas, charted=True)
+_refine_stationary_nn = _make_refine_nn_vjp(
+    _refine_stationary_nn_impl, refine_stationary_adjoint_pallas,
+    charted=False)
+_refine_charted_nn = _make_refine_nn_vjp(
+    _refine_charted_nn_impl, refine_charted_adjoint_pallas, charted=True)
 
 
 # -- public entry points --------------------------------------------------------
 @functools.partial(
     jax.jit,
-    static_argnames=("n_csz", "n_fsz", "block_families", "interpret"),
+    static_argnames=("n_csz", "n_fsz", "block_families", "batch_block",
+                     "interpret", "noise", "t"),
 )
-def refine_stationary_pallas(coarse: Array, xi: Array, r: Array, d: Array,
-                             *, n_csz: int, n_fsz: int,
+def refine_stationary_pallas(coarse: Array, xi: Array, r: Array,
+                             d: Array = None, *, n_csz: int, n_fsz: int,
                              block_families: int = 256,
-                             interpret: bool = False) -> Array:
+                             batch_block: int = 1,
+                             interpret: bool = False,
+                             noise: bool = True,
+                             t: int = None) -> Array:
     """Fused stationary refinement (differentiable). See module docstring.
 
     coarse: (B, L) halo-padded (L >= T*s + n_csz - s); xi: (B, T, n_fsz)
     r: (n_fsz, n_csz); d: (n_fsz, n_fsz)  ->  fine: (B, T*n_fsz)
+
+    batch_block: leading-batch rows processed per kernel invocation (the
+    sample-batch slab; matrices are fetched once per slab).
+    noise=False skips the ξ read and the noise add entirely (``xi``/``d``
+    may be None); the family count then comes from ``t`` (static).
     """
-    return _refine_stationary(
-        (n_csz, n_fsz, block_families, interpret), coarse, xi, r, d
+    if noise:
+        return _refine_stationary(
+            (n_csz, n_fsz, block_families, batch_block, interpret),
+            coarse, xi, r, d,
+        )
+    tt = t if t is not None else (xi.shape[-2] if xi is not None else None)
+    if tt is None:
+        raise ValueError("noise=False needs the family count: pass t=")
+    return _refine_stationary_nn(
+        (tt, n_csz, n_fsz, block_families, batch_block, interpret), coarse, r
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_csz", "n_fsz", "block_families", "interpret"),
+    static_argnames=("n_csz", "n_fsz", "block_families", "batch_block",
+                     "interpret", "noise", "t"),
 )
-def refine_charted_pallas(coarse: Array, xi: Array, r: Array, d: Array,
-                          *, n_csz: int, n_fsz: int,
+def refine_charted_pallas(coarse: Array, xi: Array, r: Array,
+                          d: Array = None, *, n_csz: int, n_fsz: int,
                           block_families: int = 256,
-                          interpret: bool = False) -> Array:
+                          batch_block: int = 1,
+                          interpret: bool = False,
+                          noise: bool = True,
+                          t: int = None) -> Array:
     """Fused charted refinement with per-family matrices (paper §4.3),
     differentiable via the hand-written adjoint kernels.
 
     coarse: (B, L); xi: (B, T, n_fsz); r: (T, n_fsz, n_csz);
     d: (T, n_fsz, n_fsz)  ->  fine: (B, T*n_fsz)
+
+    See ``refine_stationary_pallas`` for batch_block / noise semantics;
+    with noise=False the family count is taken from ``r``.
     """
-    return _refine_charted(
-        (n_csz, n_fsz, block_families, interpret), coarse, xi, r, d
+    if noise:
+        return _refine_charted(
+            (n_csz, n_fsz, block_families, batch_block, interpret),
+            coarse, xi, r, d,
+        )
+    return _refine_charted_nn(
+        (r.shape[0], n_csz, n_fsz, block_families, batch_block, interpret),
+        coarse, r,
     )

@@ -1,0 +1,413 @@
+"""Single-launch fused N-D refinement level — the megakernel (DESIGN.md §10).
+
+The per-axis N-D path (``nd.refine_axes``) executes one refinement level as
+``d`` separate Pallas launches with the intermediate field round-tripping
+through HBM between axis passes (plus a relayout around every pass). For the
+flagship 3-D dust map that is ~3x the minimal field traffic. This module
+collapses a whole level into ONE ``pallas_call``:
+
+  * each grid step loads a coarse tile — a slab of ``b_f`` axis-0 families
+    (halo via the second-shifted-view trick, DESIGN.md §3) times the FULL
+    extent of every trailing axis — into VMEM,
+  * performs all ``d`` per-axis Kronecker contractions back-to-back in
+    VMEM/VREGs (window build per axis is the same contiguous-reshape +
+    static-row-shift trick as the 1-D kernels: no gather, no strided loads),
+  * adds the correlated noise ``sqrt(D_0) ξ`` (the noise factors of axes
+    ``1..d-1`` are pre-contracted into ξ outside, exactly like
+    ``nd.refine_axes``), and
+  * writes the fine tile once.
+
+HBM traffic per level drops from ``d·(read+write N)`` plus relayouts to
+``read L + read ξ + write N`` — the 1-D kernel's traffic equation, now at
+any dimensionality (``roofline.level_traffic`` carries the model).
+
+Tiling is along axis 0 only; the trailing axes ride whole inside the tile.
+When the joint tile + halos exceed the VMEM budget the dispatch layer falls
+back to the per-axis passes (``dispatch.autotune_nd_fused`` returns None —
+the fallback rule of DESIGN.md §10).
+
+A native leading **sample-batch dimension** (``s_b`` samples per tile) lets
+batched posterior sampling / serving amortize every matrix load across the
+slab instead of lifting the batch into the grid.
+
+Differentiation: the core carries a ``jax.custom_vjp``. At fixed matrices
+(MAP/ADVI inference, ``apply_sqrt_T``) the backward hand-composes the
+existing 1-D *adjoint* kernels in reverse axis order — each a fused
+gather-free launch, the non-axis-0 ones in ``noise=False`` mode (no dxi).
+When the matrices are perturbed (learning θ) the backward falls back to
+``jax.vjp`` of the independent jnp reference ``_nd_fused_ref`` — the
+parameter-sized window einsums of DESIGN.md §9, gated by
+``symbolic_zeros`` so inference never pays them.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.custom_derivatives import SymbolicZero
+from jax.experimental import pallas as pl
+
+from repro.core.refine import LevelGeom
+
+from .icr_refine import (
+    interpret_default as _interpret_default,
+    refine_charted_adjoint_pallas,
+    refine_stationary_adjoint_pallas,
+)
+from .ref import windows_1d
+
+Array = jnp.ndarray
+
+
+# -- in-VMEM building blocks ----------------------------------------------------
+def _slice_axis(x: Array, ax: int, length: int) -> Array:
+    if x.shape[ax] == length:
+        return x
+    idx = [slice(None)] * x.ndim
+    idx[ax] = slice(0, length)
+    return x[tuple(idx)]
+
+
+def _axis_windows(x: Array, ax: int, t: int, s: int, n_csz: int) -> Array:
+    """Window matrix along axis ``ax``: (..., rows*s, ...) -> (..., t, n_csz,
+    ...) with the window dim inserted right after ``ax``.
+
+    Same contiguous-reshape + static-row-shift construction as the 1-D
+    ``_window_cols`` (element ``t·s + k`` = reshape(rows, s)[t + k//s, k%s])
+    applied to an interior axis — no gather, no strided access.
+    """
+    q_max = (n_csz - 1) // s
+    shp = x.shape
+    rows = shp[ax] // s  # == t + q_max by construction
+    assert rows >= t + q_max
+    resh = x.reshape(shp[:ax] + (rows, s) + shp[ax + 1 :])
+    cols = []
+    for k in range(n_csz):
+        q, r = divmod(k, s)
+        idx = [slice(None)] * resh.ndim
+        idx[ax] = slice(q, q + t)
+        idx[ax + 1] = r
+        cols.append(resh[tuple(idx)])
+    return jnp.stack(cols, axis=ax + 1)
+
+
+def _contract_windows(w: Array, r: Array, ax: int, *, merge: bool = True
+                      ) -> Array:
+    """Contract the window dim (at ``ax + 1``) with a refinement factor.
+
+    w: (..., t, n_csz, ...); r: (n_fsz, n_csz) shared or (t, n_fsz, n_csz)
+    per-family -> (..., t*n_fsz, ...) (or unmerged (..., t, n_fsz, ...)).
+    """
+    n = w.ndim
+    ls = [chr(ord("a") + i) for i in range(n)]
+    t_l, c_l = ls[ax], ls[ax + 1]
+    f_l = chr(ord("a") + n)
+    out_ls = list(ls)
+    out_ls[ax + 1] = f_l
+    rsub = (t_l + f_l + c_l) if r.ndim == 3 else (f_l + c_l)
+    out = jnp.einsum(f"{''.join(ls)},{rsub}->{''.join(out_ls)}", w, r,
+                     preferred_element_type=jnp.float32)
+    if merge:
+        shp = out.shape
+        out = out.reshape(shp[:ax] + (shp[ax] * shp[ax + 1],) + shp[ax + 2 :])
+    return out
+
+
+# -- the megakernel body --------------------------------------------------------
+def _nd_fused_kernel(*refs, nd: int, csz: int, fsz: int, T: tuple,
+                     charted: tuple, b_f: int, s_b: int):
+    coarse_ref, halo_ref, xi_ref, r0_ref, d0_ref = refs[:5]
+    rt_refs = refs[5 : 5 + nd - 1]
+    out_ref = refs[-1]
+    s = fsz // 2
+    q_max = (csz - 1) // s
+
+    x = jnp.concatenate([coarse_ref[...], halo_ref[:, : q_max * s]], axis=1)
+    # (s_b, (b_f + q_max)*s, *Lp_trail) — all d contractions happen on this
+    # tile in VMEM; nothing intermediate ever goes back to HBM.
+    for a in range(nd - 1, 0, -1):
+        ax = 1 + a
+        x = _slice_axis(x, ax, (T[a] + q_max) * s)
+        w = _axis_windows(x, ax, T[a], s, csz)
+        x = _contract_windows(w, rt_refs[a - 1][...], ax)
+
+    w0 = _axis_windows(x, 1, b_f, s, csz)          # (s_b, b_f, csz, *F_trail)
+    fine = _contract_windows(w0, r0_ref[...], 1, merge=False)
+    prod_f = int(np.prod(fine.shape[3:])) if nd > 1 else 1
+    fine = fine.reshape(s_b, b_f, fsz, prod_f)
+
+    xi = xi_ref[...].reshape(s_b, b_f, fsz, prod_f)
+    d0 = d0_ref[...]
+    if d0.ndim == 2:
+        fine = fine + jnp.einsum("sbjp,fj->sbfp", xi, d0,
+                                 preferred_element_type=jnp.float32)
+    else:
+        fine = fine + jnp.einsum("sbjp,bfj->sbfp", xi, d0,
+                                 preferred_element_type=jnp.float32)
+    out_ref[...] = fine.reshape(s_b, b_f * fsz, prod_f).astype(out_ref.dtype)
+
+
+def _nd_fused_impl(meta, field: Array, xi0: Array, r0: Array, d0: Array,
+                   rts: tuple) -> Array:
+    nd, csz, fsz, T, charted, b_f, s_b, interpret = meta
+    s = fsz // 2
+    sp = field.shape[0]
+    nbs = sp // s_b
+    lp_trail = field.shape[2:]
+    nblk = xi0.shape[1] // (b_f * fsz)
+    prod_f = xi0.shape[2]
+
+    zeros_t = (0,) * (nd - 1)
+    in_specs = [
+        pl.BlockSpec((s_b, b_f * s) + lp_trail,
+                     lambda i, b: (b, i) + zeros_t),               # main
+        pl.BlockSpec((s_b, b_f * s) + lp_trail,
+                     lambda i, b: (b, i + 1) + zeros_t),           # halo view
+        pl.BlockSpec((s_b, b_f * fsz, prod_f), lambda i, b: (b, i, 0)),
+    ]
+    if charted[0]:
+        in_specs += [
+            pl.BlockSpec((b_f, fsz, csz), lambda i, b: (i, 0, 0)),
+            pl.BlockSpec((b_f, fsz, fsz), lambda i, b: (i, 0, 0)),
+        ]
+    else:
+        in_specs += [
+            pl.BlockSpec((fsz, csz), lambda i, b: (0, 0)),
+            pl.BlockSpec((fsz, fsz), lambda i, b: (0, 0)),
+        ]
+    for a in range(1, nd):
+        if charted[a]:
+            in_specs.append(
+                pl.BlockSpec((T[a], fsz, csz), lambda i, b: (0, 0, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((fsz, csz), lambda i, b: (0, 0)))
+
+    kern = functools.partial(
+        _nd_fused_kernel, nd=nd, csz=csz, fsz=fsz, T=T, charted=charted,
+        b_f=b_f, s_b=s_b,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(nblk, nbs),  # samples innermost: blocked matrices stay resident
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((s_b, b_f * fsz, prod_f),
+                               lambda i, b: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, nblk * b_f * fsz, prod_f),
+                                       field.dtype),
+        interpret=interpret,
+    )(field, field, xi0, r0, d0, *rts)
+    return out
+
+
+def _nd_fused_ref(meta, field: Array, xi0: Array, r0: Array, d0: Array,
+                  rts: tuple) -> Array:
+    """Pure-jnp reference of the megakernel core (same padded operands).
+
+    Ground truth for the parity tests and the learned-θ backward: windows
+    via strided slices, contractions as einsums — materializes what the
+    kernel keeps in VMEM.
+    """
+    nd, csz, fsz, T, charted, b_f, s_b, interpret = meta
+    s = fsz // 2
+    q_max = (csz - 1) // s
+    sp = field.shape[0]
+    t0p = xi0.shape[1] // fsz
+    prod_f = xi0.shape[2]
+
+    x = field
+    for a in range(nd - 1, 0, -1):
+        ax = 1 + a
+        arr = jnp.moveaxis(x, ax, -1)[..., : (T[a] + q_max) * s]
+        w = windows_1d(arr, T[a], csz, s)
+        eq = "...tc,tfc->...tf" if rts[a - 1].ndim == 3 else "...tc,fc->...tf"
+        fine = jnp.einsum(eq, w, rts[a - 1])
+        fine = fine.reshape(arr.shape[:-1] + (T[a] * fsz,))
+        x = jnp.moveaxis(fine, -1, ax)
+
+    arr = jnp.moveaxis(x, 1, -1)                  # (sp, *F_trail, L0p)
+    w = windows_1d(arr, t0p, csz, s)
+    eq = "...tc,tfc->...tf" if r0.ndim == 3 else "...tc,fc->...tf"
+    fine = jnp.einsum(eq, w, r0)                  # (sp, *F_trail, T0p, fsz)
+    fine = fine.reshape(sp, prod_f, t0p, fsz).transpose(0, 2, 3, 1)
+
+    xi3 = xi0.reshape(sp, t0p, fsz, prod_f)
+    eq = "stjp,tfj->stfp" if d0.ndim == 3 else "stjp,fj->stfp"
+    fine = fine + jnp.einsum(eq, xi3, d0)
+    return fine.reshape(sp, t0p * fsz, prod_f).astype(field.dtype)
+
+
+# -- custom VJP -----------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _nd_fused_core(meta, field, xi0, r0, d0, rts):
+    return _nd_fused_impl(meta, field, xi0, r0, d0, rts)
+
+
+def _core_fwd(meta, field, xi0, r0, d0, rts):
+    vals = (field.value, xi0.value, r0.value, d0.value,
+            tuple(t.value for t in rts))
+    out = _nd_fused_impl(meta, *vals[:4], vals[4])
+    mats_pert = (r0.perturbed or d0.perturbed
+                 or any(t.perturbed for t in rts))
+    return out, vals + (() if mats_pert else None,)
+
+
+def _core_bwd(meta, res, g):
+    nd, csz, fsz, T, charted, b_f, s_b, interpret = meta
+    field, xi0, r0, d0, rts, mats_pert = res
+    zeros = (jnp.zeros_like(field), jnp.zeros_like(xi0),
+             jnp.zeros_like(r0), jnp.zeros_like(d0),
+             tuple(jnp.zeros_like(t) for t in rts))
+    if isinstance(g, SymbolicZero):
+        return zeros
+    if mats_pert is not None:
+        # learning θ: the matrix cotangents need the per-stage window
+        # tensors; replay the jnp reference under jax.vjp (parameter-sized
+        # einsums, DESIGN.md §9 — never the hot inference path).
+        _, vjp = jax.vjp(
+            lambda fl, x, a, b, c: _nd_fused_ref(meta, fl, x, a, b, c),
+            field, xi0, r0, d0, rts)
+        return vjp(g)
+
+    # fixed matrices: compose the 1-D adjoint kernels in reverse axis order.
+    from .dispatch import autotune_block_families  # lazy: import cycle
+
+    s = fsz // 2
+    q_max = (csz - 1) // s
+    sp = field.shape[0]
+    l0p = field.shape[1]
+    lp_trail = field.shape[2:]
+    t0p = xi0.shape[1] // fsz
+    prod_f = xi0.shape[2]
+    f_trail = tuple(T[a] * fsz for a in range(1, nd))
+
+    # axis-0 adjoint (with noise: dxi shares the fine-cotangent read)
+    gb = g.reshape(sp, t0p * fsz, prod_f)
+    gb = jnp.moveaxis(gb, 1, -1).reshape(sp * prod_f, t0p * fsz)
+    bf0 = autotune_block_families(t0p, csz, fsz, charted=charted[0])
+    adj0 = (refine_charted_adjoint_pallas if charted[0]
+            else refine_stationary_adjoint_pallas)
+    dc0, dxi0 = adj0(gb, r0, d0, coarse_len=l0p, n_csz=csz, n_fsz=fsz,
+                     block_families=bf0, interpret=interpret)
+    dxi = dxi0.reshape(sp, prod_f, t0p, fsz).transpose(0, 2, 3, 1)
+    dxi = dxi.reshape(sp, t0p * fsz, prod_f).astype(xi0.dtype)
+    cur = dc0.reshape((sp,) + f_trail + (l0p,))
+    cur = jnp.moveaxis(cur, -1, 1)                # (sp, L0p, *F_trail)
+
+    # trailing-axis adjoints, noise=False: no ξ was injected on those passes
+    for a in range(1, nd):
+        ax = 1 + a
+        arr = jnp.moveaxis(cur, ax, -1)
+        bshape = arr.shape[:-1]
+        g_a = arr.reshape(-1, T[a] * fsz)
+        bf_a = autotune_block_families(T[a], csz, fsz, charted=charted[a])
+        adj = (refine_charted_adjoint_pallas if charted[a]
+               else refine_stationary_adjoint_pallas)
+        used = (T[a] + q_max) * s
+        dca = adj(g_a, rts[a - 1], coarse_len=used, n_csz=csz, n_fsz=fsz,
+                  block_families=bf_a, interpret=interpret, noise=False)
+        if lp_trail[a - 1] > used:  # tail the forward's tile slice dropped
+            dca = jnp.pad(dca, [(0, 0), (0, lp_trail[a - 1] - used)])
+        cur = jnp.moveaxis(dca.reshape(bshape + (lp_trail[a - 1],)), -1, ax)
+
+    return (cur.astype(field.dtype), dxi, zeros[2], zeros[3], zeros[4])
+
+
+_nd_fused_core.defvjp(_core_fwd, _core_bwd, symbolic_zeros=True)
+
+
+# -- public wrapper -------------------------------------------------------------
+def refine_nd_fused(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
+                    interpret: bool | None = None,
+                    block_families: int | None = None,
+                    sample_block: int | None = None,
+                    sample_axis: bool = False) -> Array:
+    """One fused Pallas launch for a whole N-D refinement level.
+
+    Drop-in for ``nd.refine_axes`` (bit-compatible at 1e-5 given the same
+    per-axis factors). With ``sample_axis=True`` the leading dimension of
+    ``field``/``xi`` is a sample batch processed natively inside the kernel
+    tiles (``s_b`` samples per grid step).
+
+    field: (*geom.coarse_shape) or (S, *coarse_shape);
+    xi: (prod(T), n_fsz^d) or (S, prod(T), n_fsz^d);
+    rs[a]/ds[a]: per-axis factors from ``axis_refinement_matrices_level``.
+    """
+    from .dispatch import autotune_nd_fused  # lazy: avoid import cycle
+
+    nd = len(geom.coarse_shape)
+    if nd < 2:
+        raise ValueError("refine_nd_fused needs an N-D level (ndim >= 2)")
+    fsz, csz, b = geom.n_fsz, geom.n_csz, geom.b
+    s = fsz // 2
+    q_max = (csz - 1) // s
+    T = tuple(geom.T)
+    charted = tuple(rs[a].ndim == 3 for a in range(nd))
+    interpret = _interpret_default() if interpret is None else interpret
+
+    if not sample_axis:
+        field, xi = field[None], xi[None]
+    n_s = field.shape[0]
+
+    blocks = autotune_nd_fused(geom, charted=charted, samples=n_s)
+    if blocks is None:
+        raise ValueError(
+            "fused N-D tile exceeds the VMEM budget; dispatch should have "
+            "routed this level to the per-axis passes (nd.refine_axes)"
+        )
+    b_f, s_b = blocks
+    if block_families is not None:
+        b_f = max(min(block_families, T[0]), q_max, 1)
+    if sample_block is not None:
+        s_b = max(1, min(sample_block, n_s))
+
+    # -- excitation: pre-contract noise factors of axes 1..d-1 -----------------
+    xi_nd = xi.reshape((n_s,) + T + (fsz,) * nd)
+    for a in range(1, nd):
+        x2 = jnp.moveaxis(xi_nd, (1 + a, 1 + nd + a), (-2, -1))
+        if ds[a].ndim == 2:
+            x2 = jnp.einsum("...tj,fj->...tf", x2, ds[a])
+        else:
+            x2 = jnp.einsum("...tj,tfj->...tf", x2, ds[a])
+        xi_nd = jnp.moveaxis(x2, (-2, -1), (1 + a, 1 + nd + a))
+    perm = [0, 1, 1 + nd]
+    for a in range(1, nd):
+        perm += [1 + a, 1 + nd + a]
+    xi0 = xi_nd.transpose(perm).reshape(n_s, T[0] * fsz, -1)
+
+    # -- field: reflect pre-pad every axis once, then tile-shape pads ----------
+    if geom.boundary == "reflect":
+        field = jnp.pad(field, [(0, 0)] + [(b, b)] * nd, mode="reflect")
+    pads = [(0, 0), (0, 0)]
+    for a in range(1, nd):
+        pads.append((0, max(0, (T[a] + q_max) * s - field.shape[1 + a])))
+    field = jnp.pad(field, pads)
+
+    nblk = -(-T[0] // b_f)
+    nblk2 = max(nblk + 1, -(-field.shape[1] // (b_f * s)))
+    l0p = nblk2 * b_f * s
+    field = jnp.pad(
+        field, [(0, 0), (0, l0p - field.shape[1])] + [(0, 0)] * (nd - 1))
+
+    pad_t0 = nblk * b_f - T[0]
+    if pad_t0 > 0:
+        xi0 = jnp.pad(xi0, [(0, 0), (0, pad_t0 * fsz), (0, 0)])
+    r0, d0 = rs[0], ds[0]
+    if charted[0] and pad_t0 > 0:
+        r0 = jnp.pad(r0, [(0, pad_t0), (0, 0), (0, 0)])
+        d0 = jnp.pad(d0, [(0, pad_t0), (0, 0), (0, 0)])
+
+    nbs = -(-n_s // s_b)
+    pad_s = nbs * s_b - n_s
+    if pad_s > 0:
+        field = jnp.pad(field, [(0, pad_s)] + [(0, 0)] * nd)
+        xi0 = jnp.pad(xi0, [(0, pad_s), (0, 0), (0, 0)])
+
+    meta = (nd, csz, fsz, T, charted, b_f, s_b, interpret)
+    out = _nd_fused_core(meta, field, xi0, r0, d0,
+                         tuple(rs[a] for a in range(1, nd)))
+    out = out[:n_s, : T[0] * fsz]
+    f_trail = tuple(T[a] * fsz for a in range(1, nd))
+    out = out.reshape((n_s, T[0] * fsz) + f_trail)
+    return out if sample_axis else out[0]

@@ -30,20 +30,23 @@ def windows_1d(coarse: Array, t: int, n_csz: int, s: int) -> Array:
 
 
 def refine_stationary_ref(coarse: Array, xi: Array, r: Array,
-                          sqrt_d: Array) -> Array:
+                          sqrt_d: Array = None) -> Array:
     """Stationary refinement (paper Eq. 11–12), one shared stencil.
 
     coarse: (..., L) halo-padded, L = T*s + (n_csz - s)
-    xi:     (..., T, n_fsz)
+    xi:     (..., T, n_fsz)  (None: noise-free — mirrors the kernels'
+            ``noise=False`` mode; T is recovered from L)
     r:      (n_fsz, n_csz);  sqrt_d: (n_fsz, n_fsz)
     -> fine (..., T * n_fsz)
     """
     n_fsz, n_csz = r.shape
     s = n_fsz // 2
-    t = xi.shape[-2]
+    t = (xi.shape[-2] if xi is not None
+         else (coarse.shape[-1] - (n_csz - s)) // s)
     w = windows_1d(coarse, t, n_csz, s)  # (..., T, n_csz)
     fine = jnp.einsum("...tc,fc->...tf", w, r)
-    fine = fine + jnp.einsum("...tj,fj->...tf", xi, sqrt_d)
+    if xi is not None:
+        fine = fine + jnp.einsum("...tj,fj->...tf", xi, sqrt_d)
     return fine.reshape(*fine.shape[:-2], t * n_fsz)
 
 
@@ -107,11 +110,11 @@ def refine_axes_ref(field: Array, xi: Array, rs, ds, *, T, n_fsz: int,
 
 
 def refine_charted_ref(coarse: Array, xi: Array, r: Array,
-                       sqrt_d: Array) -> Array:
+                       sqrt_d: Array = None) -> Array:
     """Charted (non-stationary) refinement: per-family matrices (paper §4.3).
 
     coarse: (..., L) halo-padded
-    xi:     (..., T, n_fsz)
+    xi:     (..., T, n_fsz)  (None: noise-free, kernels' ``noise=False``)
     r:      (T, n_fsz, n_csz);  sqrt_d: (T, n_fsz, n_fsz)
     -> fine (..., T * n_fsz)
     """
@@ -119,7 +122,8 @@ def refine_charted_ref(coarse: Array, xi: Array, r: Array,
     s = n_fsz // 2
     w = windows_1d(coarse, t, n_csz, s)  # (..., T, n_csz)
     fine = jnp.einsum("...tc,tfc->...tf", w, r)
-    fine = fine + jnp.einsum("...tj,tfj->...tf", xi, sqrt_d)
+    if xi is not None:
+        fine = fine + jnp.einsum("...tj,tfj->...tf", xi, sqrt_d)
     return fine.reshape(*fine.shape[:-2], t * n_fsz)
 
 

@@ -1,3 +1,5 @@
 from .analysis import RooflineTerms, analyze_compiled, collective_bytes
+from .level_traffic import refine_level_traffic
 
-__all__ = ["RooflineTerms", "analyze_compiled", "collective_bytes"]
+__all__ = ["RooflineTerms", "analyze_compiled", "collective_bytes",
+           "refine_level_traffic"]

@@ -276,8 +276,12 @@ class TestDispatch:
         assert dispatch.route_for(geom_1d_ch) == dispatch.ROUTE_CHARTED_1D
         geom_2d = LevelGeom.for_level(regular_chart((8, 8), 1), 0)
         assert dispatch.route_for(geom_2d) == dispatch.ROUTE_REFERENCE
+        # small N-D level: the single-launch megakernel fits VMEM
         assert (dispatch.route_for(geom_2d, have_axis_mats=True)
-                == dispatch.ROUTE_AXES_ND)
+                == dispatch.ROUTE_ND_FUSED)
+        # when the joint tile + halos bust the budget, fall back to the
+        # per-axis passes (the DESIGN.md §10 fallback rule)
+        assert dispatch.autotune_nd_fused(geom_2d, vmem_budget=64) is None
 
     def test_autotune_monotone_and_bounded(self):
         small = dispatch.autotune_block_families(10**6, 5, 4, charted=True)
@@ -320,7 +324,7 @@ class TestDispatch:
     def test_plan_dust_chart(self):
         c = galactic_dust_chart((6, 8, 8), n_levels=2)
         plan = dispatch.plan(c, platform="cpu")
-        assert [e["route"] for e in plan] == [dispatch.ROUTE_AXES_ND] * 2
+        assert [e["route"] for e in plan] == [dispatch.ROUTE_ND_FUSED] * 2
         assert all(e["backend"] == dispatch.BACKEND_INTERPRET for e in plan)
         plan_tpu = dispatch.plan(c, platform="tpu")
         assert all(e["backend"] == dispatch.BACKEND_PALLAS for e in plan_tpu)
@@ -566,6 +570,6 @@ class TestApplySqrtT:
     def test_plan_reports_fused_vjp(self):
         c = galactic_dust_chart((6, 8, 8), n_levels=2)
         for entry in dispatch.plan(c, platform="cpu"):
-            assert entry["vjp"]["route"] == dispatch.ROUTE_AXES_ND + "-adjoint"
+            assert entry["vjp"]["route"] == dispatch.ROUTE_ND_FUSED + "-adjoint"
             assert entry["vjp"]["backend"] == dispatch.BACKEND_INTERPRET
             assert entry["vjp"]["block_families"] == entry["block_families"]

@@ -1,0 +1,54 @@
+"""Plan-introspection smoke checks (ISSUE 3 satellite; run as its own CI
+step): the flagship dust-map chart must route every level through the fused
+megakernel — forward AND backward — and the ``dispatch.plan`` byte
+estimates must agree with the roofline traffic model within 10%.
+"""
+import numpy as np
+
+from repro.core.charts import galactic_dust_chart
+from repro.core.refine import LevelGeom
+from repro.kernels import dispatch
+from repro.roofline import refine_level_traffic
+
+# the examples/dust_map_3d.py chart
+CHART = galactic_dust_chart((8, 16, 16), n_levels=3)
+
+
+def test_dust_map_levels_route_nd_fused():
+    """Every level: nd-fused forward, nd-fused-adjoint backward. If a level
+    legitimately falls off the fused path (VMEM fallback rule), it must land
+    on nd-axes — never the jnp reference."""
+    for e in dispatch.plan(CHART, platform="cpu"):
+        assert e["route"] in (dispatch.ROUTE_ND_FUSED,
+                              dispatch.ROUTE_AXES_ND), e
+        assert e["route"] == dispatch.ROUTE_ND_FUSED, (
+            "dust-map level fell back off the megakernel", e)
+        assert e["vjp"]["route"] == dispatch.ROUTE_ND_FUSED + "-adjoint", e
+        assert e["vjp"]["backend"] != dispatch.BACKEND_REFERENCE
+
+
+def test_plan_bytes_match_roofline_within_10pct():
+    """plan() must report the roofline model's numbers (and the model must
+    be dominated by the minimal-traffic terms: read L + read ξ + write N)."""
+    for e in dispatch.plan(CHART, platform="cpu"):
+        geom = LevelGeom.for_level(CHART, e["level"])
+        for route in (dispatch.ROUTE_ND_FUSED, dispatch.ROUTE_AXES_ND,
+                      dispatch.ROUTE_REFERENCE):
+            model = refine_level_traffic(geom, route)["total"]
+            got = e["hbm_bytes"][route]
+            assert abs(got - model) <= 0.10 * model, (route, got, model)
+        # sanity: the fused estimate is within 10% of the irreducible
+        # field + ξ + output traffic (matrices are a rounding error here)
+        n_out = int(np.prod(geom.fine_shape))
+        minimal = 4 * (int(np.prod(geom.coarse_shape)) + 2 * n_out)
+        fused = e["hbm_bytes"][dispatch.ROUTE_ND_FUSED]
+        assert fused <= 1.35 * minimal, (fused, minimal)
+
+
+def test_plan_quantifies_fused_win():
+    """The per-level traffic reduction that motivates the megakernel
+    (>= 2x on every 3-D level) is visible straight from plan()."""
+    for e in dispatch.plan(CHART, platform="cpu"):
+        hb = e["hbm_bytes"]
+        assert hb[dispatch.ROUTE_ND_FUSED] * 2 <= hb[dispatch.ROUTE_AXES_ND]
+        assert hb[dispatch.ROUTE_ND_FUSED] * 2 <= hb[dispatch.ROUTE_REFERENCE]
