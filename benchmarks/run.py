@@ -6,6 +6,8 @@
               vs jnp reference — 2-D/3-D parity (<=1e-5) + wall time
   batch     — batched-sample throughput: native sample-batch kernel dim
               vs a per-sample loop (DESIGN.md §10)
+  dtype     — mixed-precision policy (DESIGN.md §11): fp32 vs bf16 storage
+              x pyramid on/off — walltime, modeled bytes, bandwidth util
   scaling   — paper Eq. 13 (O(N) check, log-log slope)
   vi        — §3.2 end-to-end: standardized GP regression (MAP)
   grad      — one value_and_grad step of the §3.2 loss: fused adjoint
@@ -13,11 +15,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--quick`` trims sizes for
 CI; ``--only <name>`` runs one table; ``--json <path>`` additionally emits
-machine-readable rows (name, us_per_call, route, backend, estimated HBM
-bytes, bandwidth utilization against the TPU-v5e roofline constant — on
-CPU/interpret backends the utilization is the *would-be* number at TPU
-bandwidth, a traffic metric, not a measurement) so the perf trajectory is
-tracked across PRs (CI uploads ``BENCH_PR3.json``).
+machine-readable rows (name, us_per_call, route, backend, dtype,
+estimated HBM bytes, bandwidth utilization against the TPU-v5e roofline
+constant — on CPU/interpret backends the utilization is the *would-be*
+number at TPU bandwidth, a traffic metric, not a measurement) so the perf
+trajectory is tracked across PRs (CI uploads ``BENCH_PR4.json``).
 """
 import argparse
 import json
@@ -31,7 +33,7 @@ _ROWS = []
 def _report(name: str, value: float, derived: str = "", **extra):
     print(f"{name},{value:.6g},{derived}", flush=True)
     row = {"name": name, "us_per_call": float(value), "derived": derived}
-    for key in ("route", "backend", "hbm_bytes", "bw_util"):
+    for key in ("route", "backend", "hbm_bytes", "bw_util", "dtype"):
         if key in extra and extra[key] is not None:
             row[key] = extra[key]
     _ROWS.append(row)
@@ -129,7 +131,7 @@ def _write_json(path: str, *, quick: bool) -> None:
 
     doc = {
         "meta": {
-            "pr": "PR3",
+            "pr": "PR4",
             "backend": jax.default_backend(),
             "python": platform.python_version(),
             "jax": jax.__version__,
@@ -147,7 +149,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write machine-readable rows (BENCH_PR3.json)")
+                    help="also write machine-readable rows (BENCH_PR4.json)")
     args = ap.parse_args()
 
     from . import accuracy, speed
@@ -160,6 +162,7 @@ def main() -> None:
         "nd": lambda: (speed.run_nd(_report),
                        accuracy.run_nd_cov(_report)),
         "batch": lambda: speed.run_batch(_report, quick=args.quick),
+        "dtype": lambda: speed.run_dtype(_report, quick=args.quick),
         "scaling": lambda: speed.run_scaling(
             _report, sizes=(1024, 4096, 16384) if args.quick
             else (1024, 4096, 16384, 65536, 262144)),

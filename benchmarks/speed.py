@@ -95,7 +95,9 @@ def run_nd(report):
     ]
     for name, c, rho in cases:
         k = matern32.with_defaults(rho=rho)()
-        routes = [e["route"] for e in plan(c)]
+        # pyramid=False: this table benches the per-level megakernel; the
+        # pyramid overlay has its own table (run_dtype)
+        routes = [e["route"] for e in plan(c, pyramid=False)]
         assert all(r == ROUTE_ND_FUSED for r in routes), routes
         lvl = c.n_levels - 1  # finest (dominant) level
         geom = LevelGeom.for_level(c, lvl)
@@ -177,12 +179,9 @@ def run_batch(report, *, quick: bool = False):
         t_l = _bench(looped, mats, xi)
         entries = plan(c, samples=n_s)
         # samples= keeps the matrix bytes counted once — the amortization
-        # this table exists to track
-        hbm = sum(
-            refine_level_traffic(LevelGeom.for_level(c, lvl),
-                                 entries[lvl]["route"],
-                                 samples=n_s)["total"]
-            for lvl in range(c.n_levels))
+        # this table exists to track; "selected" is position-aware for
+        # pyramid-covered levels (first/last carry the field read/write)
+        hbm = sum(e["hbm_bytes"]["selected"] for e in entries)
         route = entries[-1]["route"]
         report(f"batch/{name}/native", t_b * 1e6,
                f"S={n_s} {n_s/t_b:.1f} samples/s", route=route,
@@ -217,3 +216,44 @@ def run_scaling(report, sizes=(1024, 4096, 16384, 65536, 262144)):
     slope = float(np.polyfit(xs, ys, 1)[0])
     report("scaling/loglog_slope", slope,
            f"log-log slope={slope:.2f} (O(N) => ~1.0)")
+
+
+def run_dtype(report, *, quick: bool = False):
+    """Mixed-precision policy table (DESIGN.md §11): fp32 vs bf16 storage
+    x pyramid on/off on the dust chart. Each row: wall time, selected
+    route, modeled HBM bytes at that dtype, would-be bandwidth utilization.
+    Off-TPU the wall time measures interpret-mode emulation; the bytes
+    column is the trajectory metric (bf16 must halve it, the pyramid must
+    erase the covered levels' inter-level field traffic).
+    """
+    from repro.core import ICR, matern32
+    from repro.core.charts import galactic_dust_chart
+    from repro.kernels.dispatch import plan, select_backend
+
+    backend = select_backend()
+    c = galactic_dust_chart((6, 8, 8), n_levels=2) if quick \
+        else galactic_dust_chart((8, 16, 16), n_levels=3)
+    n = int(np.prod(c.final_shape))
+    totals = {}
+    for dt_name, pol in (("float32", None), ("bfloat16", "bf16")):
+        for pyr in (True, False):
+            icr = ICR(chart=c, kernel=matern32.with_defaults(rho=0.5),
+                      use_pallas=True, dtype_policy=pol, use_pyramid=pyr)
+            mats = icr.matrices()
+            xi = icr.init_xi(jax.random.PRNGKey(0))
+            fwd = jax.jit(lambda m, x: icr.apply_sqrt(m, x))
+            t = _bench(fwd, mats, xi, repeats=3 if quick else 5)
+            entries = plan(c, dtype=dt_name, pyramid=pyr)
+            hbm = sum(e["hbm_bytes"]["selected"] for e in entries)
+            totals[(dt_name, pyr)] = hbm
+            label = f"dtype/{dt_name}/{'pyramid' if pyr else 'per-level'}"
+            report(label, t * 1e6,
+                   f"N={n} t={t*1e3:.2f}ms est_bytes={hbm:,}",
+                   route=entries[0]["route"], backend=backend,
+                   hbm_bytes=hbm, bw_util=_bw_util(hbm, t), dtype=dt_name)
+    report("dtype/bf16_bytes_reduction",
+           totals[("float32", True)] / totals[("bfloat16", True)],
+           "modeled HBM bytes fp32/bf16 (acceptance: >= 1.9x)")
+    report("dtype/pyramid_bytes_reduction",
+           totals[("bfloat16", False)] / totals[("bfloat16", True)],
+           "modeled HBM bytes per-level/pyramid at bf16")

@@ -34,32 +34,52 @@ def main():
           np.round(np.diff(np.exp(chart.axis_coords(chart.n_levels, 0)))[:5],
                    4))
 
-    # every level must route through the single-launch fused megakernel
-    # (DESIGN.md §10) — forward and backward; if a level ever outgrows the
-    # VMEM budget the documented fallback is the per-axis passes (nd-axes),
-    # never the jnp reference
+    # this chart's three levels fit VMEM *together*: the whole forward is
+    # ONE pyramid launch (DESIGN.md §11) — intermediate fields never touch
+    # HBM. Per level the plan reports the position-aware bytes (only the
+    # first level reads the coarse field, only the last writes the fine
+    # one) at both storage dtypes; bf16 must halve every estimate.
     plan = dispatch.plan(chart)
-    for entry in plan:
-        hb = entry["hbm_bytes"]
+    plan16 = dispatch.plan(chart, dtype="bfloat16")
+    for entry, e16 in zip(plan, plan16):
+        hb, hb16 = entry["hbm_bytes"], e16["hbm_bytes"]
         print(f"  level {entry['level']}: route={entry['route']} "
-              f"backend={entry['backend']} blocks={entry['block_families']} "
-              f"vjp={entry['vjp']['route']} "
-              f"est HBM {hb['selected']/1e6:.1f} MB "
-              f"({hb['nd-axes']/hb['nd-fused']:.1f}x less than per-axis)")
-        assert entry["route"] in (dispatch.ROUTE_ND_FUSED,
-                                  dispatch.ROUTE_AXES_ND), (
-            "N-D level fell back to the jnp reference", entry)
-        assert entry["vjp"]["route"] != dispatch.ROUTE_REFERENCE, (
-            "fused backward fell back", entry)
-        # this chart fits the VMEM budget at every level, so pin the
-        # stronger property too: if this fires, the autotune model regressed
+              f"backend={entry['backend']} vjp={entry['vjp']['route']} "
+              f"est HBM {hb['selected']/1e6:.2f} MB f32 / "
+              f"{hb16['selected']/1e6:.2f} MB bf16 "
+              f"({hb['nd-axes']/hb['selected']:.1f}x less than per-axis)")
+        assert entry["route"] == dispatch.ROUTE_PYRAMID, (
+            "dust-map level fell off the pyramid", entry)
+        assert hb["selected"] >= 1.9 * hb16["selected"], (hb, hb16)
+
+    # the per-level view underneath (what runs with use_pyramid=False, and
+    # what a level too big for the shared budget falls back to): the
+    # single-launch megakernel — never the jnp reference
+    for entry in dispatch.plan(chart, pyramid=False):
         assert entry["route"] == dispatch.ROUTE_ND_FUSED, (
             "dust-map level fell off the megakernel route", entry)
+        assert entry["vjp"]["route"] != dispatch.ROUTE_REFERENCE, (
+            "fused backward fell back", entry)
 
     # single-device sample through the fused kernels
     sample = icr.sample(jax.random.PRNGKey(0))
     print(f"sample: shape={sample.shape} mean={float(sample.mean()):+.3f} "
           f"std={float(sample.std()):.3f}")
+
+    # the same model under the mixed-precision policy (DESIGN.md §11):
+    # bf16 storage + f32 accumulation — half the HBM bytes per level.
+    # Same excitation values (cast), so the two fields are comparable.
+    icr16 = ICR(chart=chart, kernel=matern32.with_defaults(rho=0.5),
+                use_pallas=True, dtype_policy="bf16")
+    xi = icr.init_xi(jax.random.PRNGKey(0))
+    s32 = icr.apply_sqrt(icr.matrices(), xi)
+    s16 = icr16.apply_sqrt(icr16.matrices(),
+                           [x.astype(jnp.bfloat16) for x in xi])
+    rel = float(jnp.abs(s16.astype(jnp.float32) - s32).max()
+                / jnp.abs(s32).max())
+    print(f"bf16 sample: dtype={s16.dtype} rel-err vs f32 {rel:.3f} "
+          "(bf16 rounding, fp32 accumulation)")
+    assert s16.dtype == jnp.bfloat16 and rel < 0.05
 
 
     # one inference-style gradient through the fused path: MAP/ADVI cost is

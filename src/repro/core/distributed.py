@@ -147,6 +147,22 @@ class DistributedICR:
         xis = [ns(s) for s in self.xi_specs()]
         return mats, xis, ns(self.out_spec())
 
+    def _refine(self, field: Array, xl: Array, r: Array, d: Array,
+                geom: LevelGeom) -> Array:
+        """Interior compute of one level — per-device, identical math to the
+        single-device path. With ``icr.use_pallas`` it goes through
+        ``dispatch.refine`` (the fused 1-D kernels where the geometry is
+        covered, honoring the dtype policy; N-D levels have no axis factors
+        under the joint sharding specs and dispatch falls back to the jnp
+        reference there), else straight to ``refine_level``."""
+        if not self.icr.use_pallas:
+            return refine_level(field, xl, r, d, geom)
+        from repro.kernels import dispatch
+
+        pol = (self.icr.policy if self.icr.dtype_policy is not None
+               else None)
+        return dispatch.refine(field, xl, r, d, geom, policy=pol)
+
     # -- the sharded program ----------------------------------------------------
     def _halo_exchange(self, local: Array, b: int) -> Array:
         """Append ring halos of width b along shard_axis; global edges use
@@ -220,7 +236,7 @@ class DistributedICR:
         for lvl in range(k):
             geom = LevelGeom.for_level(c, lvl)
             xl = xi[lvl + 1].reshape(-1, fsz)
-            field = refine_level(field, xl, mats["R"][lvl],
+            field = self._refine(field, xl, mats["R"][lvl],
                                  mats["sqrtD"][lvl], geom)
 
         # transition: slice my block along shard_axis
@@ -237,7 +253,7 @@ class DistributedICR:
             geom = self._local_geom(lvl, sharded=True)
             xl = xi[lvl + 1].reshape(-1, fsz)
             r, d = mats["R"][lvl], mats["sqrtD"][lvl]
-            field = refine_level(padded, xl, r, d, geom)
+            field = self._refine(padded, xl, r, d, geom)
         return field
 
     def apply_sqrt(self, mats: dict, xi: Sequence[Array]) -> Array:
@@ -259,7 +275,8 @@ class DistributedICR:
         )
         return fn(mats, tuple(xi))
 
-    def init_xi(self, key, dtype=jnp.float32):
+    def init_xi(self, key, dtype=None):
+        dtype = self.icr.policy.storage_dtype if dtype is None else dtype
         shapes = self.xi_structure()
         keys = jax.random.split(key, len(shapes))
         _, xi_sh, _ = self.shardings()

@@ -41,12 +41,34 @@ Array = jnp.ndarray
 
 @dataclasses.dataclass(frozen=True)
 class ICR:
-    """Iterative Charted Refinement model over `chart` with `kernel`."""
+    """Iterative Charted Refinement model over `chart` with `kernel`.
+
+    ``dtype_policy`` (DESIGN.md §11) sets the storage/accumulation dtypes
+    of the whole refinement stack: ``"bf16"`` (or ``DtypePolicy()`` — the
+    policy's own default) stores fields/ξ/matrices in bfloat16 with f32
+    accumulation, halving HBM bytes per level; ``None`` keeps the
+    historical all-float32 behavior (the ``"fp32"`` opt-out), bit-stable
+    with the fp32 reference suites.
+
+    ``use_pyramid`` (with ``use_pallas=True``): run all consecutive early
+    levels whose combined working set fits VMEM as ONE kernel launch
+    (repro.kernels.pyramid) — their intermediate fields never touch HBM.
+    The remaining big levels run per level through ``dispatch.refine``.
+    """
 
     chart: Chart
     kernel: Kernel
     jitter: float = 1e-6
     use_pallas: bool = False  # route stationary levels through repro.kernels
+    dtype_policy: object = None  # None -> fp32; "bf16"/DtypePolicy() -> mixed
+    use_pyramid: bool = True  # VMEM-resident multi-level prefix (needs pallas)
+
+    @property
+    def policy(self):
+        """The resolved DtypePolicy (fp32 when ``dtype_policy`` is None)."""
+        from repro.kernels.policy import resolve
+
+        return resolve(self.dtype_policy)
 
     # -- shapes ---------------------------------------------------------------
     def xi_shapes(self) -> List[tuple]:
@@ -67,10 +89,12 @@ class ICR:
         return self.chart.final_shape
 
     # -- parameters -----------------------------------------------------------
-    def init_xi(self, key, dtype=jnp.float32, *,
+    def init_xi(self, key, dtype=None, *,
                 batch: int | None = None) -> List[Array]:
         """Standard-normal excitations; ``batch`` prepends a sample dim to
-        every level (the layout ``apply_sqrt_batch`` consumes)."""
+        every level (the layout ``apply_sqrt_batch`` consumes). ``dtype``
+        defaults to the dtype policy's storage dtype (f32 without one)."""
+        dtype = self.policy.storage_dtype if dtype is None else dtype
         keys = jax.random.split(key, self.chart.n_levels + 1)
         lead = () if batch is None else (batch,)
         return [
@@ -78,7 +102,8 @@ class ICR:
             for k, s in zip(keys, self.xi_shapes())
         ]
 
-    def zero_xi(self, dtype=jnp.float32) -> List[Array]:
+    def zero_xi(self, dtype=None) -> List[Array]:
+        dtype = self.policy.storage_dtype if dtype is None else dtype
         return [jnp.zeros(s, dtype) for s in self.xi_shapes()]
 
     # -- matrices (functions of theta) ----------------------------------------
@@ -119,33 +144,83 @@ class ICR:
                 )
                 out["Rax"].append(rs)
                 out["sqrtDax"].append(ds)
+        pol = self.policy
+        if jnp.dtype(pol.storage_dtype) != jnp.float32:
+            # matrix *math* stays f32 (solves/eigh above); only what is
+            # stored — and re-read every level — drops to the storage dtype
+            out = pol.cast_storage(out)
         return out
 
     # -- forward --------------------------------------------------------------
+    def _level_axis_mats(self, mats: dict, lvl: int):
+        """Per-axis factor convention for level `lvl`: the Kronecker factors
+        when built, else the 1-D joint matrices squeezed to the factor
+        shapes (a 1-D chart's joint (kept_T, f, c) IS its only factor)."""
+        if "Rax" in mats:
+            return mats["Rax"][lvl], mats["sqrtDax"][lvl]
+        r, d = mats["R"][lvl], mats["sqrtD"][lvl]
+        if r.shape[0] == 1:
+            r, d = r.reshape(r.shape[-2:]), d.reshape(d.shape[-2:])
+        return [r], [d]
+
     def _refine_levels(self, mats: dict, xi: Sequence[Array], field: Array,
                        *, sample_axis: bool) -> Array:
         """Run every refinement level on `field` (the shared body of
         apply_sqrt and apply_sqrt_batch; `sample_axis` marks a leading
-        sample dimension that the kernels consume natively)."""
-        for lvl in range(self.chart.n_levels):
-            geom = LevelGeom.for_level(self.chart, lvl)
-            if self.use_pallas:
-                from repro.kernels import dispatch
+        sample dimension that the kernels consume natively).
 
-                axis_mats = None
-                if "Rax" in mats:
-                    axis_mats = (mats["Rax"][lvl], mats["sqrtDax"][lvl])
-                r = mats["R"][lvl] if "R" in mats else None
-                d = mats["sqrtD"][lvl] if "sqrtD" in mats else None
-                field = dispatch.refine(
-                    field, xi[lvl + 1], r, d, geom, axis_mats=axis_mats,
-                    sample_axis=sample_axis,
-                )
-            else:
+        With ``use_pallas``: the pyramid prefix (all early levels whose
+        combined working set fits VMEM, DESIGN.md §11) runs as ONE launch,
+        then each remaining level goes through ``dispatch.refine`` (buffer
+        donation deliberately does not apply to the expansive ping-pong
+        chain — see the note in kernels/dispatch.py).
+        """
+        start = 0
+        if not self.use_pallas:
+            for lvl in range(self.chart.n_levels):
+                geom = LevelGeom.for_level(self.chart, lvl)
                 ref = lambda f, x: refine_level(
                     f, x, mats["R"][lvl], mats["sqrtD"][lvl], geom)
                 field = (jax.vmap(ref)(field, xi[lvl + 1]) if sample_axis
                          else ref(field, xi[lvl + 1]))
+            return field
+
+        from repro.kernels import dispatch, pyramid
+
+        pol = self.policy if self.dtype_policy is not None else None
+        if pol is not None:
+            field = field.astype(pol.storage_dtype)
+        n_s = field.shape[0] if sample_axis else 1
+        itemsize = jnp.dtype(field.dtype).itemsize
+        covered = (self.chart.ndim == 1) or ("Rax" in mats)
+        cover = (dispatch.pyramid_cover(
+            self.chart, have_axis_mats="Rax" in mats, samples=n_s,
+            itemsize=itemsize) if self.use_pyramid and covered else None)
+        if cover is not None:
+            start, s_b = cover
+            geoms = [LevelGeom.for_level(self.chart, l)
+                     for l in range(start)]
+            pmats = [self._level_axis_mats(mats, l) for l in range(start)]
+            if pol is not None:
+                pmats = pol.cast_storage(pmats)
+            field = pyramid.refine_pyramid(
+                field, [xi[l + 1] for l in range(start)], pmats, geoms,
+                sample_axis=sample_axis, sample_block=s_b,
+                accum_dtype=(pol.accum_name if pol is not None
+                             else "float32"),
+            )
+
+        for lvl in range(start, self.chart.n_levels):
+            geom = LevelGeom.for_level(self.chart, lvl)
+            axis_mats = None
+            if "Rax" in mats:
+                axis_mats = (mats["Rax"][lvl], mats["sqrtDax"][lvl])
+            r = mats["R"][lvl] if "R" in mats else None
+            d = mats["sqrtD"][lvl] if "sqrtD" in mats else None
+            field = dispatch.refine(
+                field, xi[lvl + 1], r, d, geom, axis_mats=axis_mats,
+                sample_axis=sample_axis, policy=pol,
+            )
         return field
 
     def apply_sqrt(self, mats: dict, xi: Sequence[Array]) -> Array:
@@ -172,7 +247,7 @@ class ICR:
         return self._refine_levels(mats, xi, field, sample_axis=True)
 
     def sample_batch(self, key, n: int, theta=None,
-                     dtype=jnp.float32) -> Array:
+                     dtype=None) -> Array:
         """Draw ``n`` approximate GP samples in one batched application —
         (n, *final_shape). Amortizes every matrix load across the batch."""
         return self.apply_sqrt_batch(
@@ -223,8 +298,9 @@ class ICR:
                  theta: Mapping[str, Array] | None = None) -> Array:
         return self.apply_sqrt(self.matrices(theta), xi)
 
-    def sample(self, key, theta=None, dtype=jnp.float32) -> Array:
-        """Draw one approximate GP sample (paper Alg. 1)."""
+    def sample(self, key, theta=None, dtype=None) -> Array:
+        """Draw one approximate GP sample (paper Alg. 1; dtype defaults to
+        the policy's storage dtype)."""
         return self(self.init_xi(key, dtype), theta)
 
     # -- diagnostics ----------------------------------------------------------

@@ -19,6 +19,17 @@ Routing is decided per level from the geometry alone:
   N-D, tile too large        -> per-axis fused passes (repro.kernels.nd)
   otherwise                  -> reference
 
+On top of the per-level routes, ``plan()``/``ICR.apply_sqrt`` overlay the
+**pyramid** route (repro.kernels.pyramid, DESIGN.md §11): all consecutive
+early levels whose combined full-extent working set fits the VMEM budget
+run back-to-back in ONE launch — their inter-level field traffic never
+touches HBM. ``autotune_pyramid`` owns the residency criterion.
+
+All VMEM accounting is **dtype-aware** (DESIGN.md §11): the autotuners take
+the storage itemsize (bf16 halves it, doubling what fits per tile) and
+``plan(dtype=...)`` reports HBM bytes at the policy's storage dtype —
+the byte model grows a dtype column.
+
 This replaces the ad-hoc shape guards that used to live in
 ``repro.kernels.ops``. VMEM tile sizes (``block_families`` for the 1-D
 kernels, the ``(b_f, s_b)`` family/sample blocks for the N-D megakernel)
@@ -47,6 +58,7 @@ from .icr_refine import (
     refine_charted_pallas,
     refine_stationary_pallas,
 )
+from .policy import DtypePolicy, resolve as resolve_policy
 
 Array = jnp.ndarray
 
@@ -58,6 +70,7 @@ ROUTE_STATIONARY_1D = "stationary-1d"
 ROUTE_CHARTED_1D = "charted-1d"
 ROUTE_ND_FUSED = "nd-fused"
 ROUTE_AXES_ND = "nd-axes"
+ROUTE_PYRAMID = "pyramid"
 ROUTE_REFERENCE = "reference"
 
 # ~half of a TPU core's VMEM (launch.mesh.VMEM_BYTES = 128 MiB): the pipeline
@@ -216,14 +229,81 @@ def autotune_nd_fused(geom: LevelGeom, *, charted: tuple | None = None,
     return b_f, s_b
 
 
+def _pyramid_charted(geom: LevelGeom) -> tuple:
+    return tuple(k > 1 for k in geom.kept_T)
+
+
+def autotune_pyramid(geoms, *, samples: int = 1, itemsize: int = 4,
+                     vmem_budget: int = VMEM_BUDGET_BYTES):
+    """How many consecutive levels (from ``geoms[0]``) fit VMEM together,
+    and the sample slab: ``(k, s_b)``, or None when fewer than two fit —
+    a one-level "pyramid" is just the per-level route.
+
+    The residency criterion reuses the §10 working-set model at FULL
+    axis-0 extent (``b_f = T_0``, i.e. no spatial tiling): a covered
+    level's coarse+fine fields, ξ, matrices and contraction scratch are
+    all simultaneously resident, so the models simply add up. The storage
+    ``itemsize`` makes the criterion dtype-aware — bf16 fits twice the
+    levels' bytes of fp32.
+    """
+
+    def level_bytes(geom, s_b):
+        return _fused_tile_bytes(geom, _pyramid_charted(geom), geom.T[0],
+                                 s_b, itemsize)
+
+    k, total = 0, 0
+    for geom in geoms:
+        lb = level_bytes(geom, 1)
+        if total + lb > vmem_budget:
+            break
+        total += lb
+        k += 1
+    if k < 2:
+        return None
+    s_b = 1
+    while s_b < samples:
+        nxt = min(2 * s_b, samples)
+        if sum(level_bytes(g, nxt) for g in geoms[:k]) > vmem_budget:
+            break
+        s_b = nxt
+    return k, s_b
+
+
+def pyramid_cover(chart, *, have_axis_mats: bool | None = None,
+                  samples: int = 1, itemsize: int = 4,
+                  vmem_budget: int = VMEM_BUDGET_BYTES):
+    """The pyramid prefix of `chart`: ``(k, s_b)`` covering levels
+    ``0..k-1``, or None. Only structured levels can be covered (a level
+    that would route to the jnp reference ends the prefix)."""
+    if have_axis_mats is None:
+        have_axis_mats = chart.ndim > 1
+    geoms = []
+    for lvl in range(chart.n_levels):
+        geom = LevelGeom.for_level(chart, lvl)
+        if route_for(geom, have_axis_mats=have_axis_mats,
+                     itemsize=itemsize) == ROUTE_REFERENCE:
+            break
+        geoms.append(geom)
+    if len(geoms) < 2:
+        return None
+    return autotune_pyramid(geoms, samples=samples, itemsize=itemsize,
+                            vmem_budget=vmem_budget)
+
+
 def select_backend(*, platform: str | None = None) -> str:
     """Kernel backend for `platform` (default: the runtime jax backend)."""
     platform = platform or jax.default_backend()
     return BACKEND_PALLAS if platform == "tpu" else BACKEND_INTERPRET
 
 
-def route_for(geom: LevelGeom, *, have_axis_mats: bool = False) -> str:
-    """Which structured path covers this level's geometry (see module doc)."""
+def route_for(geom: LevelGeom, *, have_axis_mats: bool = False,
+              itemsize: int = 4) -> str:
+    """Which structured path covers this level's geometry (see module doc).
+
+    ``itemsize`` is the storage-dtype byte width: the megakernel-vs-
+    per-axis decision is a VMEM-fit question, so a borderline level that
+    busts the budget at f32 can still take the fused route at bf16.
+    """
     if geom.boundary not in ("shrink", "reflect"):
         return ROUTE_REFERENCE
     if len(geom.coarse_shape) == 1:
@@ -232,49 +312,81 @@ def route_for(geom: LevelGeom, *, have_axis_mats: bool = False) -> str:
         return ROUTE_CHARTED_1D
     if not have_axis_mats:
         return ROUTE_REFERENCE
-    if autotune_nd_fused(geom) is not None:
+    if autotune_nd_fused(geom, itemsize=itemsize) is not None:
         return ROUTE_ND_FUSED
     return ROUTE_AXES_ND
 
 
 def plan(chart, *, have_axis_mats: bool | None = None,
-         platform: str | None = None, samples: int = 1) -> list:
+         platform: str | None = None, samples: int = 1,
+         dtype=None, pyramid: bool = True,
+         vmem_budget: int = VMEM_BUDGET_BYTES) -> list:
     """Per-level forward AND backward routing decisions for `chart` —
     introspection for examples, benchmarks and tests (no arrays touched).
 
     have_axis_mats defaults to ``chart.ndim > 1`` (ICR.matrices computes the
     per-axis factors for every N-D chart when use_pallas=True).
 
+    ``dtype`` is the storage dtype of the policy the chart will run under
+    (default float32): it scales every byte estimate AND the VMEM
+    autotuning — bf16 halves modeled HBM bytes and doubles what fits per
+    tile. Each entry carries the dtype column (``"dtype"``).
+
+    ``pyramid=True`` (the execution default) overlays the DESIGN.md §11
+    VMEM-resident prefix: covered levels report ``route="pyramid"`` with
+    zero inter-level field traffic (the first covered level carries the
+    coarse read, the last the fine write). ``pyramid=False`` shows the
+    per-level routing underneath — what runs when the pyramid is disabled
+    (``ICR(use_pyramid=False)``) and what the covered levels fall back to.
+
     Each entry carries a ``"vjp"`` sub-dict describing how the *backward*
     pass of that level executes (structured routes run the hand-written
     adjoint kernels; the megakernel's backward composes the 1-D adjoints in
-    reverse axis order; the reference route is jnp autodiff) and an
-    ``"hbm_bytes"`` sub-dict: the ``roofline.level_traffic`` estimate for
-    the selected route next to every candidate route, so the traffic win of
-    the fused path is visible without running anything.
+    reverse axis order; the pyramid's backward replays the jnp reference
+    chain — its covered levels are VMEM-sized by construction; the
+    reference route is jnp autodiff) and an ``"hbm_bytes"`` sub-dict: the
+    ``roofline.level_traffic`` estimate for the selected route next to
+    every candidate route, so the traffic win of the fused paths is visible
+    without running anything.
+
+    ``vmem_budget`` bounds the pyramid overlay only (tests shrink it to
+    exercise the fallback rule); the per-level autotuners keep the global
+    ``VMEM_BUDGET_BYTES``.
     """
     if have_axis_mats is None:
         have_axis_mats = chart.ndim > 1
+    dtype = jnp.dtype(dtype or jnp.float32)
+    itemsize = dtype.itemsize
+    cover = (pyramid_cover(chart, have_axis_mats=have_axis_mats,
+                           samples=samples, itemsize=itemsize,
+                           vmem_budget=vmem_budget)
+             if pyramid else None)
+    k_cov, s_b_cov = cover if cover is not None else (0, None)
     out = []
     for lvl in range(chart.n_levels):
         geom = LevelGeom.for_level(chart, lvl)
-        route = route_for(geom, have_axis_mats=have_axis_mats)
+        route = route_for(geom, have_axis_mats=have_axis_mats,
+                          itemsize=itemsize)
+        covered = lvl < k_cov
         backend = (BACKEND_REFERENCE if route == ROUTE_REFERENCE
                    else select_backend(platform=platform))
         blocks = {}
         sample_block = None
-        if route in (ROUTE_STATIONARY_1D, ROUTE_CHARTED_1D):
+        if covered:
+            sample_block = s_b_cov
+        elif route in (ROUTE_STATIONARY_1D, ROUTE_CHARTED_1D):
             blocks[0] = autotune_block_families(
                 geom.T[0], geom.n_csz, geom.n_fsz,
-                charted=route == ROUTE_CHARTED_1D,
+                charted=route == ROUTE_CHARTED_1D, itemsize=itemsize,
             )
             sample_block = autotune_batch_block(
                 samples, geom.T[0], geom.n_csz, geom.n_fsz,
                 charted=route == ROUTE_CHARTED_1D,
-                block_families=blocks[0],
+                block_families=blocks[0], itemsize=itemsize,
             )
         elif route == ROUTE_ND_FUSED:
-            b_f, s_b = autotune_nd_fused(geom, samples=samples)
+            b_f, s_b = autotune_nd_fused(geom, samples=samples,
+                                         itemsize=itemsize)
             blocks[0] = b_f
             sample_block = s_b
         elif route == ROUTE_AXES_ND:
@@ -282,25 +394,31 @@ def plan(chart, *, have_axis_mats: bool | None = None,
                 ag = geom.axis(a)
                 blocks[a] = autotune_block_families(
                     ag.T[0], ag.n_csz, ag.n_fsz,
-                    charted=ag.kept_T[0] > 1,
+                    charted=ag.kept_T[0] > 1, itemsize=itemsize,
                 )
         candidates = ([ROUTE_ND_FUSED, ROUTE_AXES_ND, ROUTE_REFERENCE]
                       if len(geom.coarse_shape) > 1
                       else [route, ROUTE_REFERENCE])
         hbm = {
-            rt: refine_level_traffic(geom, rt, samples=samples)["total"]
+            rt: refine_level_traffic(geom, rt, samples=samples,
+                                     dtype=dtype)["total"]
             for rt in candidates
         }
+        if covered:
+            hbm[ROUTE_PYRAMID] = refine_level_traffic(
+                geom, ROUTE_PYRAMID, samples=samples, dtype=dtype,
+                first=lvl == 0, last=lvl == k_cov - 1)["total"]
+            route = ROUTE_PYRAMID
         hbm["selected"] = hbm[route]
         vjp = {
             "route": (ROUTE_REFERENCE if route == ROUTE_REFERENCE
-                      else route + "-adjoint"),
+                      else route + ("-ref" if covered else "-adjoint")),
             "backend": backend,
             "block_families": dict(blocks),
         }
         out.append({"level": lvl, "route": route, "backend": backend,
                     "block_families": blocks, "sample_block": sample_block,
-                    "hbm_bytes": hbm, "vjp": vjp})
+                    "hbm_bytes": hbm, "dtype": dtype.name, "vjp": vjp})
     return out
 
 
@@ -308,7 +426,8 @@ def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
            axis_mats=None, backend: str | None = None,
            block_families: int | None = None,
            sample_axis: bool = False,
-           sample_block: int | None = None) -> Array:
+           sample_block: int | None = None,
+           policy: DtypePolicy | str | None = None) -> Array:
     """Route one refinement application to the best available backend.
 
     Arguments follow ``core.refine.refine_level``; ``axis_mats`` optionally
@@ -320,11 +439,25 @@ def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
     a sample batch: the kernels process a whole sample slab per grid step
     (matrix loads amortized — DESIGN.md §10) instead of looping.
 
+    ``policy`` (DESIGN.md §11): when given, every operand is cast to the
+    policy's storage dtype on entry and the kernels accumulate in its accum
+    dtype; when None, the storage dtype is whatever the operands carry and
+    accumulation is f32. VMEM autotuning always follows the actual storage
+    itemsize, so bf16 operands get twice the families per tile.
+
     Differentiable w.r.t. every array argument on every route: the kernel
     entry points carry custom VJPs running the fused adjoint kernels, the
     surrounding pads/reshapes are plain jnp.
     """
-    route = route_for(geom, have_axis_mats=axis_mats is not None)
+    accum_name = "float32"
+    if policy is not None:
+        pol = resolve_policy(policy)
+        field, xi, r, d, axis_mats = pol.cast_storage(
+            (field, xi, r, d, axis_mats))
+        accum_name = pol.accum_name
+    itemsize = jnp.dtype(field.dtype).itemsize
+    route = route_for(geom, have_axis_mats=axis_mats is not None,
+                      itemsize=itemsize)
     if backend is None and route != ROUTE_REFERENCE:
         backend = select_backend()
     if route == ROUTE_REFERENCE or backend == BACKEND_REFERENCE:
@@ -334,10 +467,20 @@ def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
                 "has none (ICR.matrices skipped the joint build) — pass "
                 "matrices(joint=True) or provide axis_mats covering it"
             )
+        # honor the policy's accumulation contract here too: refine_level's
+        # einsums carry no preferred_element_type, so sub-f32 storage is
+        # upcast for the math and the result rounded back — same per-level
+        # rounding the kernels produce, not a bf16-accumulated level
+        out_dtype = field.dtype
+        accum = jnp.dtype(accum_name)
+        if jnp.dtype(out_dtype).itemsize < jnp.dtype(accum).itemsize:
+            field, xi, r, d = (a.astype(accum) for a in (field, xi, r, d))
         if sample_axis:
-            return jax.vmap(
+            out = jax.vmap(
                 lambda f, x: refine_level(f, x, r, d, geom))(field, xi)
-        return refine_level(field, xi, r, d, geom)
+        else:
+            out = refine_level(field, xi, r, d, geom)
+        return out.astype(out_dtype)
     interpret = backend != BACKEND_PALLAS
 
     if route == ROUTE_ND_FUSED:
@@ -347,12 +490,14 @@ def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
             field, xi, axis_mats[0], axis_mats[1], geom,
             interpret=interpret, block_families=block_families,
             sample_block=sample_block, sample_axis=sample_axis,
+            accum_dtype=accum_name,
         )
     if route == ROUTE_AXES_ND:
         return _nd.refine_axes(field, xi, axis_mats[0], axis_mats[1], geom,
                                interpret=interpret,
                                block_families=block_families,
-                               sample_axis=sample_axis)
+                               sample_axis=sample_axis,
+                               accum_dtype=accum_name)
 
     n_csz, n_fsz = geom.n_csz, geom.n_fsz
     t = geom.T[0]
@@ -368,23 +513,37 @@ def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
     if geom.boundary == "reflect":
         coarse = jnp.pad(coarse, [(0, 0), (geom.b, geom.b)], mode="reflect")
     b_f = block_families or autotune_block_families(
-        t, n_csz, n_fsz, charted=charted
+        t, n_csz, n_fsz, charted=charted, itemsize=itemsize
     )
     b_b = sample_block or autotune_batch_block(
-        n_s, t, n_csz, n_fsz, charted=charted, block_families=b_f
+        n_s, t, n_csz, n_fsz, charted=charted, block_families=b_f,
+        itemsize=itemsize
     )
     if charted:
         out = refine_charted_pallas(
             coarse, xi_k, r.reshape(t, n_fsz, n_csz),
             d.reshape(t, n_fsz, n_fsz), n_csz=n_csz, n_fsz=n_fsz,
             block_families=b_f, batch_block=b_b, interpret=interpret,
+            accum_dtype=accum_name,
         )
     else:
         out = refine_stationary_pallas(
             coarse, xi_k, r.reshape(n_fsz, n_csz),
             d.reshape(n_fsz, n_fsz), n_csz=n_csz, n_fsz=n_fsz,
             block_families=b_f, batch_block=b_b, interpret=interpret,
+            accum_dtype=accum_name,
         )
     if sample_axis:
         return out.reshape((n_s,) + geom.fine_shape)
     return out.reshape(geom.fine_shape)
+
+
+# A note on buffer donation (investigated for the §11 ping-pong chain and
+# deliberately NOT used): jax donation is input->output aliasing, which
+# needs a donated input whose shape/dtype matches an output. Refinement is
+# strictly expansive — the fine output is 2^d times the coarse input, the
+# adjoint's the reverse — so no level has an aliasable pair; a
+# donate_argnums wrapper here compiles to a no-op plus a "donated buffer
+# not usable" warning per geometry. Inside a jitted apply, XLA's buffer
+# liveness already reclaims the coarse buffer for temporaries after its
+# last read, which is all a donation could have achieved.

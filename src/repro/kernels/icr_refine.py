@@ -39,6 +39,14 @@ HBM for nothing. The noise-free variants drop the ξ and sqrt(D) operands
 entirely (forward skips the read and the add, the adjoint skips the ``dxi``
 computation and its write).
 
+Dtype policy (DESIGN.md §11): every entry point takes ``accum_dtype`` (a
+static dtype name, default ``"float32"``) — the ``preferred_element_type``
+of every MXU contraction and the dtype of the adjoint overlap-add
+accumulator. The *storage* dtype is simply the dtype of the operands: pass
+bf16 arrays and the kernels read/write bf16 HBM while accumulating fp32
+(the ``DtypePolicy`` default of ``repro.kernels.policy``), halving HBM
+bytes per element on every route.
+
 Adjoints (DESIGN.md §9): all entry points carry a ``jax.custom_vjp`` whose
 backward runs hand-written *adjoint* Pallas kernels. The transpose of the
 window-contract is a halo-overlapped scatter-add — coarse element ``t·s + k``
@@ -88,7 +96,8 @@ def _window_cols(buf: Array, b_f: int, s: int, n_csz: int) -> Array:
 
 
 def _stationary_kernel(coarse_ref, halo_ref, xi_ref, r_ref, d_ref, out_ref,
-                       *, b_b: int, b_f: int, s: int, n_csz: int, n_fsz: int):
+                       *, b_b: int, b_f: int, s: int, n_csz: int, n_fsz: int,
+                       accum):
     q_max = (n_csz - 1) // s
     buf = jnp.concatenate(
         [coarse_ref[...], halo_ref[:, : q_max * s]], axis=-1
@@ -98,14 +107,14 @@ def _stationary_kernel(coarse_ref, halo_ref, xi_ref, r_ref, d_ref, out_ref,
     d = d_ref[...]                                        # (n_fsz, n_fsz)
     xi = xi_ref[...].reshape(b_b * b_f, n_fsz)
     fine = jnp.dot(w.reshape(b_b * b_f, n_csz), r.T,
-                   preferred_element_type=jnp.float32)
-    fine = fine + jnp.dot(xi, d.T, preferred_element_type=jnp.float32)
+                   preferred_element_type=accum)
+    fine = fine + jnp.dot(xi, d.T, preferred_element_type=accum)
     out_ref[...] = fine.reshape(b_b, b_f * n_fsz).astype(out_ref.dtype)
 
 
 def _stationary_nn_kernel(coarse_ref, halo_ref, r_ref, out_ref,
                           *, b_b: int, b_f: int, s: int, n_csz: int,
-                          n_fsz: int):
+                          n_fsz: int, accum):
     """Noise-free stationary forward: no ξ read, no sqrt(D) operand."""
     q_max = (n_csz - 1) // s
     buf = jnp.concatenate(
@@ -113,12 +122,13 @@ def _stationary_nn_kernel(coarse_ref, halo_ref, r_ref, out_ref,
     )
     w = _window_cols(buf, b_f, s, n_csz)
     fine = jnp.dot(w.reshape(b_b * b_f, n_csz), r_ref[...].T,
-                   preferred_element_type=jnp.float32)
+                   preferred_element_type=accum)
     out_ref[...] = fine.reshape(b_b, b_f * n_fsz).astype(out_ref.dtype)
 
 
 def _charted_kernel(coarse_ref, halo_ref, xi_ref, r_ref, d_ref, out_ref,
-                    *, b_b: int, b_f: int, s: int, n_csz: int, n_fsz: int):
+                    *, b_b: int, b_f: int, s: int, n_csz: int, n_fsz: int,
+                    accum):
     buf = jnp.concatenate(
         [coarse_ref[...], halo_ref[:, : ((n_csz - 1) // s) * s]], axis=-1
     )
@@ -126,20 +136,21 @@ def _charted_kernel(coarse_ref, halo_ref, xi_ref, r_ref, d_ref, out_ref,
     # batched matvec on the MXU, families as the dot_general batch dim,
     # batch rows as the free dim: matrices are loaded once per family block
     fine = jnp.einsum("btc,tfc->btf", w, r_ref[...],
-                      preferred_element_type=jnp.float32)
+                      preferred_element_type=accum)
     fine = fine + jnp.einsum("btj,tfj->btf", xi_ref[...], d_ref[...],
-                             preferred_element_type=jnp.float32)
+                             preferred_element_type=accum)
     out_ref[...] = fine.reshape(b_b, b_f * n_fsz).astype(out_ref.dtype)
 
 
 def _charted_nn_kernel(coarse_ref, halo_ref, r_ref, out_ref,
-                       *, b_b: int, b_f: int, s: int, n_csz: int, n_fsz: int):
+                       *, b_b: int, b_f: int, s: int, n_csz: int, n_fsz: int,
+                       accum):
     buf = jnp.concatenate(
         [coarse_ref[...], halo_ref[:, : ((n_csz - 1) // s) * s]], axis=-1
     )
     w = _window_cols(buf, b_f, s, n_csz)
     fine = jnp.einsum("btc,tfc->btf", w, r_ref[...],
-                      preferred_element_type=jnp.float32)
+                      preferred_element_type=accum)
     out_ref[...] = fine.reshape(b_b, b_f * n_fsz).astype(out_ref.dtype)
 
 
@@ -155,7 +166,7 @@ def _overlap_add_cols(dw: Array, b_f: int, s: int, n_csz: int) -> Array:
     """
     q_max = (n_csz - 1) // s
     b_b = dw.shape[0]
-    acc = jnp.zeros((b_b, b_f, s), jnp.float32)
+    acc = jnp.zeros((b_b, b_f, s), dw.dtype)
     for q in range(q_max + 1):
         width = min(s, n_csz - q * s)
         if width <= 0:
@@ -172,7 +183,7 @@ def _overlap_add_cols(dw: Array, b_f: int, s: int, n_csz: int) -> Array:
 
 def _stationary_adjoint_kernel(g_ref, gh_ref, r_ref, d_ref, dc_ref, dxi_ref,
                                *, b_b: int, b_f: int, s: int, n_csz: int,
-                               n_fsz: int):
+                               n_fsz: int, accum):
     q_max = (n_csz - 1) // s
     g = g_ref[...]                                        # (b_b, B_f, n_fsz)
     r = r_ref[...]
@@ -181,18 +192,18 @@ def _stationary_adjoint_kernel(g_ref, gh_ref, r_ref, d_ref, dc_ref, dxi_ref,
     if q_max > 0:
         g_ext = jnp.concatenate([gh_ref[:, b_f - q_max :], g], axis=1)
     dw = jnp.dot(g_ext.reshape(-1, n_fsz), r,
-                 preferred_element_type=jnp.float32)
+                 preferred_element_type=accum)
     dw = dw.reshape(b_b, b_f + q_max, n_csz)
     acc = _overlap_add_cols(dw, b_f, s, n_csz)            # (b_b, B_f, s)
     dc_ref[...] = acc.reshape(b_b, b_f * s).astype(dc_ref.dtype)
     dxi = jnp.dot(g.reshape(-1, n_fsz), d,
-                  preferred_element_type=jnp.float32)
+                  preferred_element_type=accum)
     dxi_ref[...] = dxi.reshape(b_b, b_f, n_fsz).astype(dxi_ref.dtype)
 
 
 def _stationary_adjoint_nn_kernel(g_ref, gh_ref, r_ref, dc_ref,
                                   *, b_b: int, b_f: int, s: int, n_csz: int,
-                                  n_fsz: int):
+                                  n_fsz: int, accum):
     """Noise-free adjoint: scatter-add only, no dxi output."""
     q_max = (n_csz - 1) // s
     g = g_ref[...]
@@ -200,7 +211,7 @@ def _stationary_adjoint_nn_kernel(g_ref, gh_ref, r_ref, dc_ref,
     if q_max > 0:
         g_ext = jnp.concatenate([gh_ref[:, b_f - q_max :], g], axis=1)
     dw = jnp.dot(g_ext.reshape(-1, n_fsz), r_ref[...],
-                 preferred_element_type=jnp.float32)
+                 preferred_element_type=accum)
     dw = dw.reshape(b_b, b_f + q_max, n_csz)
     acc = _overlap_add_cols(dw, b_f, s, n_csz)
     dc_ref[...] = acc.reshape(b_b, b_f * s).astype(dc_ref.dtype)
@@ -209,37 +220,37 @@ def _stationary_adjoint_nn_kernel(g_ref, gh_ref, r_ref, dc_ref,
 def _charted_adjoint_kernel(g_ref, gh_ref, rm_ref, rh_ref, d_ref,
                             dc_ref, dxi_ref,
                             *, b_b: int, b_f: int, s: int, n_csz: int,
-                            n_fsz: int):
+                            n_fsz: int, accum):
     q_max = (n_csz - 1) // s
     g = g_ref[...]                                        # (b_b, B_f, n_fsz)
     # dw[·, t] = R[t]ᵀ g[·, t] — batched matvec, per-family stencils
     dw = jnp.einsum("btf,tfc->btc", g, rm_ref[...],
-                    preferred_element_type=jnp.float32)
+                    preferred_element_type=accum)
     if q_max > 0:
         g_h = gh_ref[:, b_f - q_max :]                    # (b_b, q_max, f)
         r_h = rh_ref[b_f - q_max :]                       # (q_max, f, c)
         dw_h = jnp.einsum("bqf,qfc->bqc", g_h, r_h,
-                          preferred_element_type=jnp.float32)
+                          preferred_element_type=accum)
         dw = jnp.concatenate([dw_h, dw], axis=1)
     acc = _overlap_add_cols(dw, b_f, s, n_csz)
     dc_ref[...] = acc.reshape(b_b, b_f * s).astype(dc_ref.dtype)
     dxi = jnp.einsum("btf,tfj->btj", g, d_ref[...],
-                     preferred_element_type=jnp.float32)
+                     preferred_element_type=accum)
     dxi_ref[...] = dxi.astype(dxi_ref.dtype)
 
 
 def _charted_adjoint_nn_kernel(g_ref, gh_ref, rm_ref, rh_ref, dc_ref,
                                *, b_b: int, b_f: int, s: int, n_csz: int,
-                               n_fsz: int):
+                               n_fsz: int, accum):
     q_max = (n_csz - 1) // s
     g = g_ref[...]
     dw = jnp.einsum("btf,tfc->btc", g, rm_ref[...],
-                    preferred_element_type=jnp.float32)
+                    preferred_element_type=accum)
     if q_max > 0:
         g_h = gh_ref[:, b_f - q_max :]
         r_h = rh_ref[b_f - q_max :]
         dw_h = jnp.einsum("bqf,qfc->bqc", g_h, r_h,
-                          preferred_element_type=jnp.float32)
+                          preferred_element_type=accum)
         dw = jnp.concatenate([dw_h, dw], axis=1)
     acc = _overlap_add_cols(dw, b_f, s, n_csz)
     dc_ref[...] = acc.reshape(b_b, b_f * s).astype(dc_ref.dtype)
@@ -291,7 +302,7 @@ def _pad_batch(arrs, batch, b_b, nbb):
 
 def _refine_stationary_impl(meta, coarse: Array, xi: Array, r: Array,
                             d: Array) -> Array:
-    n_csz, n_fsz, block_families, batch_block, interpret = meta
+    n_csz, n_fsz, block_families, batch_block, interpret, accum_name = meta
     t = xi.shape[-2]
     batch = coarse.shape[0]
     s, b_f, nblk, b_b, nbb = _block_shapes(
@@ -301,7 +312,8 @@ def _refine_stationary_impl(meta, coarse: Array, xi: Array, r: Array,
     b_c = b_f * s
 
     kern = functools.partial(
-        _stationary_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+        _stationary_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz,
+        accum=jnp.dtype(accum_name),
     )
     out = pl.pallas_call(
         kern,
@@ -322,7 +334,7 @@ def _refine_stationary_impl(meta, coarse: Array, xi: Array, r: Array,
 
 
 def _refine_stationary_nn_impl(meta, coarse: Array, r: Array) -> Array:
-    t, n_csz, n_fsz, block_families, batch_block, interpret = meta
+    t, n_csz, n_fsz, block_families, batch_block, interpret, accum_name = meta
     batch = coarse.shape[0]
     s, b_f, nblk, b_b, nbb = _block_shapes(
         t, batch, n_csz, n_fsz, block_families, batch_block)
@@ -332,7 +344,7 @@ def _refine_stationary_nn_impl(meta, coarse: Array, r: Array) -> Array:
 
     kern = functools.partial(
         _stationary_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-        n_fsz=n_fsz
+        n_fsz=n_fsz, accum=jnp.dtype(accum_name),
     )
     out = pl.pallas_call(
         kern,
@@ -352,7 +364,7 @@ def _refine_stationary_nn_impl(meta, coarse: Array, r: Array) -> Array:
 
 def _refine_charted_impl(meta, coarse: Array, xi: Array, r: Array,
                          d: Array) -> Array:
-    n_csz, n_fsz, block_families, batch_block, interpret = meta
+    n_csz, n_fsz, block_families, batch_block, interpret, accum_name = meta
     t = xi.shape[-2]
     batch = coarse.shape[0]
     s, b_f, nblk, b_b, nbb = _block_shapes(
@@ -366,7 +378,8 @@ def _refine_charted_impl(meta, coarse: Array, xi: Array, r: Array,
     b_c = b_f * s
 
     kern = functools.partial(
-        _charted_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+        _charted_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz,
+        accum=jnp.dtype(accum_name),
     )
     out = pl.pallas_call(
         kern,
@@ -387,7 +400,7 @@ def _refine_charted_impl(meta, coarse: Array, xi: Array, r: Array,
 
 
 def _refine_charted_nn_impl(meta, coarse: Array, r: Array) -> Array:
-    t, n_csz, n_fsz, block_families, batch_block, interpret = meta
+    t, n_csz, n_fsz, block_families, batch_block, interpret, accum_name = meta
     batch = coarse.shape[0]
     s, b_f, nblk, b_b, nbb = _block_shapes(
         t, batch, n_csz, n_fsz, block_families, batch_block)
@@ -399,7 +412,8 @@ def _refine_charted_nn_impl(meta, coarse: Array, r: Array) -> Array:
     b_c = b_f * s
 
     kern = functools.partial(
-        _charted_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz
+        _charted_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz,
+        accum=jnp.dtype(accum_name),
     )
     out = pl.pallas_call(
         kern,
@@ -439,14 +453,15 @@ def _adjoint_shapes(g, n_csz, n_fsz, block_families, batch_block):
 @functools.partial(
     jax.jit,
     static_argnames=("coarse_len", "n_csz", "n_fsz", "block_families",
-                     "batch_block", "interpret", "noise"),
+                     "batch_block", "interpret", "noise", "accum_dtype"),
 )
 def refine_stationary_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
                                      coarse_len: int, n_csz: int, n_fsz: int,
                                      block_families: int = 256,
                                      batch_block: int = 1,
                                      interpret: bool = False,
-                                     noise: bool = True):
+                                     noise: bool = True,
+                                     accum_dtype: str = "float32"):
     """Fused adjoint of ``refine_stationary_pallas`` in (coarse, xi).
 
     g: (B, T*n_fsz) fine cotangent -> (dcoarse: (B, coarse_len),
@@ -464,7 +479,7 @@ def refine_stationary_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
     if noise:
         kern = functools.partial(
             _stationary_adjoint_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-            n_fsz=n_fsz
+            n_fsz=n_fsz, accum=jnp.dtype(accum_dtype),
         )
         dc, dxi = pl.pallas_call(
             kern,
@@ -490,7 +505,7 @@ def refine_stationary_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
 
     kern = functools.partial(
         _stationary_adjoint_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-        n_fsz=n_fsz
+        n_fsz=n_fsz, accum=jnp.dtype(accum_dtype),
     )
     dc = pl.pallas_call(
         kern,
@@ -511,14 +526,15 @@ def refine_stationary_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
 @functools.partial(
     jax.jit,
     static_argnames=("coarse_len", "n_csz", "n_fsz", "block_families",
-                     "batch_block", "interpret", "noise"),
+                     "batch_block", "interpret", "noise", "accum_dtype"),
 )
 def refine_charted_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
                                   coarse_len: int, n_csz: int, n_fsz: int,
                                   block_families: int = 256,
                                   batch_block: int = 1,
                                   interpret: bool = False,
-                                  noise: bool = True):
+                                  noise: bool = True,
+                                  accum_dtype: str = "float32"):
     """Fused adjoint of ``refine_charted_pallas`` (per-family matrices).
 
     The halo families' window cotangents need the *previous* block's
@@ -536,7 +552,7 @@ def refine_charted_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
         d_pad = jnp.pad(d, pad_fam + [(0, 0), (0, 0)])
         kern = functools.partial(
             _charted_adjoint_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-            n_fsz=n_fsz
+            n_fsz=n_fsz, accum=jnp.dtype(accum_dtype),
         )
         dc, dxi = pl.pallas_call(
             kern,
@@ -563,7 +579,7 @@ def refine_charted_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
 
     kern = functools.partial(
         _charted_adjoint_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-        n_fsz=n_fsz
+        n_fsz=n_fsz, accum=jnp.dtype(accum_dtype),
     )
     dc = pl.pallas_call(
         kern,
@@ -588,18 +604,21 @@ def refine_charted_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
 # argument so fixed-matrix inference skips the window-tensor einsums. The
 # flags are encoded in the residue *structure* (() vs None) — pytree treedefs
 # are static, so the backward branches at trace time.
-def _matrix_cotangents(coarse, xi, g3, r, d, r_pert, d_pert, *, charted):
+def _matrix_cotangents(coarse, xi, g3, r, d, r_pert, d_pert, *, charted,
+                       accum=jnp.float32):
     s = r.shape[-2] // 2
     t = g3.shape[-2]
     if r_pert is not None:
         w = windows_1d(coarse, t, r.shape[-1], s)
         eq = "...tf,...tc->tfc" if charted else "...tf,...tc->fc"
-        dr = jnp.einsum(eq, g3, w).astype(r.dtype)
+        dr = jnp.einsum(eq, g3, w,
+                        preferred_element_type=accum).astype(r.dtype)
     else:
         dr = jnp.zeros_like(r)
     if d_pert is not None:
         eq = "...tf,...tj->tfj" if charted else "...tf,...tj->fj"
-        dd = jnp.einsum(eq, g3, xi).astype(d.dtype)
+        dd = jnp.einsum(eq, g3, xi,
+                        preferred_element_type=accum).astype(d.dtype)
     else:
         dd = jnp.zeros_like(d)
     return dr, dd
@@ -621,7 +640,8 @@ def _make_refine_vjp(impl, adjoint, *, charted):
         return out, res
 
     def bwd(meta, res, g):
-        n_csz, n_fsz, block_families, batch_block, interpret = meta
+        n_csz, n_fsz, block_families, batch_block, interpret, accum_name \
+            = meta
         coarse, xi, r, d, r_pert, d_pert = res
         if isinstance(g, SymbolicZero):
             return (jnp.zeros_like(coarse), jnp.zeros_like(xi),
@@ -629,11 +649,12 @@ def _make_refine_vjp(impl, adjoint, *, charted):
         dc, dxi = adjoint(
             g, r, d, coarse_len=coarse.shape[-1], n_csz=n_csz, n_fsz=n_fsz,
             block_families=block_families, batch_block=batch_block,
-            interpret=interpret,
+            interpret=interpret, accum_dtype=accum_name,
         )
         g3 = g.reshape(g.shape[:-1] + (xi.shape[-2], n_fsz))
         dr, dd = _matrix_cotangents(coarse, xi, g3, r, d, r_pert, d_pert,
-                                    charted=charted)
+                                    charted=charted,
+                                    accum=jnp.dtype(accum_name))
         return dc.astype(coarse.dtype), dxi.astype(xi.dtype), dr, dd
 
     refine.defvjp(fwd, bwd, symbolic_zeros=True)
@@ -653,20 +674,23 @@ def _make_refine_nn_vjp(impl, adjoint, *, charted):
         return out, (coarse.value, r.value, () if r.perturbed else None)
 
     def bwd(meta, res, g):
-        t, n_csz, n_fsz, block_families, batch_block, interpret = meta
+        t, n_csz, n_fsz, block_families, batch_block, interpret, accum_name \
+            = meta
         coarse, r, r_pert = res
         if isinstance(g, SymbolicZero):
             return jnp.zeros_like(coarse), jnp.zeros_like(r)
         dc = adjoint(
             g, r, coarse_len=coarse.shape[-1], n_csz=n_csz, n_fsz=n_fsz,
             block_families=block_families, batch_block=batch_block,
-            interpret=interpret, noise=False,
+            interpret=interpret, noise=False, accum_dtype=accum_name,
         )
         if r_pert is not None:
             g3 = g.reshape(g.shape[:-1] + (t, n_fsz))
             w = windows_1d(coarse, t, n_csz, n_fsz // 2)
             eq = "...tf,...tc->tfc" if charted else "...tf,...tc->fc"
-            dr = jnp.einsum(eq, g3, w).astype(r.dtype)
+            dr = jnp.einsum(eq, g3, w,
+                            preferred_element_type=jnp.dtype(accum_name)
+                            ).astype(r.dtype)
         else:
             dr = jnp.zeros_like(r)
         return dc.astype(coarse.dtype), dr
@@ -690,7 +714,7 @@ _refine_charted_nn = _make_refine_nn_vjp(
 @functools.partial(
     jax.jit,
     static_argnames=("n_csz", "n_fsz", "block_families", "batch_block",
-                     "interpret", "noise", "t"),
+                     "interpret", "noise", "t", "accum_dtype"),
 )
 def refine_stationary_pallas(coarse: Array, xi: Array, r: Array,
                              d: Array = None, *, n_csz: int, n_fsz: int,
@@ -698,7 +722,8 @@ def refine_stationary_pallas(coarse: Array, xi: Array, r: Array,
                              batch_block: int = 1,
                              interpret: bool = False,
                              noise: bool = True,
-                             t: int = None) -> Array:
+                             t: int = None,
+                             accum_dtype: str = "float32") -> Array:
     """Fused stationary refinement (differentiable). See module docstring.
 
     coarse: (B, L) halo-padded (L >= T*s + n_csz - s); xi: (B, T, n_fsz)
@@ -711,21 +736,24 @@ def refine_stationary_pallas(coarse: Array, xi: Array, r: Array,
     """
     if noise:
         return _refine_stationary(
-            (n_csz, n_fsz, block_families, batch_block, interpret),
+            (n_csz, n_fsz, block_families, batch_block, interpret,
+             accum_dtype),
             coarse, xi, r, d,
         )
     tt = t if t is not None else (xi.shape[-2] if xi is not None else None)
     if tt is None:
         raise ValueError("noise=False needs the family count: pass t=")
     return _refine_stationary_nn(
-        (tt, n_csz, n_fsz, block_families, batch_block, interpret), coarse, r
+        (tt, n_csz, n_fsz, block_families, batch_block, interpret,
+         accum_dtype),
+        coarse, r,
     )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("n_csz", "n_fsz", "block_families", "batch_block",
-                     "interpret", "noise", "t"),
+                     "interpret", "noise", "t", "accum_dtype"),
 )
 def refine_charted_pallas(coarse: Array, xi: Array, r: Array,
                           d: Array = None, *, n_csz: int, n_fsz: int,
@@ -733,7 +761,8 @@ def refine_charted_pallas(coarse: Array, xi: Array, r: Array,
                           batch_block: int = 1,
                           interpret: bool = False,
                           noise: bool = True,
-                          t: int = None) -> Array:
+                          t: int = None,
+                          accum_dtype: str = "float32") -> Array:
     """Fused charted refinement with per-family matrices (paper §4.3),
     differentiable via the hand-written adjoint kernels.
 
@@ -745,10 +774,12 @@ def refine_charted_pallas(coarse: Array, xi: Array, r: Array,
     """
     if noise:
         return _refine_charted(
-            (n_csz, n_fsz, block_families, batch_block, interpret),
+            (n_csz, n_fsz, block_families, batch_block, interpret,
+             accum_dtype),
             coarse, xi, r, d,
         )
     return _refine_charted_nn(
-        (r.shape[0], n_csz, n_fsz, block_families, batch_block, interpret),
+        (r.shape[0], n_csz, n_fsz, block_families, batch_block, interpret,
+         accum_dtype),
         coarse, r,
     )

@@ -53,6 +53,7 @@ from .icr_refine import (
     refine_charted_pallas,
     refine_stationary_pallas,
 )
+from .nd_fused import precontract_noise
 
 Array = jnp.ndarray
 
@@ -60,7 +61,8 @@ Array = jnp.ndarray
 def refine_axes(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
                 interpret: bool | None = None,
                 block_families: int | None = None,
-                sample_axis: bool = False) -> Array:
+                sample_axis: bool = False,
+                accum_dtype: str = "float32") -> Array:
     """Fused per-axis N-D refinement (drop-in for refine_level given factors).
 
     field: (*geom.coarse_shape); xi: (prod(geom.T), n_fsz^ndim) — each with
@@ -68,7 +70,9 @@ def refine_axes(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
     rs[a]: (n_fsz, n_csz) on stationary axes else (T_a, n_fsz, n_csz);
     ds[a]:  likewise with n_csz -> n_fsz.
     Returns the fine field, shape ``geom.fine_shape`` (sample dim leading
-    when ``sample_axis``).
+    when ``sample_axis``). Storage dtype follows the operands; every
+    contraction (in-kernel and the ξ pre-contraction here) accumulates in
+    ``accum_dtype`` (DESIGN.md §11).
     """
     from .dispatch import autotune_block_families  # lazy: avoid import cycle
 
@@ -76,24 +80,19 @@ def refine_axes(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
     fsz, csz, b = geom.n_fsz, geom.n_csz, geom.b
     T = tuple(geom.T)
     interpret = _interpret_default() if interpret is None else interpret
+    accum = jnp.dtype(accum_dtype)
     off = 1 if sample_axis else 0
     lead = field.shape[:off]
 
     # -- excitation: pre-contract noise factors of axes 1..d-1 -----------------
-    xi_nd = xi.reshape(lead + T + (fsz,) * nd)
-    for a in range(1, nd):
-        x2 = jnp.moveaxis(xi_nd, (off + a, off + nd + a), (-2, -1))
-        if ds[a].ndim == 2:
-            x2 = jnp.einsum("...tj,fj->...tf", x2, ds[a])
-        else:
-            x2 = jnp.einsum("...tj,tfj->...tf", x2, ds[a])
-        xi_nd = jnp.moveaxis(x2, (-2, -1), (off + a, off + nd + a))
+    xi_nd = precontract_noise(xi.reshape(lead + T + (fsz,) * nd), ds,
+                              off=off, accum=accum)
     # interleave (T_a, f_a) for a>=1 into the final pass' fine batch layout
     perm = list(range(off))
     for a in range(1, nd):
         perm += [off + a, off + nd + a]
     perm += [off, off + nd]
-    xi0 = xi_nd.transpose(perm).reshape(-1, T[0], fsz)
+    xi0 = xi_nd.transpose(perm).reshape(-1, T[0], fsz).astype(field.dtype)
 
     # -- field: one fused kernel pass per axis, orthogonal axes as batch -------
     out = field
@@ -106,13 +105,15 @@ def refine_axes(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
             coarse = jnp.pad(coarse, [(0, 0), (b, b)], mode="reflect")
         charted = rs[a].ndim == 3
         bf = block_families or autotune_block_families(
-            ag.T[0], csz, fsz, charted=charted
+            ag.T[0], csz, fsz, charted=charted,
+            itemsize=jnp.dtype(field.dtype).itemsize,
         )
         kern = refine_charted_pallas if charted else refine_stationary_pallas
         if a == 0:
             res = kern(
                 coarse, xi0, rs[a], ds[a], n_csz=csz, n_fsz=fsz,
                 block_families=bf, interpret=interpret,
+                accum_dtype=accum_dtype,
             )
         else:
             # noise already folded into xi0: run the ξ-free kernel variant
@@ -120,7 +121,7 @@ def refine_axes(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
             res = kern(
                 coarse, None, rs[a], None, n_csz=csz, n_fsz=fsz,
                 block_families=bf, interpret=interpret, noise=False,
-                t=ag.T[0],
+                t=ag.T[0], accum_dtype=accum_dtype,
             )
         out = jnp.moveaxis(res.reshape(bshape + (T[a] * fsz,)), -1, off + a)
     return out

@@ -93,8 +93,8 @@ def _axis_windows(x: Array, ax: int, t: int, s: int, n_csz: int) -> Array:
     return jnp.stack(cols, axis=ax + 1)
 
 
-def _contract_windows(w: Array, r: Array, ax: int, *, merge: bool = True
-                      ) -> Array:
+def _contract_windows(w: Array, r: Array, ax: int, *, merge: bool = True,
+                      accum=jnp.float32) -> Array:
     """Contract the window dim (at ``ax + 1``) with a refinement factor.
 
     w: (..., t, n_csz, ...); r: (n_fsz, n_csz) shared or (t, n_fsz, n_csz)
@@ -108,7 +108,7 @@ def _contract_windows(w: Array, r: Array, ax: int, *, merge: bool = True
     out_ls[ax + 1] = f_l
     rsub = (t_l + f_l + c_l) if r.ndim == 3 else (f_l + c_l)
     out = jnp.einsum(f"{''.join(ls)},{rsub}->{''.join(out_ls)}", w, r,
-                     preferred_element_type=jnp.float32)
+                     preferred_element_type=accum)
     if merge:
         shp = out.shape
         out = out.reshape(shp[:ax] + (shp[ax] * shp[ax + 1],) + shp[ax + 2 :])
@@ -117,7 +117,7 @@ def _contract_windows(w: Array, r: Array, ax: int, *, merge: bool = True
 
 # -- the megakernel body --------------------------------------------------------
 def _nd_fused_kernel(*refs, nd: int, csz: int, fsz: int, T: tuple,
-                     charted: tuple, b_f: int, s_b: int):
+                     charted: tuple, b_f: int, s_b: int, accum):
     coarse_ref, halo_ref, xi_ref, r0_ref, d0_ref = refs[:5]
     rt_refs = refs[5 : 5 + nd - 1]
     out_ref = refs[-1]
@@ -131,10 +131,10 @@ def _nd_fused_kernel(*refs, nd: int, csz: int, fsz: int, T: tuple,
         ax = 1 + a
         x = _slice_axis(x, ax, (T[a] + q_max) * s)
         w = _axis_windows(x, ax, T[a], s, csz)
-        x = _contract_windows(w, rt_refs[a - 1][...], ax)
+        x = _contract_windows(w, rt_refs[a - 1][...], ax, accum=accum)
 
     w0 = _axis_windows(x, 1, b_f, s, csz)          # (s_b, b_f, csz, *F_trail)
-    fine = _contract_windows(w0, r0_ref[...], 1, merge=False)
+    fine = _contract_windows(w0, r0_ref[...], 1, merge=False, accum=accum)
     prod_f = int(np.prod(fine.shape[3:])) if nd > 1 else 1
     fine = fine.reshape(s_b, b_f, fsz, prod_f)
 
@@ -142,16 +142,16 @@ def _nd_fused_kernel(*refs, nd: int, csz: int, fsz: int, T: tuple,
     d0 = d0_ref[...]
     if d0.ndim == 2:
         fine = fine + jnp.einsum("sbjp,fj->sbfp", xi, d0,
-                                 preferred_element_type=jnp.float32)
+                                 preferred_element_type=accum)
     else:
         fine = fine + jnp.einsum("sbjp,bfj->sbfp", xi, d0,
-                                 preferred_element_type=jnp.float32)
+                                 preferred_element_type=accum)
     out_ref[...] = fine.reshape(s_b, b_f * fsz, prod_f).astype(out_ref.dtype)
 
 
 def _nd_fused_impl(meta, field: Array, xi0: Array, r0: Array, d0: Array,
                    rts: tuple) -> Array:
-    nd, csz, fsz, T, charted, b_f, s_b, interpret = meta
+    nd, csz, fsz, T, charted, b_f, s_b, interpret, accum_name = meta
     s = fsz // 2
     sp = field.shape[0]
     nbs = sp // s_b
@@ -186,7 +186,7 @@ def _nd_fused_impl(meta, field: Array, xi0: Array, r0: Array, d0: Array,
 
     kern = functools.partial(
         _nd_fused_kernel, nd=nd, csz=csz, fsz=fsz, T=T, charted=charted,
-        b_f=b_f, s_b=s_b,
+        b_f=b_f, s_b=s_b, accum=jnp.dtype(accum_name),
     )
     out = pl.pallas_call(
         kern,
@@ -209,7 +209,8 @@ def _nd_fused_ref(meta, field: Array, xi0: Array, r0: Array, d0: Array,
     via strided slices, contractions as einsums — materializes what the
     kernel keeps in VMEM.
     """
-    nd, csz, fsz, T, charted, b_f, s_b, interpret = meta
+    nd, csz, fsz, T, charted, b_f, s_b, interpret, accum_name = meta
+    accum = jnp.dtype(accum_name)
     s = fsz // 2
     q_max = (csz - 1) // s
     sp = field.shape[0]
@@ -222,19 +223,20 @@ def _nd_fused_ref(meta, field: Array, xi0: Array, r0: Array, d0: Array,
         arr = jnp.moveaxis(x, ax, -1)[..., : (T[a] + q_max) * s]
         w = windows_1d(arr, T[a], csz, s)
         eq = "...tc,tfc->...tf" if rts[a - 1].ndim == 3 else "...tc,fc->...tf"
-        fine = jnp.einsum(eq, w, rts[a - 1])
+        fine = jnp.einsum(eq, w, rts[a - 1], preferred_element_type=accum)
         fine = fine.reshape(arr.shape[:-1] + (T[a] * fsz,))
         x = jnp.moveaxis(fine, -1, ax)
 
     arr = jnp.moveaxis(x, 1, -1)                  # (sp, *F_trail, L0p)
     w = windows_1d(arr, t0p, csz, s)
     eq = "...tc,tfc->...tf" if r0.ndim == 3 else "...tc,fc->...tf"
-    fine = jnp.einsum(eq, w, r0)                  # (sp, *F_trail, T0p, fsz)
+    fine = jnp.einsum(eq, w, r0,                  # (sp, *F_trail, T0p, fsz)
+                      preferred_element_type=accum)
     fine = fine.reshape(sp, prod_f, t0p, fsz).transpose(0, 2, 3, 1)
 
     xi3 = xi0.reshape(sp, t0p, fsz, prod_f)
     eq = "stjp,tfj->stfp" if d0.ndim == 3 else "stjp,fj->stfp"
-    fine = fine + jnp.einsum(eq, xi3, d0)
+    fine = fine + jnp.einsum(eq, xi3, d0, preferred_element_type=accum)
     return fine.reshape(sp, t0p * fsz, prod_f).astype(field.dtype)
 
 
@@ -254,7 +256,7 @@ def _core_fwd(meta, field, xi0, r0, d0, rts):
 
 
 def _core_bwd(meta, res, g):
-    nd, csz, fsz, T, charted, b_f, s_b, interpret = meta
+    nd, csz, fsz, T, charted, b_f, s_b, interpret, accum_name = meta
     field, xi0, r0, d0, rts, mats_pert = res
     zeros = (jnp.zeros_like(field), jnp.zeros_like(xi0),
              jnp.zeros_like(r0), jnp.zeros_like(d0),
@@ -289,7 +291,8 @@ def _core_bwd(meta, res, g):
     adj0 = (refine_charted_adjoint_pallas if charted[0]
             else refine_stationary_adjoint_pallas)
     dc0, dxi0 = adj0(gb, r0, d0, coarse_len=l0p, n_csz=csz, n_fsz=fsz,
-                     block_families=bf0, interpret=interpret)
+                     block_families=bf0, interpret=interpret,
+                     accum_dtype=accum_name)
     dxi = dxi0.reshape(sp, prod_f, t0p, fsz).transpose(0, 2, 3, 1)
     dxi = dxi.reshape(sp, t0p * fsz, prod_f).astype(xi0.dtype)
     cur = dc0.reshape((sp,) + f_trail + (l0p,))
@@ -306,7 +309,8 @@ def _core_bwd(meta, res, g):
                else refine_stationary_adjoint_pallas)
         used = (T[a] + q_max) * s
         dca = adj(g_a, rts[a - 1], coarse_len=used, n_csz=csz, n_fsz=fsz,
-                  block_families=bf_a, interpret=interpret, noise=False)
+                  block_families=bf_a, interpret=interpret, noise=False,
+                  accum_dtype=accum_name)
         if lp_trail[a - 1] > used:  # tail the forward's tile slice dropped
             dca = jnp.pad(dca, [(0, 0), (0, lp_trail[a - 1] - used)])
         cur = jnp.moveaxis(dca.reshape(bshape + (lp_trail[a - 1],)), -1, ax)
@@ -317,12 +321,47 @@ def _core_bwd(meta, res, g):
 _nd_fused_core.defvjp(_core_fwd, _core_bwd, symbolic_zeros=True)
 
 
+# -- excitation layout (shared by the megakernel, the per-axis passes and
+# the §11 pyramid — one implementation of the §10 ξ convention) ---------------
+def precontract_noise(xi_nd, ds, *, off: int, accum) -> Array:
+    """Fold the trailing-axis noise factors ``sqrt(D_a)``, a >= 1, into the
+    ``(..., T_0..T_{d-1}, f_0..f_{d-1})`` excitation tensor (only the
+    axis-0 pass injects noise in-kernel; ``off`` counts leading batch/sample
+    dims). Cheap batched small GEMMs, accumulated in ``accum``."""
+    nd = (xi_nd.ndim - off) // 2
+    for a in range(1, nd):
+        x2 = jnp.moveaxis(xi_nd, (off + a, off + nd + a), (-2, -1))
+        if ds[a].ndim == 2:
+            x2 = jnp.einsum("...tj,fj->...tf", x2, ds[a],
+                            preferred_element_type=accum)
+        else:
+            x2 = jnp.einsum("...tj,tfj->...tf", x2, ds[a],
+                            preferred_element_type=accum)
+        xi_nd = jnp.moveaxis(x2, (-2, -1), (off + a, off + nd + a))
+    return xi_nd
+
+
+def prepare_xi0(xi: Array, ds, T: tuple, fsz: int, *, accum,
+                storage) -> Array:
+    """``(S, prod T, fsz^d)`` ξ -> the megakernel tile layout
+    ``(S, T_0·fsz, prod_f)`` with trailing noise pre-contracted."""
+    nd = len(T)
+    n_s = xi.shape[0]
+    xi_nd = precontract_noise(
+        xi.reshape((n_s,) + tuple(T) + (fsz,) * nd), ds, off=1, accum=accum)
+    perm = [0, 1, 1 + nd]
+    for a in range(1, nd):
+        perm += [1 + a, 1 + nd + a]
+    return xi_nd.transpose(perm).reshape(n_s, T[0] * fsz, -1).astype(storage)
+
+
 # -- public wrapper -------------------------------------------------------------
 def refine_nd_fused(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
                     interpret: bool | None = None,
                     block_families: int | None = None,
                     sample_block: int | None = None,
-                    sample_axis: bool = False) -> Array:
+                    sample_axis: bool = False,
+                    accum_dtype: str = "float32") -> Array:
     """One fused Pallas launch for a whole N-D refinement level.
 
     Drop-in for ``nd.refine_axes`` (bit-compatible at 1e-5 given the same
@@ -345,12 +384,14 @@ def refine_nd_fused(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
     T = tuple(geom.T)
     charted = tuple(rs[a].ndim == 3 for a in range(nd))
     interpret = _interpret_default() if interpret is None else interpret
+    accum = jnp.dtype(accum_dtype)
 
     if not sample_axis:
         field, xi = field[None], xi[None]
     n_s = field.shape[0]
 
-    blocks = autotune_nd_fused(geom, charted=charted, samples=n_s)
+    blocks = autotune_nd_fused(geom, charted=charted, samples=n_s,
+                               itemsize=jnp.dtype(field.dtype).itemsize)
     if blocks is None:
         raise ValueError(
             "fused N-D tile exceeds the VMEM budget; dispatch should have "
@@ -363,18 +404,7 @@ def refine_nd_fused(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
         s_b = max(1, min(sample_block, n_s))
 
     # -- excitation: pre-contract noise factors of axes 1..d-1 -----------------
-    xi_nd = xi.reshape((n_s,) + T + (fsz,) * nd)
-    for a in range(1, nd):
-        x2 = jnp.moveaxis(xi_nd, (1 + a, 1 + nd + a), (-2, -1))
-        if ds[a].ndim == 2:
-            x2 = jnp.einsum("...tj,fj->...tf", x2, ds[a])
-        else:
-            x2 = jnp.einsum("...tj,tfj->...tf", x2, ds[a])
-        xi_nd = jnp.moveaxis(x2, (-2, -1), (1 + a, 1 + nd + a))
-    perm = [0, 1, 1 + nd]
-    for a in range(1, nd):
-        perm += [1 + a, 1 + nd + a]
-    xi0 = xi_nd.transpose(perm).reshape(n_s, T[0] * fsz, -1)
+    xi0 = prepare_xi0(xi, ds, T, fsz, accum=accum, storage=field.dtype)
 
     # -- field: reflect pre-pad every axis once, then tile-shape pads ----------
     if geom.boundary == "reflect":
@@ -404,7 +434,7 @@ def refine_nd_fused(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
         field = jnp.pad(field, [(0, pad_s)] + [(0, 0)] * nd)
         xi0 = jnp.pad(xi0, [(0, pad_s), (0, 0), (0, 0)])
 
-    meta = (nd, csz, fsz, T, charted, b_f, s_b, interpret)
+    meta = (nd, csz, fsz, T, charted, b_f, s_b, interpret, accum_dtype)
     out = _nd_fused_core(meta, field, xi0, r0, d0,
                          tuple(rs[a] for a in range(1, nd)))
     out = out[:n_s, : T[0] * fsz]

@@ -1,0 +1,112 @@
+"""Mixed-precision dtype policy for the ICR kernel stack (DESIGN.md §11).
+
+ICR refinement is memory-bound (the roofline model in
+``repro.roofline.level_traffic``): one level moves ``read L + read ξ +
+write N`` bytes of field data and a rounding error of matrices. The lever
+that remains after the fused megakernel (§10) is *bytes per element*, so
+the policy splits every array's life in two:
+
+  ``storage_dtype`` — what lives in HBM and crosses the HBM<->VMEM
+      boundary: the field between levels, the excitations ξ, the
+      refinement matrices. Default **bfloat16** — halves the modeled HBM
+      bytes of every large level.
+  ``accum_dtype``   — what the MXU/VPU accumulate in inside the kernels
+      (``preferred_element_type`` of every contraction, the overlap-add
+      accumulator of the adjoints). Default **float32** — refinement is a
+      long chain of small contractions and bf16 accumulation would lose
+      the paper's §5.1 accuracy story.
+
+``DtypePolicy()`` with no arguments is the default mixed policy
+(bf16 storage + fp32 accumulation); ``FP32`` is the explicit opt-out that
+reproduces the historical all-float32 behavior bit-for-bit. ``ICR``
+resolves ``dtype_policy=None`` to ``FP32`` so existing fp32 call sites
+(and the 1e-5 parity suites pinning them) are unchanged — mixed precision
+is engaged per model with ``ICR(dtype_policy="bf16")`` or any explicit
+``DtypePolicy``.
+
+Everything downstream keys off this object: ``dispatch`` sizes VMEM tiles
+by ``storage_itemsize`` (bf16 doubles the families per tile), ``plan()``
+and ``roofline.level_traffic`` account bytes per dtype, and the kernels
+thread ``accum_dtype`` into every ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    """Storage/accumulation dtype pair for the refinement stack.
+
+    Hashable and usable as a jit-static argument: the fields are
+    normalized to canonical ``numpy.dtype`` objects on construction, so
+    policies built from any spelling (``jnp.bfloat16``, ``"bfloat16"``,
+    ``jnp.dtype("bfloat16")``) compare AND hash equal — one jit cache
+    slot per semantic policy. The *default* policy is mixed precision
+    (bf16 storage, fp32 accumulation); pass ``FP32`` (or
+    ``ICR(dtype_policy="fp32")``) to opt out.
+    """
+
+    storage_dtype: jnp.dtype = jnp.bfloat16
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        object.__setattr__(self, "storage_dtype",
+                           jnp.dtype(self.storage_dtype))
+        object.__setattr__(self, "accum_dtype", jnp.dtype(self.accum_dtype))
+
+    @property
+    def storage_itemsize(self) -> int:
+        return jnp.dtype(self.storage_dtype).itemsize
+
+    @property
+    def storage_name(self) -> str:
+        return jnp.dtype(self.storage_dtype).name
+
+    @property
+    def accum_name(self) -> str:
+        return jnp.dtype(self.accum_dtype).name
+
+    def cast_storage(self, tree):
+        """Cast every array leaf of `tree` to the storage dtype (None leaves
+        pass through — the noise-free kernel modes use them)."""
+        import jax
+
+        return jax.tree.map(
+            lambda x: None if x is None else jnp.asarray(
+                x, self.storage_dtype),
+            tree,
+            is_leaf=lambda x: x is None,
+        )
+
+
+BF16 = DtypePolicy()                                # the default mixed policy
+FP32 = DtypePolicy(jnp.float32, jnp.float32)        # the opt-out
+
+_ALIASES = {
+    "bf16": BF16, "bfloat16": BF16, "mixed": BF16, "default": BF16,
+    "fp32": FP32, "float32": FP32, "f32": FP32,
+}
+
+
+def resolve(policy) -> DtypePolicy:
+    """Coerce ``None`` / alias strings / DtypePolicy to a DtypePolicy.
+
+    ``None`` resolves to ``FP32``: the policy system is opt-in per model so
+    the fp32 reference suites stay bit-stable (see module docstring).
+    """
+    if policy is None:
+        return FP32
+    if isinstance(policy, DtypePolicy):
+        return policy
+    if isinstance(policy, str):
+        try:
+            return _ALIASES[policy.lower()]
+        except KeyError:
+            raise ValueError(
+                f"unknown dtype policy {policy!r}; expected one of "
+                f"{sorted(_ALIASES)} or a DtypePolicy"
+            ) from None
+    raise TypeError(f"cannot resolve dtype policy from {type(policy)}")

@@ -1,0 +1,315 @@
+"""VMEM-resident pyramid kernel: many refinement levels, ONE launch
+(DESIGN.md §11).
+
+Every per-level route — even the §10 megakernel — writes its fine field to
+HBM and reads it back as the next level's coarse input. For the *early*
+levels of a chart that round trip is pure waste: a 3-D chart's levels grow
+8x per step, so the first k levels are tiny and their combined working set
+(fields + excitations + matrices) fits comfortably in VMEM. This module
+collapses all consecutive early levels whose combined working set fits the
+VMEM budget (``dispatch.autotune_pyramid`` owns the residency criterion)
+into one ``pallas_call``:
+
+  * the grid runs over sample slabs only (``s_b`` samples per step) — no
+    spatial tiling, the whole field of every covered level is resident,
+  * each level's body is the §10 contraction chain at full extent: reflect
+    pad (in VMEM, via flip+concat — no HBM pre-pad), per-axis
+    window-from-reshape (`_axis_windows`) + Kronecker contraction, then the
+    fused noise add ``sqrt(D_0)·ξ`` (trailing noise factors pre-contracted
+    into ξ outside, exactly like §10),
+  * the fine field of level l feeds level l+1 *in registers/VMEM* — the
+    inter-level HBM field traffic of the covered prefix is ZERO,
+  * only the final level's field is written to HBM.
+
+HBM traffic for the covered prefix drops from ``Σ_l (read L_l + read ξ_l +
+write N_l)`` to ``read L_0 + Σ_l read ξ_l + write N_{k-1}`` (+ matrices) —
+``roofline.level_traffic`` carries the per-level model (``route=
+"pyramid"`` with first/last flags).
+
+1-D charts are covered too (the per-axis factor list has one entry); the
+dtype policy (§11) threads through: storage dtype = operand dtype, every
+contraction accumulates in ``accum_dtype``, and each level's in-VMEM output
+is rounded to the storage dtype so the pyramid is numerically identical to
+the level-by-level routes under the same policy.
+
+Backward: the core carries a ``jax.custom_vjp`` that replays an
+*independent jnp reference* of the same chain under ``jax.vjp`` — at fixed
+matrices only w.r.t. (field, ξ) (the chain is linear there, and the
+parameter-sized window einsums are gated by ``symbolic_zeros`` exactly like
+§9/§10). The covered levels are by construction the smallest in the chart
+(<= a VMEM's worth of work), so an HBM-roundtripping backward is a rounding
+error next to the uncovered big levels; the forward is where the pyramid
+pays for itself.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.custom_derivatives import SymbolicZero
+from jax.experimental import pallas as pl
+
+from .icr_refine import interpret_default as _interpret_default
+from .nd_fused import (
+    _axis_windows,
+    _contract_windows,
+    _slice_axis,
+    prepare_xi0,
+)
+
+Array = jnp.ndarray
+
+
+def _reflect_pad_axis(x: Array, ax: int, b: int) -> Array:
+    """jnp.pad(mode="reflect") along one axis from flips + concat — the
+    in-VMEM form (Pallas-safe: static slices + lax.rev, no gather)."""
+    if b == 0:
+        return x
+    lo = [slice(None)] * x.ndim
+    lo[ax] = slice(1, b + 1)
+    hi = [slice(None)] * x.ndim
+    hi[ax] = slice(-b - 1, -1)
+    return jnp.concatenate(
+        [jnp.flip(x[tuple(lo)], axis=ax), x, jnp.flip(x[tuple(hi)], axis=ax)],
+        axis=ax,
+    )
+
+
+def _fit_axis(x: Array, ax: int, want: int) -> Array:
+    """Slice or zero-pad axis ``ax`` to exactly ``want`` — the window build
+    needs ``(T + q_max)·s`` elements, never more (§10 tile rule)."""
+    have = x.shape[ax]
+    if have > want:
+        return _slice_axis(x, ax, want)
+    if have < want:
+        pads = [(0, 0)] * x.ndim
+        pads[ax] = (0, want - have)
+        return jnp.pad(x, pads)
+    return x
+
+
+def _level_body(x: Array, xi0: Array, rl, d0, *, T: tuple, csz: int,
+                fsz: int, boundary: str, b: int, accum, storage) -> Array:
+    """One refinement level at full extent, entirely in VMEM.
+
+    x: (s_b, *coarse_shape) -> (s_b, *fine_shape); xi0: (s_b, T0·fsz,
+    prod_f) with trailing noise factors pre-contracted (§10 layout).
+    """
+    nd = len(T)
+    s = fsz // 2
+    q_max = (csz - 1) // s
+    s_b = x.shape[0]
+
+    if boundary == "reflect":
+        for a in range(nd):
+            x = _reflect_pad_axis(x, 1 + a, b)
+    for a in range(nd):
+        x = _fit_axis(x, 1 + a, (T[a] + q_max) * s)
+
+    for a in range(nd - 1, 0, -1):
+        ax = 1 + a
+        w = _axis_windows(x, ax, T[a], s, csz)
+        x = _contract_windows(w, rl[a], ax, accum=accum)
+
+    w0 = _axis_windows(x, 1, T[0], s, csz)
+    fine = _contract_windows(w0, rl[0], 1, merge=False, accum=accum)
+    f_trail = fine.shape[3:]
+    prod_f = int(np.prod(f_trail)) if f_trail else 1
+    fine = fine.reshape(s_b, T[0], fsz, prod_f)
+
+    xi = xi0.reshape(s_b, T[0], fsz, prod_f)
+    if d0.ndim == 2:
+        fine = fine + jnp.einsum("stjp,fj->stfp", xi, d0,
+                                 preferred_element_type=accum)
+    else:
+        fine = fine + jnp.einsum("stjp,tfj->stfp", xi, d0,
+                                 preferred_element_type=accum)
+    # round to the storage dtype between levels: bit-identical to what the
+    # per-level routes would have written to (and re-read from) HBM
+    return fine.reshape((s_b, T[0] * fsz) + f_trail).astype(storage)
+
+
+def _apply_levels(meta, field: Array, xi0s, r_all, d0s) -> Array:
+    """The whole covered prefix, as pure array ops — the single source of
+    the pyramid math. Runs inside the Pallas kernel body on refs' values
+    AND standalone as the jnp reference for the backward replay."""
+    (csz, fsz, boundary, b, levels, s_b, interpret, accum_name) = meta
+    accum = jnp.dtype(accum_name)
+    storage = field.dtype
+    x = field
+    for lvl, (T, _) in enumerate(levels):
+        x = _level_body(x, xi0s[lvl], r_all[lvl], d0s[lvl], T=T, csz=csz,
+                        fsz=fsz, boundary=boundary, b=b, accum=accum,
+                        storage=storage)
+    T_last = levels[-1][0]
+    prod_f = int(np.prod([t * fsz for t in T_last[1:]])) or 1
+    return x.reshape(s_b, T_last[0] * fsz, prod_f)
+
+
+def _pyramid_kernel(*refs, meta):
+    field_ref = refs[0]
+    out_ref = refs[-1]
+    per_level = refs[1:-1]
+    xi0s, r_all, d0s = [], [], []
+    i = 0
+    for T, _ in meta[4]:
+        nd = len(T)
+        xi0s.append(per_level[i][...])
+        r_all.append(tuple(per_level[i + 1 + a][...] for a in range(nd)))
+        d0s.append(per_level[i + 1 + nd][...])
+        i += 2 + nd
+    out = _apply_levels(meta, field_ref[...], xi0s, r_all, d0s)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def _pyramid_impl(meta, field: Array, xi0s, r_all, d0s) -> Array:
+    (csz, fsz, boundary, b, levels, s_b, interpret, accum_name) = meta
+    n_s = field.shape[0]
+    nbs = n_s // s_b
+    T_last = levels[-1][0]
+    prod_f = int(np.prod([t * fsz for t in T_last[1:]])) or 1
+
+    def sample_blocked(shape):
+        zeros = (0,) * (len(shape) - 1)
+        return pl.BlockSpec((s_b,) + tuple(shape[1:]),
+                            lambda s, _z=zeros: (s,) + _z)
+
+    def resident(shape):
+        zeros = (0,) * len(shape)
+        return pl.BlockSpec(tuple(shape), lambda s, _z=zeros: _z)
+
+    in_specs = [sample_blocked(field.shape)]
+    operands = [field]
+    for lvl in range(len(levels)):
+        in_specs.append(sample_blocked(xi0s[lvl].shape))
+        operands.append(xi0s[lvl])
+        for r in r_all[lvl]:
+            in_specs.append(resident(r.shape))
+            operands.append(r)
+        in_specs.append(resident(d0s[lvl].shape))
+        operands.append(d0s[lvl])
+
+    out = pl.pallas_call(
+        functools.partial(_pyramid_kernel, meta=meta),
+        grid=(nbs,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((s_b, T_last[0] * fsz, prod_f),
+                               lambda s: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_s, T_last[0] * fsz, prod_f),
+                                       field.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out
+
+
+def _pyramid_ref(meta, field: Array, xi0s, r_all, d0s) -> Array:
+    """jnp replay of the chain over the full sample batch (backward path)."""
+    meta_full = meta[:5] + (field.shape[0],) + meta[6:]
+    return _apply_levels(meta_full, field, xi0s, r_all, d0s)
+
+
+# -- custom VJP -----------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pyramid_core(meta, field, xi0s, r_all, d0s):
+    return _pyramid_impl(meta, field, xi0s, r_all, d0s)
+
+
+def _core_fwd(meta, field, xi0s, r_all, d0s):
+    vals = (field.value,
+            tuple(x.value for x in xi0s),
+            tuple(tuple(r.value for r in rl) for rl in r_all),
+            tuple(d.value for d in d0s))
+    out = _pyramid_impl(meta, *vals)
+    mats_pert = (any(r.perturbed for rl in r_all for r in rl)
+                 or any(d.perturbed for d in d0s))
+    return out, vals + (() if mats_pert else None,)
+
+
+def _core_bwd(meta, res, g):
+    field, xi0s, r_all, d0s, mats_pert = res
+    zeros_r = tuple(tuple(jnp.zeros_like(r) for r in rl) for rl in r_all)
+    zeros_d = tuple(jnp.zeros_like(d) for d in d0s)
+    if isinstance(g, SymbolicZero):
+        return (jnp.zeros_like(field),
+                tuple(jnp.zeros_like(x) for x in xi0s), zeros_r, zeros_d)
+    if mats_pert is not None:
+        # learning θ: parameter-sized window einsums via the reference VJP
+        # (§9 gating — never the fixed-matrix inference path)
+        _, vjp = jax.vjp(
+            lambda f, x, r, d: _pyramid_ref(meta, f, x, r, d),
+            field, xi0s, r_all, d0s)
+        return vjp(g)
+    # fixed matrices: the chain is linear in (field, ξ) — transpose only
+    _, vjp = jax.vjp(
+        lambda f, x: _pyramid_ref(meta, f, x, r_all, d0s), field, xi0s)
+    df, dxi = vjp(g)
+    return df, dxi, zeros_r, zeros_d
+
+
+_pyramid_core.defvjp(_core_fwd, _core_bwd, symbolic_zeros=True)
+
+
+# -- public wrapper -------------------------------------------------------------
+def refine_pyramid(field: Array, xis, mats, geoms, *,
+                   interpret: bool | None = None,
+                   sample_block: int | None = None,
+                   sample_axis: bool = False,
+                   accum_dtype: str = "float32") -> Array:
+    """Run the covered level prefix as ONE Pallas launch.
+
+    field: (*geoms[0].coarse_shape) (or (S, ...) with ``sample_axis``);
+    xis[l]: (prod(T_l), n_fsz^d) per covered level (sample dim leading when
+    ``sample_axis``); mats[l] = (rs_l, ds_l) per-axis factors (1-D charts:
+    single-entry lists). geoms must be consecutive:
+    ``geoms[l+1].coarse_shape == geoms[l].fine_shape``.
+    """
+    from .dispatch import autotune_pyramid  # lazy: avoid import cycle
+
+    g0 = geoms[0]
+    nd = len(g0.coarse_shape)
+    fsz, csz, b, boundary = g0.n_fsz, g0.n_csz, g0.b, g0.boundary
+    interpret = _interpret_default() if interpret is None else interpret
+    accum = jnp.dtype(accum_dtype)
+    for lo, hi in zip(geoms[:-1], geoms[1:]):
+        if tuple(hi.coarse_shape) != tuple(lo.fine_shape):
+            raise ValueError("pyramid levels must be consecutive")
+
+    if not sample_axis:
+        field = field[None]
+        xis = [x[None] for x in xis]
+    n_s = field.shape[0]
+    storage = field.dtype
+
+    s_b = sample_block
+    if s_b is None:
+        tuned = autotune_pyramid(
+            geoms, samples=n_s, itemsize=jnp.dtype(storage).itemsize)
+        s_b = tuned[1] if tuned is not None else 1
+    s_b = max(1, min(s_b, n_s))
+
+    xi0s, r_all, d0s, levels = [], [], [], []
+    for lvl, geom in enumerate(geoms):
+        rs, ds = mats[lvl]
+        T = tuple(geom.T)
+        xi0s.append(prepare_xi0(xis[lvl], ds, T, fsz, accum=accum,
+                                storage=storage))
+        r_all.append(tuple(jnp.asarray(r, storage) for r in rs))
+        d0s.append(jnp.asarray(ds[0], storage))
+        levels.append((T, tuple(geom.coarse_shape)))
+
+    nbs = -(-n_s // s_b)
+    pad_s = nbs * s_b - n_s
+    if pad_s > 0:
+        field = jnp.pad(field, [(0, pad_s)] + [(0, 0)] * nd)
+        xi0s = [jnp.pad(x, [(0, pad_s), (0, 0), (0, 0)]) for x in xi0s]
+
+    meta = (csz, fsz, boundary, b, tuple(levels), s_b, interpret,
+            accum_dtype)
+    out = _pyramid_core(meta, field.astype(storage), tuple(xi0s),
+                        tuple(r_all), tuple(d0s))
+    out = out[:n_s]
+    fine_shape = tuple(geoms[-1].fine_shape)
+    out = out.reshape((n_s,) + fine_shape)
+    return out if sample_axis else out[0]

@@ -17,6 +17,15 @@ import jax.numpy as jnp
 Array = jnp.ndarray
 
 
+def accum_dtype_for(*arrs) -> jnp.dtype:
+    """Accumulation dtype matching the kernels' policy default: sub-f32
+    storage (bf16/f16) accumulates in f32, wider dtypes in themselves —
+    so the oracles stay bit-faithful ground truth for every storage dtype
+    (DESIGN.md §11)."""
+    dt = jnp.result_type(*[a for a in arrs if a is not None])
+    return jnp.float32 if jnp.dtype(dt).itemsize < 4 else jnp.dtype(dt)
+
+
 def coarse_len(t: int, n_csz: int, n_fsz: int) -> int:
     s = n_fsz // 2
     return t * s + (n_csz - s)
@@ -43,11 +52,13 @@ def refine_stationary_ref(coarse: Array, xi: Array, r: Array,
     s = n_fsz // 2
     t = (xi.shape[-2] if xi is not None
          else (coarse.shape[-1] - (n_csz - s)) // s)
+    acc = accum_dtype_for(coarse, xi, r)
     w = windows_1d(coarse, t, n_csz, s)  # (..., T, n_csz)
-    fine = jnp.einsum("...tc,fc->...tf", w, r)
+    fine = jnp.einsum("...tc,fc->...tf", w, r, preferred_element_type=acc)
     if xi is not None:
-        fine = fine + jnp.einsum("...tj,fj->...tf", xi, sqrt_d)
-    return fine.reshape(*fine.shape[:-2], t * n_fsz)
+        fine = fine + jnp.einsum("...tj,fj->...tf", xi, sqrt_d,
+                                 preferred_element_type=acc)
+    return fine.reshape(*fine.shape[:-2], t * n_fsz).astype(coarse.dtype)
 
 
 def refine_axes_ref(field: Array, xi: Array, rs, ds, *, T, n_fsz: int,
@@ -74,13 +85,16 @@ def refine_axes_ref(field: Array, xi: Array, rs, ds, *, T, n_fsz: int,
     fsz = n_fsz
 
     # pre-contract the noise factors of axes 1..d-1 into xi
+    acc = accum_dtype_for(field, xi)
     xi_nd = xi.reshape(T + (fsz,) * nd)
     for a in range(1, nd):
         x2 = jnp.moveaxis(xi_nd, (a, nd + a), (-2, -1))  # (..., T_a, f_a)
         if ds[a].ndim == 2:
-            x2 = jnp.einsum("...tj,fj->...tf", x2, ds[a])
+            x2 = jnp.einsum("...tj,fj->...tf", x2, ds[a],
+                            preferred_element_type=acc)
         else:
-            x2 = jnp.einsum("...tj,tfj->...tf", x2, ds[a])
+            x2 = jnp.einsum("...tj,tfj->...tf", x2, ds[a],
+                            preferred_element_type=acc)
         xi_nd = jnp.moveaxis(x2, (-2, -1), (a, nd + a))
     # interleave (T_a, f_a) for a>=1 into the fine batch layout of the
     # final pass: (N^f_1, ..., N^f_{d-1}, T_0, f_0)
@@ -88,7 +102,7 @@ def refine_axes_ref(field: Array, xi: Array, rs, ds, *, T, n_fsz: int,
     for a in range(1, nd):
         perm += [a, nd + a]
     perm += [0, nd]
-    xi0 = xi_nd.transpose(perm).reshape(-1, T[0], fsz)
+    xi0 = xi_nd.transpose(perm).reshape(-1, T[0], fsz).astype(field.dtype)
 
     out = field
     for a in range(nd - 1, -1, -1):
@@ -120,11 +134,13 @@ def refine_charted_ref(coarse: Array, xi: Array, r: Array,
     """
     t, n_fsz, n_csz = r.shape
     s = n_fsz // 2
+    acc = accum_dtype_for(coarse, xi, r)
     w = windows_1d(coarse, t, n_csz, s)  # (..., T, n_csz)
-    fine = jnp.einsum("...tc,tfc->...tf", w, r)
+    fine = jnp.einsum("...tc,tfc->...tf", w, r, preferred_element_type=acc)
     if xi is not None:
-        fine = fine + jnp.einsum("...tj,tfj->...tf", xi, sqrt_d)
-    return fine.reshape(*fine.shape[:-2], t * n_fsz)
+        fine = fine + jnp.einsum("...tj,tfj->...tf", xi, sqrt_d,
+                                 preferred_element_type=acc)
+    return fine.reshape(*fine.shape[:-2], t * n_fsz).astype(coarse.dtype)
 
 
 # -- adjoints (ground truth for the custom-VJP Pallas kernels) ------------------

@@ -65,6 +65,21 @@ def main() -> int:
             kernel=matern32.with_defaults(rho=0.5)),
         mesh1d, ("space",), 1,
     ))
+    # interior compute through dispatch.refine (fused 1-D kernels inside
+    # shard_map) == the unsharded fused path — ISSUE 4 satellite
+    cases.append((
+        "1d_regular_pallas",
+        ICR(chart=regular_chart(32, 4, boundary="reflect"),
+            kernel=matern32.with_defaults(rho=16.0), use_pallas=True),
+        mesh1d, ("space",), 0,
+    ))
+    cases.append((
+        "1d_log_charted_pallas",
+        ICR(chart=log_chart(32, 4, n_csz=5, n_fsz=4, delta0=0.01,
+                            boundary="reflect"),
+            kernel=matern32.with_defaults(rho=1.0), use_pallas=True),
+        mesh1d, ("space",), 0,
+    ))
 
     ok = True
     for name, icr, mesh, axes, shard_axis in cases:

@@ -12,6 +12,13 @@ kernels actually move data:
       halo re-read (q_max/b_f of the coarse tile) is below the model's
       resolution and ignored.
 
+  ``pyramid``
+      the VMEM-resident multi-level launch (DESIGN.md §11): a covered
+      level reads its ξ and matrices only; the coarse field is read from
+      HBM by the FIRST covered level alone (``first=True``) and the fine
+      field written by the LAST alone (``last=True``) — inter-level field
+      traffic inside the covered prefix is zero by construction.
+
   ``nd-axes``
       one launch per axis: each pass reads its input field and writes its
       output at mixed resolution, ξ is read by the final (axis-0) pass only
@@ -28,6 +35,14 @@ Matrix bytes are counted once per level (they are fetched per grid step on
 chip but stay VMEM-resident across the sample slab — the batched-serving
 amortization); with ``samples > 1`` every field/ξ term scales with the
 sample count while the matrix term does not.
+
+Byte accounting is **dtype-aware** (DESIGN.md §11): pass ``dtype`` (the
+policy's storage dtype) and every term scales with its itemsize — the
+``"dtype"`` key in the returned breakdown is the dtype column the
+benchmark JSON and ``plan()`` carry. ``itemsize`` remains accepted for
+callers that sized things by hand (the dtype column then reports the raw
+byte width); passing both with conflicting widths is an error, so a row
+can never carry a dtype label that disagrees with its numbers.
 """
 from __future__ import annotations
 
@@ -68,19 +83,45 @@ def _joint_mat_bytes(geom, itemsize: int) -> int:
     return itemsize * _prod(geom.kept_T) * (f * c + f * f)
 
 
-def refine_level_traffic(geom, route: str, *, itemsize: int = 4,
-                         samples: int = 1) -> dict:
+def refine_level_traffic(geom, route: str, *, itemsize: int | None = None,
+                         dtype=None, samples: int = 1,
+                         first: bool = True, last: bool = True) -> dict:
     """Estimated HBM bytes moved by one refinement level on ``route``.
 
-    Returns a breakdown dict with a ``"total"`` key. Field/ξ terms scale
-    with ``samples``; matrices are counted once (see module docstring).
+    Returns a breakdown dict with a ``"total"`` key and a ``"dtype"``
+    column. Field/ξ terms scale with ``samples``; matrices are counted once
+    (see module docstring). ``dtype`` sets the storage itemsize (default
+    float32); ``first``/``last`` only affect the ``"pyramid"`` route — a
+    covered level's position in the VMEM-resident prefix.
     """
+    if dtype is not None:
+        dtype = np.dtype(dtype)
+        if itemsize is not None and itemsize != dtype.itemsize:
+            raise ValueError(
+                f"conflicting byte width: itemsize={itemsize} vs "
+                f"dtype={dtype.name} ({dtype.itemsize} bytes)"
+            )
+        itemsize, dtype_name = dtype.itemsize, dtype.name
+    elif itemsize is not None:
+        dtype_name = f"{itemsize}-byte"  # hand-sized caller: honest label
+    else:
+        itemsize, dtype_name = 4, "float32"
     nd = len(geom.coarse_shape)
     fsz = geom.n_fsz
     n_out = _prod(geom.fine_shape)
     xi_elems = _prod(geom.T) * fsz**nd
 
-    if route in ("stationary-1d", "charted-1d", "nd-fused"):
+    if route == "pyramid":
+        field_read = (_prod(_padded_extent(geom, a) for a in range(nd))
+                      if first else 0)
+        out = {
+            "field_read": samples * itemsize * field_read,
+            "xi_read": samples * itemsize * xi_elems,
+            "fine_write": samples * itemsize * (n_out if last else 0),
+            "matrices": _axis_mat_bytes(geom, itemsize),
+            "relayout": 0,
+        }
+    elif route in ("stationary-1d", "charted-1d", "nd-fused"):
         field_read = _prod(_padded_extent(geom, a) for a in range(nd))
         out = {
             "field_read": samples * itemsize * field_read,
@@ -130,4 +171,5 @@ def refine_level_traffic(geom, route: str, *, itemsize: int = 4,
         raise ValueError(f"unknown route {route!r}")
 
     out["total"] = sum(out.values())
+    out["dtype"] = dtype_name
     return out

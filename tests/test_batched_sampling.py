@@ -44,7 +44,8 @@ def test_native_batch_matches_loop(name, chartf, rho):
     """apply_sqrt_batch (sample slab inside the kernel tiles) == loop."""
     icr, mats, xi, loop = _setup(chartf, rho)
     if name.startswith("nd-fused"):
-        routes = {e["route"] for e in dispatch.plan(icr.chart)}
+        routes = {e["route"] for e in dispatch.plan(icr.chart,
+                                                    pyramid=False)}
         assert routes == {dispatch.ROUTE_ND_FUSED}, routes
     got = icr.apply_sqrt_batch(mats, xi)
     assert got.shape == (S,) + icr.out_shape

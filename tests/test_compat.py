@@ -34,7 +34,10 @@ PUBLIC_MODULES = [
     "repro.kernels.dispatch",
     "repro.kernels.icr_refine",
     "repro.kernels.nd",
+    "repro.kernels.nd_fused",
     "repro.kernels.ops",
+    "repro.kernels.policy",
+    "repro.kernels.pyramid",
     "repro.kernels.ref",
     "repro.launch.mesh",
     "repro.launch.serve",

@@ -51,6 +51,57 @@ def test_single_device_mesh_roundtrip(key):
                                rtol=1e-6, atol=1e-6)
 
 
+def test_single_device_mesh_pallas_interior(key):
+    """ISSUE 4 satellite: the sharded body's interior compute goes through
+    dispatch.refine when the wrapped ICR has use_pallas=True — same values
+    as the jnp reference interior on the same ring."""
+    kern = matern32.with_defaults(rho=10.0)
+    chart = regular_chart(32, 3, boundary="reflect")
+    mesh = make_mesh((1,), ("space",))
+    outs = {}
+    for pallas in (False, True):
+        icr = ICR(chart=chart, kernel=kern, use_pallas=pallas)
+        dist = DistributedICR(icr=icr, mesh=mesh, axis_names=("space",))
+        with use_mesh(mesh):
+            xi = dist.init_xi(key)
+            mats = dist.matrices()
+            outs[pallas] = np.asarray(dist.apply_sqrt(mats, xi))
+    np.testing.assert_allclose(outs[True], outs[False], rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_single_device_mesh_bf16_policy(key):
+    """The dtype policy threads through the distributed interior: bf16
+    sharded output matches the fp32 sharded reference at the dtype-scaled
+    bar — on the fused 1-D route AND the N-D joint-reference route (which
+    must upcast to the accum dtype, not run bf16 math)."""
+    from repro.core.charts import galactic_dust_chart
+
+    mesh = make_mesh((1,), ("space",))
+    cases = [
+        (regular_chart(32, 3, boundary="reflect"), 10.0, 0),
+        (galactic_dust_chart((6, 8, 8), n_levels=2), 0.5, 1),
+    ]
+    for chart, rho, shard_axis in cases:
+        kern = matern32.with_defaults(rho=rho)
+        d32 = DistributedICR(icr=ICR(chart=chart, kernel=kern,
+                                     use_pallas=True),
+                             mesh=mesh, shard_axis=shard_axis)
+        d16 = DistributedICR(icr=ICR(chart=chart, kernel=kern,
+                                     use_pallas=True, dtype_policy="bf16"),
+                             mesh=mesh, shard_axis=shard_axis)
+        with use_mesh(mesh):
+            xi = d32.init_xi(key)
+            out32 = np.asarray(d32.apply_sqrt(d32.matrices(), xi))
+            xi16 = [x.astype(jnp.bfloat16) for x in xi]
+            out16 = d16.apply_sqrt(d16.matrices(), xi16)
+        assert out16.dtype == jnp.bfloat16
+        scale = max(float(np.abs(out32).max()), 1e-30)
+        rel = float(np.abs(np.asarray(out16, np.float32)
+                           - out32).max()) / scale
+        assert rel <= 5e-2, (chart.ndim, rel)
+
+
 def test_requires_reflect_boundary():
     icr = ICR(chart=regular_chart(32, 2, boundary="shrink"),
               kernel=matern32)

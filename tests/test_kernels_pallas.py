@@ -323,10 +323,14 @@ class TestDispatch:
 
     def test_plan_dust_chart(self):
         c = galactic_dust_chart((6, 8, 8), n_levels=2)
-        plan = dispatch.plan(c, platform="cpu")
+        # default plan: both tiny levels ride the VMEM-resident pyramid
+        assert [e["route"] for e in dispatch.plan(c, platform="cpu")] \
+            == [dispatch.ROUTE_PYRAMID] * 2
+        # per-level view (pyramid off): the §10 megakernel everywhere
+        plan = dispatch.plan(c, platform="cpu", pyramid=False)
         assert [e["route"] for e in plan] == [dispatch.ROUTE_ND_FUSED] * 2
         assert all(e["backend"] == dispatch.BACKEND_INTERPRET for e in plan)
-        plan_tpu = dispatch.plan(c, platform="tpu")
+        plan_tpu = dispatch.plan(c, platform="tpu", pyramid=False)
         assert all(e["backend"] == dispatch.BACKEND_PALLAS for e in plan_tpu)
 
 
@@ -569,7 +573,7 @@ class TestApplySqrtT:
 
     def test_plan_reports_fused_vjp(self):
         c = galactic_dust_chart((6, 8, 8), n_levels=2)
-        for entry in dispatch.plan(c, platform="cpu"):
+        for entry in dispatch.plan(c, platform="cpu", pyramid=False):
             assert entry["vjp"]["route"] == dispatch.ROUTE_ND_FUSED + "-adjoint"
             assert entry["vjp"]["backend"] == dispatch.BACKEND_INTERPRET
             assert entry["vjp"]["block_families"] == entry["block_families"]

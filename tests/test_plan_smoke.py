@@ -1,9 +1,13 @@
-"""Plan-introspection smoke checks (ISSUE 3 satellite; run as its own CI
-step): the flagship dust-map chart must route every level through the fused
-megakernel — forward AND backward — and the ``dispatch.plan`` byte
-estimates must agree with the roofline traffic model within 10%.
+"""Plan-introspection smoke checks (ISSUE 4 satellite; run as its own CI
+step, fp32 and bf16 separately): the flagship dust-map chart must be fully
+covered by the VMEM-resident pyramid route (zero inter-level field
+traffic), must still route every level through the megakernel when the
+pyramid is disabled, and the ``dispatch.plan`` byte estimates must agree
+with the roofline traffic model at BOTH storage dtypes — with bf16
+reporting >= 1.9x fewer bytes per level than fp32 (ISSUE 4 acceptance).
 """
 import numpy as np
+import pytest
 
 from repro.core.charts import galactic_dust_chart
 from repro.core.refine import LevelGeom
@@ -12,43 +16,118 @@ from repro.roofline import refine_level_traffic
 
 # the examples/dust_map_3d.py chart
 CHART = galactic_dust_chart((8, 16, 16), n_levels=3)
+DTYPES = ["float32", "bfloat16"]
 
 
-def test_dust_map_levels_route_nd_fused():
-    """Every level: nd-fused forward, nd-fused-adjoint backward. If a level
-    legitimately falls off the fused path (VMEM fallback rule), it must land
-    on nd-axes — never the jnp reference."""
-    for e in dispatch.plan(CHART, platform="cpu"):
-        assert e["route"] in (dispatch.ROUTE_ND_FUSED,
-                              dispatch.ROUTE_AXES_ND), e
-        assert e["route"] == dispatch.ROUTE_ND_FUSED, (
-            "dust-map level fell back off the megakernel", e)
+def _plan(dtype, **kw):
+    return dispatch.plan(CHART, platform="cpu", dtype=dtype, **kw)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dust_map_pyramid_covers_every_level(dtype):
+    """All three levels fit VMEM together (14.8 MiB at bf16, 33.8 at fp32):
+    the whole chart is ONE pyramid launch, at either storage dtype."""
+    entries = _plan(dtype)
+    assert [e["route"] for e in entries] \
+        == [dispatch.ROUTE_PYRAMID] * CHART.n_levels
+    assert all(e["dtype"] == dtype for e in entries)
+    assert all(e["vjp"]["route"] == dispatch.ROUTE_PYRAMID + "-ref"
+               for e in entries)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pyramid_off_falls_back_to_megakernel(dtype):
+    """With the pyramid disabled every level still runs the single-launch
+    megakernel — forward AND backward, never the jnp reference."""
+    for e in _plan(dtype, pyramid=False):
+        assert e["route"] == dispatch.ROUTE_ND_FUSED, e
         assert e["vjp"]["route"] == dispatch.ROUTE_ND_FUSED + "-adjoint", e
         assert e["vjp"]["backend"] != dispatch.BACKEND_REFERENCE
 
 
-def test_plan_bytes_match_roofline_within_10pct():
-    """plan() must report the roofline model's numbers (and the model must
-    be dominated by the minimal-traffic terms: read L + read ξ + write N)."""
-    for e in dispatch.plan(CHART, platform="cpu"):
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pyramid_zero_interlevel_field_traffic(dtype):
+    """ISSUE 4 acceptance: covered levels move no field bytes through HBM
+    except the first's coarse read and the last's fine write."""
+    entries = _plan(dtype)
+    k = len(entries)
+    for e in entries:
+        geom = LevelGeom.for_level(CHART, e["level"])
+        br = refine_level_traffic(geom, "pyramid", dtype=dtype,
+                                  first=e["level"] == 0,
+                                  last=e["level"] == k - 1)
+        assert e["hbm_bytes"]["pyramid"] == br["total"]
+        assert e["hbm_bytes"]["selected"] == br["total"]
+        if e["level"] > 0:
+            assert br["field_read"] == 0, e
+        if e["level"] < k - 1:
+            assert br["fine_write"] == 0, e
+        assert br["xi_read"] > 0 and br["dtype"] == dtype
+
+
+def test_bf16_at_least_1p9x_fewer_bytes_per_level():
+    """ISSUE 4 acceptance: >= 1.9x fewer modeled HBM bytes per large level
+    in bf16 vs fp32 — on the selected route and on every candidate."""
+    for pyramid in (True, False):
+        p32 = _plan("float32", pyramid=pyramid)
+        p16 = _plan("bfloat16", pyramid=pyramid)
+        for e32, e16 in zip(p32, p16):
+            assert set(e32["hbm_bytes"]) == set(e16["hbm_bytes"])
+            for route, b32 in e32["hbm_bytes"].items():
+                assert b32 >= 1.9 * e16["hbm_bytes"][route], (route, e32)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_plan_bytes_match_roofline_within_10pct(dtype):
+    """plan() must report the roofline model's numbers at each dtype (and
+    the model must be dominated by the minimal-traffic terms)."""
+    itemsize = np.dtype(dtype).itemsize
+    for e in _plan(dtype, pyramid=False):
         geom = LevelGeom.for_level(CHART, e["level"])
         for route in (dispatch.ROUTE_ND_FUSED, dispatch.ROUTE_AXES_ND,
                       dispatch.ROUTE_REFERENCE):
-            model = refine_level_traffic(geom, route)["total"]
+            model = refine_level_traffic(geom, route, dtype=dtype)["total"]
             got = e["hbm_bytes"][route]
             assert abs(got - model) <= 0.10 * model, (route, got, model)
         # sanity: the fused estimate is within 10% of the irreducible
         # field + ξ + output traffic (matrices are a rounding error here)
         n_out = int(np.prod(geom.fine_shape))
-        minimal = 4 * (int(np.prod(geom.coarse_shape)) + 2 * n_out)
+        minimal = itemsize * (int(np.prod(geom.coarse_shape)) + 2 * n_out)
         fused = e["hbm_bytes"][dispatch.ROUTE_ND_FUSED]
         assert fused <= 1.35 * minimal, (fused, minimal)
 
 
-def test_plan_quantifies_fused_win():
-    """The per-level traffic reduction that motivates the megakernel
-    (>= 2x on every 3-D level) is visible straight from plan()."""
-    for e in dispatch.plan(CHART, platform="cpu"):
+def test_plan_quantifies_fused_and_pyramid_wins():
+    """The traffic reductions that motivate the megakernel (>= 2x vs
+    per-axis on every 3-D level) and the pyramid (interior levels drop the
+    whole field term) are visible straight from plan()."""
+    per_level = _plan("float32", pyramid=False)
+    covered = _plan("float32")
+    for e in per_level:
         hb = e["hbm_bytes"]
         assert hb[dispatch.ROUTE_ND_FUSED] * 2 <= hb[dispatch.ROUTE_AXES_ND]
-        assert hb[dispatch.ROUTE_ND_FUSED] * 2 <= hb[dispatch.ROUTE_REFERENCE]
+        assert hb[dispatch.ROUTE_ND_FUSED] * 2 \
+            <= hb[dispatch.ROUTE_REFERENCE]
+    # interior pyramid levels: no field read, no fine write — only ξ + mats
+    for e_pl, e_py in zip(per_level[1:-1], covered[1:-1]):
+        assert e_py["hbm_bytes"]["selected"] * 2 \
+            <= e_pl["hbm_bytes"]["selected"]
+
+
+def test_pyramid_budget_fallback():
+    """A budget too small for two levels disables the overlay — plan then
+    shows the per-level megakernel routing (the §11 fallback rule)."""
+    assert dispatch.pyramid_cover(CHART, vmem_budget=1024) is None
+    entries = dispatch.plan(CHART, platform="cpu", vmem_budget=1024)
+    assert [e["route"] for e in entries] \
+        == [dispatch.ROUTE_ND_FUSED] * CHART.n_levels
+
+
+def test_pyramid_partial_coverage_on_deeper_chart():
+    """One more level (234 MiB working set at fp32) busts the budget: the
+    prefix stays covered, the big tail level runs the megakernel."""
+    deep = galactic_dust_chart((8, 16, 16), n_levels=4)
+    cover = dispatch.pyramid_cover(deep, itemsize=4)
+    assert cover is not None and cover[0] == 3
+    routes = [e["route"] for e in dispatch.plan(deep, platform="cpu")]
+    assert routes == [dispatch.ROUTE_PYRAMID] * 3 + [dispatch.ROUTE_ND_FUSED]
