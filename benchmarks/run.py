@@ -8,6 +8,9 @@
               vs a per-sample loop (DESIGN.md §10)
   dtype     — mixed-precision policy (DESIGN.md §11): fp32 vs bf16 storage
               x pyramid on/off — walltime, modeled bytes, bandwidth util
+  serving   — GP posterior serving (DESIGN.md §12): the three chart
+              scenarios x fp32/bf16 through launch.serve_gp's slab-packed
+              server — warm samples/s + fields/s, modeled bytes, bw util
   scaling   — paper Eq. 13 (O(N) check, log-log slope)
   vi        — §3.2 end-to-end: standardized GP regression (MAP)
   grad      — one value_and_grad step of the §3.2 loss: fused adjoint
@@ -131,7 +134,7 @@ def _write_json(path: str, *, quick: bool) -> None:
 
     doc = {
         "meta": {
-            "pr": "PR4",
+            "pr": "PR5",
             "backend": jax.default_backend(),
             "python": platform.python_version(),
             "jax": jax.__version__,
@@ -149,7 +152,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write machine-readable rows (BENCH_PR4.json)")
+                    help="also write machine-readable rows (BENCH_PR5.json)")
     args = ap.parse_args()
 
     from . import accuracy, speed
@@ -163,6 +166,7 @@ def main() -> None:
                        accuracy.run_nd_cov(_report)),
         "batch": lambda: speed.run_batch(_report, quick=args.quick),
         "dtype": lambda: speed.run_dtype(_report, quick=args.quick),
+        "serving": lambda: speed.run_serving(_report, quick=args.quick),
         "scaling": lambda: speed.run_scaling(
             _report, sizes=(1024, 4096, 16384) if args.quick
             else (1024, 4096, 16384, 65536, 262144)),

@@ -193,6 +193,62 @@ def run_batch(report, *, quick: bool = False):
                f"loop/native wall-time ratio ({backend})")
 
 
+def run_serving(report, *, quick: bool = False):
+    """GP posterior serving table (DESIGN.md §12; BENCH_PR5.json): the
+    three chart scenarios (1-D TOD, 2-D image, 3-D dust) x fp32/bf16
+    storage, each serving a mixed sample+moments request batch through
+    `launch.serve_gp.GPFieldServer`. Rows report warm-path samples/s and
+    fields/s (the cold row carries compile+build and is reported once as
+    the warm/cold ratio), the modeled HBM bytes of one warm request batch
+    from the cached plan, and the would-be bandwidth utilization at the
+    TPU roofline
+    (off-TPU wall time measures the jnp oracle path — the bytes column is
+    the trajectory metric).
+    """
+    from repro.kernels.dispatch import select_backend
+    from repro.launch.serve_gp import (
+        SCENARIOS, GPFieldServer, demo_posterior, mixed_requests,
+        scenario_chart,
+    )
+
+    backend = select_backend()
+    slab = 4 if quick else 8
+    n_fields, mc = (2, 4) if quick else (3, 16)
+    for name, rho in SCENARIOS.items():
+        chart = scenario_chart(name, quick=quick)
+        for dt_name, pol in (("float32", None), ("bfloat16", "bf16")):
+            post = demo_posterior(chart, rho, dtype_policy=pol)
+            srv = GPFieldServer(post, slab=slab)
+            t0 = time.perf_counter()
+            srv.run(mixed_requests(n_fields, mc))
+            cold = time.perf_counter() - t0
+
+            rows0, fields0 = srv.rows_served, srv.fields_delivered
+            slabs0 = srv.slabs_run
+            reps = 2 if quick else 3
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                reqs = srv.run(mixed_requests(n_fields, mc))
+            warm = (time.perf_counter() - t0) / reps
+            assert all(r.done and r.error is None for r in reqs)
+            assert srv.cache_misses == 1  # warm traffic never rebuilt
+
+            rows = (srv.rows_served - rows0) / reps
+            fields = (srv.fields_delivered - fields0) / reps
+            # modeled bytes of ONE warm batch (slab estimate x slabs the
+            # batch actually ran) — the same unit `warm` measures
+            slabs_per_batch = (srv.slabs_run - slabs0) // reps
+            hbm = srv.modeled_slab_bytes() * slabs_per_batch
+            route = srv.route
+            report(f"serving/{name}/{dt_name}/samples_per_s", rows / warm,
+                   f"slab={slab} {rows:.0f} rows/batch "
+                   f"{fields / warm:.1f} fields/s",
+                   route=route, backend=backend, dtype=dt_name,
+                   hbm_bytes=hbm, bw_util=_bw_util(hbm, warm))
+            report(f"serving/{name}/{dt_name}/warm_cold_ratio", cold / warm,
+                   "first-batch (compile+build) over warm-batch wall time")
+
+
 def run_scaling(report, sizes=(1024, 4096, 16384, 65536, 262144)):
     """O(N) scaling check (paper Eq. 13): time per point should flatten."""
     from repro.core import ICR, matern32, regular_chart

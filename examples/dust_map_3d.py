@@ -4,8 +4,10 @@ GP on a (log-r, u, v) chart (paper §6, ref [24] — the 122-billion-DOF run).
 Radial axis charted (per-pixel refinement matrices), angular axes
 translation-invariant (matrices broadcast — the §4.3 symmetry trick). With
 ``use_pallas=True`` every refinement level runs through the fused N-D
-kernel path (DESIGN.md §4–5): per-axis passes through the 1-D Pallas
-kernels, Pallas on TPU, interpret mode elsewhere — never the jnp reference.
+kernel path (DESIGN.md §4–5): Pallas on TPU; off-TPU the production
+backend executes the jnp oracle of the same fused structure
+(``REPRO_BACKEND=interpret`` emulates the exact kernel tiling instead) —
+the *routing* never falls back to the unstructured joint reference.
 The same DistributedICR used here runs the 512-chip dry-run cell
 ``icr-dust122b`` (launch/dryrun.py).
 

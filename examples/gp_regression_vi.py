@@ -23,6 +23,7 @@ from repro.core import (
     ICR,
     StandardizedModel,
     advi_fit,
+    advi_posterior,
     gaussian_log_likelihood,
     lognormal_prior,
     map_fit,
@@ -31,6 +32,7 @@ from repro.core import (
 )
 from repro.data import charted_gp_dataset
 from repro.kernels import dispatch
+from repro.launch.serve_gp import GPFieldServer, GPRequest
 
 
 def main():
@@ -89,6 +91,25 @@ def main():
     post_std = float(jnp.mean(jnp.exp(logstd[-1])))
     print(f"ADVI: ELBO {float(elbos[0]):.1f} -> {float(elbos[-1]):.1f}, "
           f"mean finest-level posterior std={post_std:.3f} (prior: 1.0)")
+
+    # export the fit as a self-contained Posterior and serve it: posterior
+    # field draws and MC predictive moments through the slab-packed GP
+    # server (DESIGN.md §12) — the ADVI products no longer die here
+    post = advi_posterior(icr, (mean, logstd),
+                          theta={"rho": rho_hat, "sigma": 1.0})
+    srv = GPFieldServer(post, slab=4)
+    reqs = [GPRequest(kind="sample", n=2, seed=1),
+            GPRequest(kind="moments", n=8, seed=2)]
+    t0 = time.time()
+    srv.run(reqs)
+    dt = time.time() - t0
+    assert all(r.done and r.error is None for r in reqs)
+    mom = reqs[1]
+    print(f"serve: {srv.rows_served} posterior draws in {srv.slabs_run} "
+          f"slabs ({dt*1e3:.0f} ms, cache "
+          f"{srv.cache_hits} hits/{srv.cache_misses} miss); "
+          f"{len(reqs[0].fields)} fields + moments({mom.n}): "
+          f"mean predictive std={float(np.mean(mom.std)):.3f}")
 
 
 if __name__ == "__main__":

@@ -35,9 +35,12 @@ from .standardize import (
     uniform_prior,
 )
 from .vi import (
+    Posterior,
     advi_fit,
+    advi_posterior,
     gaussian_log_likelihood,
     map_fit,
+    map_posterior,
     neg_log_joint,
     poisson_log_likelihood,
 )
@@ -57,4 +60,5 @@ __all__ = [
     "uniform_prior",
     "map_fit", "advi_fit", "neg_log_joint", "gaussian_log_likelihood",
     "poisson_log_likelihood",
+    "Posterior", "map_posterior", "advi_posterior",
 ]

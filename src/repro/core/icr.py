@@ -151,6 +151,50 @@ class ICR:
             out = pol.cast_storage(out)
         return out
 
+    def _theta_key(self, theta: Mapping | None):
+        """Hashable fingerprint of θ (None for traced values — uncacheable)."""
+        if theta is None:
+            return ()
+        items = []
+        for name in sorted(theta):
+            v = theta[name]
+            if isinstance(v, jax.core.Tracer):
+                return None
+            a = np.asarray(v)
+            items.append((name, a.dtype.str, a.shape, a.tobytes()))
+        return tuple(items)
+
+    def matrices_cached(self, theta: Mapping[str, Array] | None = None, *,
+                        joint: bool | None = None,
+                        axes: bool | None = None) -> dict:
+        """``matrices()`` behind a per-instance cache keyed on θ
+        (DESIGN.md §12). The instance already pins the chart geometry and
+        the dtype policy, so the full serving cache key
+        (chart geometry, θ, dtype policy) is (instance, θ): repeat traffic
+        against a fitted posterior rebuilds nothing, a θ change is a miss.
+        Traced θ (learning θ inside a jitted step) bypasses the cache —
+        the matrices are rebuilt inside the trace exactly as before."""
+        tkey = self._theta_key(theta)
+        if tkey is None:
+            return self.matrices(theta, joint=joint, axes=axes)
+        key = (tkey, joint, axes)
+        cache = self.__dict__.get("_mats_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_mats_cache", cache)
+            object.__setattr__(self, "matrices_cache_stats",
+                               {"hits": 0, "misses": 0})
+        hit = cache.pop(key, None)  # re-insert below: LRU order
+        if hit is not None:
+            self.matrices_cache_stats["hits"] += 1
+            cache[key] = hit
+            return hit
+        self.matrices_cache_stats["misses"] += 1
+        out = cache[key] = self.matrices(theta, joint=joint, axes=axes)
+        while len(cache) > 8:  # bound: don't pin every historical θ's mats
+            cache.pop(next(iter(cache)))
+        return out
+
     # -- forward --------------------------------------------------------------
     def _level_axis_mats(self, mats: dict, lvl: int):
         """Per-axis factor convention for level `lvl`: the Kronecker factors

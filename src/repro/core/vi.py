@@ -113,6 +113,77 @@ def advi_fit(key, log_likelihood, forward, xi0: PyTree, y,
     return params, elbos
 
 
+# -- posterior export (the serving handoff, DESIGN.md §12) ---------------------
+@dataclasses.dataclass(frozen=True)
+class Posterior:
+    """Self-contained GP posterior product — what a fit hands the server.
+
+    ``q(ξ)`` is mean-field Gaussian over the excitations: ``mean`` is a
+    ξ-shaped list (one array per refinement level); ``log_std`` is ξ-shaped
+    too, or None for a MAP fit's delta posterior (every draw IS ξ̂ and the
+    predictive std is exactly zero). ``theta`` holds the fitted kernel
+    parameters. The ICR instance pins the chart geometry and the dtype
+    policy, so ``(icr, theta)`` is the complete serving cache key
+    (``ICR.matrices_cached`` / ``launch.serve_gp``): repeat traffic against
+    the same posterior never rebuilds matrices or recompiles.
+
+    A posterior *field* draw is ``sqrt(K_ICR)(mean + exp(log_std)·ε)`` —
+    one application of the square root per sample (paper §1), which is why
+    many-sample serving rides ``ICR.apply_sqrt_batch`` (the §10 sample-slab
+    path) rather than a per-sample loop.
+    """
+
+    icr: Any
+    mean: PyTree
+    log_std: PyTree = None
+    theta: Any = None
+
+    def matrices(self) -> dict:
+        """The (cached) refinement matrices at the fitted θ."""
+        return self.icr.matrices_cached(self.theta)
+
+    def std(self):
+        """Per-level excitation std (zeros for a MAP delta posterior)."""
+        if self.log_std is None:
+            return [jnp.zeros_like(m) for m in self.mean]
+        return [jnp.exp(ls) for ls in self.log_std]
+
+    def sample_xi(self, key, n: int):
+        """n ξ draws from q, sample dim leading (the apply_sqrt_batch
+        layout)."""
+        if self.log_std is None:
+            return [jnp.broadcast_to(m, (n,) + m.shape) for m in self.mean]
+        keys = jax.random.split(key, len(self.mean))
+        return [
+            m[None] + jnp.exp(ls)[None]
+            * jax.random.normal(k, (n,) + m.shape, m.dtype)
+            for m, ls, k in zip(self.mean, self.log_std, keys)
+        ]
+
+    def sample_fields(self, key, n: int):
+        """n posterior field draws, (n, *final_shape) — the convenience
+        path for small n; serving traffic goes through launch.serve_gp's
+        slab packing instead."""
+        return self.icr.apply_sqrt_batch(self.matrices(), self.sample_xi(key, n))
+
+    def moments(self, key, n: int):
+        """MC predictive mean/std over n draws (one batched application)."""
+        f = self.sample_fields(key, n)
+        return jnp.mean(f, axis=0), jnp.std(f, axis=0)
+
+
+def map_posterior(icr, xi_hat: PyTree, theta=None) -> Posterior:
+    """Export a MAP fit (``map_fit``'s ξ̂) as a delta Posterior."""
+    return Posterior(icr=icr, mean=list(xi_hat), theta=theta)
+
+
+def advi_posterior(icr, params, theta=None) -> Posterior:
+    """Export an ADVI fit (``advi_fit``'s ``(mean, log_std)``)."""
+    mean, log_std = params
+    return Posterior(icr=icr, mean=list(mean), log_std=list(log_std),
+                     theta=theta)
+
+
 def gaussian_log_likelihood(noise_std: float, obs_idx=None):
     """Factory: Gaussian likelihood on (a subset of) the field."""
 

@@ -5,10 +5,15 @@ One refinement application (paper Eq. 9) can execute three ways:
   * ``"pallas"``    — the fused TPU kernels (icr_refine.py, nd_fused.py);
                       chosen on TPU.
   * ``"interpret"`` — the same kernels in Pallas interpret mode (the body
-                      runs as pure jnp); chosen off-TPU so CPU/GPU runs
-                      exercise the exact BlockSpec tiling bit-for-bit.
-  * ``"reference"`` — ``core.refine.refine_level`` (joint jnp einsum path);
-                      the fallback for anything the kernels don't cover.
+                      runs as pure jnp); the CI/test harness off-TPU, so
+                      CPU/GPU runs exercise the exact BlockSpec tiling
+                      bit-for-bit (``REPRO_BACKEND=interpret``).
+  * ``"reference"`` — the jnp oracle path: ``core.refine.refine_level``
+                      for joint matrices, ``kernels.ref.refine_axes_ref``
+                      for structured N-D levels carrying only the per-axis
+                      factors; chosen off-TPU in production (interpret mode
+                      is slower than plain jnp on CPU) and the fallback for
+                      anything the kernels don't cover.
 
 Routing is decided per level from the geometry alone:
 
@@ -45,6 +50,8 @@ to the forward, plus the per-level HBM-byte estimates of
 ``repro.roofline.level_traffic`` for every candidate route.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -291,9 +298,33 @@ def pyramid_cover(chart, *, have_axis_mats: bool | None = None,
 
 
 def select_backend(*, platform: str | None = None) -> str:
-    """Kernel backend for `platform` (default: the runtime jax backend)."""
-    platform = platform or jax.default_backend()
-    return BACKEND_PALLAS if platform == "tpu" else BACKEND_INTERPRET
+    """Kernel backend for `platform` (default: the runtime jax backend).
+
+    TPU runs the compiled Pallas kernels; everywhere else the *production*
+    answer is the jnp reference/oracle path — Pallas interpret mode emulates
+    the BlockSpec machinery step by step and is strictly slower than plain
+    jnp on CPU, so it is a correctness harness, not a serving path. When
+    ``platform`` is None (the runtime decision) the ``REPRO_BACKEND`` env
+    var overrides it (``pallas`` / ``interpret`` / ``reference``): CI sets
+    ``REPRO_BACKEND=interpret`` on its test steps so the exact kernel
+    tiling keeps running bit-for-bit off-TPU, and the tiling-coverage test
+    modules pin the same override via a monkeypatch fixture. An explicit
+    ``platform`` is a pure what-would-run-there question (``plan()``
+    introspection) and ignores the override.
+    """
+    if platform is None:
+        override = os.environ.get("REPRO_BACKEND")
+        if override:
+            if override not in (BACKEND_PALLAS, BACKEND_INTERPRET,
+                                BACKEND_REFERENCE):
+                raise ValueError(
+                    f"REPRO_BACKEND={override!r}: expected one of "
+                    f"{BACKEND_PALLAS!r}, {BACKEND_INTERPRET!r}, "
+                    f"{BACKEND_REFERENCE!r}"
+                )
+            return override
+        platform = jax.default_backend()
+    return BACKEND_PALLAS if platform == "tpu" else BACKEND_REFERENCE
 
 
 def route_for(geom: LevelGeom, *, have_axis_mats: bool = False,
@@ -422,6 +453,45 @@ def plan(chart, *, have_axis_mats: bool | None = None,
     return out
 
 
+# -- plan cache (serving warm path, DESIGN.md §12) ------------------------------
+# plan() walks every level's autotuners and traffic models — pure geometry,
+# so repeat traffic against the same (chart, dtype, backend, sample count)
+# must not redo it. Charts are frozen dataclasses (hashable); the effective
+# backend is part of the key so a REPRO_BACKEND flip is a miss.
+_PLAN_CACHE: dict = {}
+plan_cache_stats = {"hits": 0, "misses": 0}
+
+
+def plan_cached(chart, *, have_axis_mats: bool | None = None,
+                platform: str | None = None, samples: int = 1,
+                dtype=None, pyramid: bool = True,
+                vmem_budget: int = VMEM_BUDGET_BYTES) -> list:
+    """Memoized ``plan()`` — the serving fast path asks for the same
+    routing decision on every batch. The returned list is shared across
+    callers: treat it as read-only."""
+    backend = select_backend(platform=platform)
+    key = (chart, have_axis_mats, backend, samples,
+           jnp.dtype(dtype or jnp.float32).name, pyramid, vmem_budget)
+    hit = _PLAN_CACHE.pop(key, None)
+    if hit is not None:
+        plan_cache_stats["hits"] += 1
+        _PLAN_CACHE[key] = hit  # re-insert: LRU order, hits refresh recency
+        return hit
+    plan_cache_stats["misses"] += 1
+    out = plan(chart, have_axis_mats=have_axis_mats, platform=platform,
+               samples=samples, dtype=dtype, pyramid=pyramid,
+               vmem_budget=vmem_budget)
+    _PLAN_CACHE[key] = out
+    while len(_PLAN_CACHE) > 32:  # bound: long-lived servers, many charts
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    return out
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    plan_cache_stats.update(hits=0, misses=0)
+
+
 def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
            axis_mats=None, backend: str | None = None,
            block_families: int | None = None,
@@ -462,11 +532,35 @@ def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
         backend = select_backend()
     if route == ROUTE_REFERENCE or backend == BACKEND_REFERENCE:
         if r is None or d is None:
-            raise ValueError(
-                "reference route needs the joint (r, d) matrices; this level "
-                "has none (ICR.matrices skipped the joint build) — pass "
-                "matrices(joint=True) or provide axis_mats covering it"
-            )
+            if axis_mats is None:
+                raise ValueError(
+                    "reference route needs the joint (r, d) matrices; this "
+                    "level has none (ICR.matrices skipped the joint build) — "
+                    "pass matrices(joint=True) or provide axis_mats covering "
+                    "it"
+                )
+            # structured N-D level carrying only the per-axis factors: run
+            # the jnp oracle of the factored path (kernels/ref.py) — the
+            # production CPU answer. Honor the accumulation contract the
+            # same way the joint branch below does: sub-accum storage is
+            # upcast for the math and the result rounded back once per
+            # level (the oracle's own per-pass accumulation rule then
+            # operates at the policy's accum width or wider).
+            from . import ref as _ref  # lazy: keeps import order flexible
+
+            rs, ds = axis_mats
+            out_dtype = field.dtype
+            accum = jnp.dtype(accum_name)
+            if jnp.dtype(out_dtype).itemsize < accum.itemsize:
+                field, xi = field.astype(accum), xi.astype(accum)
+                rs = [a.astype(accum) for a in rs]
+                ds = [a.astype(accum) for a in ds]
+            oracle = lambda f, x: _ref.refine_axes_ref(
+                f, x, rs, ds, T=geom.T, n_fsz=geom.n_fsz,
+                boundary=geom.boundary, b=geom.b)
+            out = jax.vmap(oracle)(field, xi) if sample_axis \
+                else oracle(field, xi)
+            return out.astype(out_dtype)
         # honor the policy's accumulation contract here too: refine_level's
         # einsums carry no preferred_element_type, so sub-f32 storage is
         # upcast for the math and the result rounded back — same per-level

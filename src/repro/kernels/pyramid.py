@@ -51,7 +51,6 @@ import jax.numpy as jnp
 from jax.custom_derivatives import SymbolicZero
 from jax.experimental import pallas as pl
 
-from .icr_refine import interpret_default as _interpret_default
 from .nd_fused import (
     _axis_windows,
     _contract_windows,
@@ -166,6 +165,11 @@ def _pyramid_kernel(*refs, meta):
 
 def _pyramid_impl(meta, field: Array, xi0s, r_all, d0s) -> Array:
     (csz, fsz, boundary, b, levels, s_b, interpret, accum_name) = meta
+    if interpret == "reference":
+        # production off-TPU backend (dispatch.select_backend): the same
+        # fused multi-level chain as ONE jnp jit region — no Pallas
+        # interpret emulation, which is slower than plain jnp on CPU
+        return _pyramid_ref(meta, field, xi0s, r_all, d0s)
     n_s = field.shape[0]
     nbs = n_s // s_b
     T_last = levels[-1][0]
@@ -270,7 +274,16 @@ def refine_pyramid(field: Array, xis, mats, geoms, *,
     g0 = geoms[0]
     nd = len(g0.coarse_shape)
     fsz, csz, b, boundary = g0.n_fsz, g0.n_csz, g0.b, g0.boundary
-    interpret = _interpret_default() if interpret is None else interpret
+    if interpret is None:
+        # follow the dispatch backend: pallas on TPU, the jnp chain off-TPU
+        # (the "reference" sentinel in meta — one jit region, no interpret
+        # emulation), REPRO_BACKEND=interpret forces the tiled emulation
+        from .dispatch import BACKEND_PALLAS, BACKEND_REFERENCE, \
+            select_backend
+
+        backend = select_backend()
+        interpret = ("reference" if backend == BACKEND_REFERENCE
+                     else backend != BACKEND_PALLAS)
     accum = jnp.dtype(accum_dtype)
     for lo, hi in zip(geoms[:-1], geoms[1:]):
         if tuple(hi.coarse_shape) != tuple(lo.fine_shape):
@@ -282,11 +295,16 @@ def refine_pyramid(field: Array, xis, mats, geoms, *,
     n_s = field.shape[0]
     storage = field.dtype
 
-    s_b = sample_block
-    if s_b is None:
-        tuned = autotune_pyramid(
-            geoms, samples=n_s, itemsize=jnp.dtype(storage).itemsize)
-        s_b = tuned[1] if tuned is not None else 1
+    if interpret == "reference":
+        # one jnp jit region: VMEM sample blocking (and the padding to a
+        # block multiple) is meaningless here — run the whole batch
+        s_b = n_s
+    else:
+        s_b = sample_block
+        if s_b is None:
+            tuned = autotune_pyramid(
+                geoms, samples=n_s, itemsize=jnp.dtype(storage).itemsize)
+            s_b = tuned[1] if tuned is not None else 1
     s_b = max(1, min(s_b, n_s))
 
     xi0s, r_all, d0s, levels = [], [], [], []

@@ -29,6 +29,7 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None
 
 
 class BatchedServer:
@@ -43,6 +44,7 @@ class BatchedServer:
         self._rng = np.random.default_rng(seed)
         self.cache = self.model.init_cache(batch_slots, s_max)
         self.pos = np.zeros(batch_slots, np.int32)
+        self._slot_dirty = [False] * batch_slots  # slot held a request before
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
         self.slot_pending: List[list] = [[] for _ in range(batch_slots)]
         self._step = jax.jit(self.model.serve_step)
@@ -65,13 +67,54 @@ class BatchedServer:
         p /= p.sum()
         return int(self._rng.choice(p.size, p=p))
 
+    # attention caches are position-indexed: `attention_decode`/`mla_decode`
+    # mask cache slot j invisible until the new request's own write at
+    # position j (or its ring image) has overwritten it, so stale rows are
+    # unreachable and need no clearing — pinned by the slot-reuse decode-
+    # consistency test. Everything else (mamba/mlstm/slstm recurrent state)
+    # has no positions and WOULD leak the finished request's state forward.
+    _POS_MASKED_KEYS = ({"k", "v"}, {"ckv", "kpe"})
+
+    def _clear_slot(self, i: int):
+        """Zero slot i's rows in every non-position-masked cache leaf
+        before reuse (see _POS_MASKED_KEYS). head/tail slot caches carry
+        batch at axis 0, the grouped caches at axis 1 (n_groups leads)."""
+
+        def clear(c, batch_axis=0):
+            if isinstance(c, dict) and set(c) in self._POS_MASKED_KEYS:
+                return c  # attention KV: stale rows proven unreachable
+            idx = (slice(None),) * batch_axis + (i,)
+            return jax.tree.map(
+                lambda x: x.at[idx].set(jnp.zeros_like(x[idx])), c)
+
+        for key in ("head", "tail"):
+            if key in self.cache:
+                self.cache[key] = [clear(c) for c in self.cache[key]]
+        if self.cache.get("groups"):
+            self.cache["groups"] = {
+                name: clear(c, batch_axis=1)
+                for name, c in self.cache["groups"].items()
+            }
+
     def _admit(self, queue: list):
         for i in range(self.b):
-            if self.slot_req[i] is None and queue:
+            while self.slot_req[i] is None and queue:
                 req = queue.pop(0)
+                if len(req.prompt) >= self.s_max:
+                    # the prompt alone fills the KV cache: prefill would
+                    # never finish (step() only decodes once the pending
+                    # prompt is drained) and pos would run past the cache
+                    # bounds — the old server spun to max_iters here
+                    req.error = (f"prompt length {len(req.prompt)} >= "
+                                 f"cache size s_max={self.s_max}")
+                    req.done = True
+                    continue
+                if self._slot_dirty[i]:
+                    self._clear_slot(i)
                 self.slot_req[i] = req
                 self.slot_pending[i] = list(req.prompt)
                 self.pos[i] = 0
+                self._slot_dirty[i] = True
 
     def step(self, queue: list):
         """One decode iteration across all slots."""

@@ -14,6 +14,19 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture()
+def interpret_backend(monkeypatch):
+    """Pin dispatch.select_backend() to Pallas interpret mode.
+
+    Off-TPU the production backend is the jnp reference/oracle path
+    (interpret emulation is slower than plain jnp on CPU) — test modules
+    whose point is exercising the exact BlockSpec tiling through
+    dispatch/ICR declare this fixture autouse so they keep running the
+    kernels bit-for-bit regardless of the production default.
+    """
+    monkeypatch.setenv("REPRO_BACKEND", "interpret")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -28,6 +28,11 @@ IDS = [c[0] for c in CASES]
 S = 4
 
 
+# this module covers the kernel tiling: pin the interpret backend through
+# dispatch/ICR (the production CPU default is the jnp oracle)
+pytestmark = pytest.mark.usefixtures("interpret_backend")
+
+
 def _setup(chartf, rho):
     icr = ICR(chart=chartf(), kernel=matern32.with_defaults(rho=rho),
               use_pallas=True)

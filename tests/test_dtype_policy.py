@@ -26,6 +26,11 @@ from repro.roofline import refine_level_traffic
 BF16_TOL = 5e-2
 
 
+# this module covers the kernel tiling: pin the interpret backend through
+# dispatch/ICR (the production CPU default is the jnp oracle)
+pytestmark = pytest.mark.usefixtures("interpret_backend")
+
+
 def _rel_close(got_bf16, want_f32, tol=BF16_TOL):
     got = np.asarray(got_bf16, np.float32)
     want = np.asarray(want_f32, np.float32)

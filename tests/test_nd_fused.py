@@ -22,6 +22,11 @@ from repro.core.refine import (
 from repro.kernels import dispatch, nd, nd_fused
 from repro.roofline import refine_level_traffic
 
+
+# this module covers the kernel tiling: pin the interpret backend through
+# dispatch/ICR (the production CPU default is the jnp oracle)
+pytestmark = pytest.mark.usefixtures("interpret_backend")
+
 ND_CHARTS = [
     (lambda: regular_chart((12, 10), 2, boundary="shrink"), "2d-shrink"),
     (lambda: regular_chart((12, 16), 2, boundary="reflect"), "2d-reflect"),

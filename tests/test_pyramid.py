@@ -22,6 +22,11 @@ from repro.core.refine import (
 )
 from repro.kernels import dispatch, nd_fused, pyramid
 
+
+# this module covers the kernel tiling: pin the interpret backend through
+# dispatch/ICR (the production CPU default is the jnp oracle)
+pytestmark = pytest.mark.usefixtures("interpret_backend")
+
 CHARTS = [
     ("1d-stationary", lambda: regular_chart(32, 3, boundary="reflect"), 10.0),
     ("1d-charted", lambda: log_chart(32, 3, n_csz=5, n_fsz=4, delta0=0.05),

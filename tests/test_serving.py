@@ -74,6 +74,48 @@ def test_prefill_decode_token_accounting():
     assert srv.tokens_served == srv.prefill_tokens + srv.decode_tokens
 
 
+def test_long_prompt_rejected_not_hung():
+    """A prompt >= s_max used to hang the server: the prefill branch never
+    set req.done, so run() spun to max_iters while pos grew past the KV
+    cache bounds. It must now be rejected at admission, marked done."""
+    cfg = get_arch("starcoder2-15b").reduced()
+    s_max = 16
+    srv = BatchedServer(cfg, batch_slots=2, s_max=s_max, seed=0)
+    rng = np.random.default_rng(2)
+    long1 = Request(prompt=rng.integers(0, cfg.vocab_size, s_max),
+                    max_new=4)
+    long2 = Request(prompt=rng.integers(0, cfg.vocab_size, s_max + 7),
+                    max_new=4)
+    ok = Request(prompt=rng.integers(0, cfg.vocab_size, 4), max_new=4)
+    srv.run([long1, ok, long2], max_iters=200)  # far below the old spin
+    assert long1.done and long1.error and long1.out == []
+    assert long2.done and long2.error and long2.out == []
+    assert ok.done and ok.error is None and len(ok.out) == 4
+    # the rejected requests never touched a slot or the position counters
+    assert (srv.pos < s_max).all()
+
+
+def test_slot_reuse_decode_consistent():
+    """Admitting a second request into a previously used slot must produce
+    exactly the output a fresh server gives it: the slot's cache rows are
+    cleared on reuse (attention KV is position-masked, but recurrent
+    states would carry the finished request's state forward)."""
+    prompt_a = np.arange(3, 10)
+    prompt_b = np.arange(11, 16)
+    for arch in ("starcoder2-15b", "zamba2-7b"):
+        cfg = get_arch(arch).reduced()
+        # one slot: request B necessarily reuses request A's slot
+        srv = BatchedServer(cfg, batch_slots=1, s_max=32, seed=7)
+        a = Request(prompt=prompt_a.copy(), max_new=5)
+        b = Request(prompt=prompt_b.copy(), max_new=5)
+        srv.run([a, b])
+
+        fresh = BatchedServer(cfg, batch_slots=1, s_max=32, seed=7)
+        b_fresh = Request(prompt=prompt_b.copy(), max_new=5)
+        fresh.run([b_fresh])
+        assert b.out == b_fresh.out, arch
+
+
 def test_batching_does_not_change_output():
     """A request decoded alone must match the same request decoded
     alongside others (slot isolation)."""
