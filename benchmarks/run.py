@@ -26,7 +26,9 @@ trajectory is tracked across PRs (CI uploads ``BENCH_PR4.json``).
 """
 import argparse
 import json
+import os
 import platform
+import re
 import sys
 import time
 
@@ -129,12 +131,34 @@ def run_grad(report, *, quick: bool = False):
                f"reference/fused wall-time ratio ({backend})")
 
 
-def _write_json(path: str, *, quick: bool) -> None:
+def _pr_tag(path: str):
+    """PR tag encoded in a trajectory filename (BENCH_PR3.json -> PR3)."""
+    m = re.search(r"BENCH_(PR\d+)", os.path.basename(path))
+    return m.group(1) if m else None
+
+
+def _write_json(path: str, *, quick: bool, force: bool = False) -> None:
     import jax
 
+    tag = _pr_tag(path)
+    if os.path.exists(path) and not force:
+        # The BENCH_PR*.json files are a per-PR perf trajectory: each is
+        # seeded once by its PR and then only regenerated knowingly.
+        # Refuse to clobber a file whose recorded PR differs from the tag
+        # in the target filename (or one we can't read) — rewriting the
+        # *same* PR's file is fine, which is what CI does on every run.
+        try:
+            with open(path) as fh:
+                prev = json.load(fh).get("meta", {}).get("pr")
+        except (OSError, ValueError):
+            prev = "<unreadable>"
+        if tag is None or prev != tag:
+            sys.exit(f"refusing to overwrite {path}: it records pr={prev!r} "
+                     f"but the target name implies {tag!r} — pass --force "
+                     f"to re-baseline a prior PR's trajectory file")
     doc = {
         "meta": {
-            "pr": "PR5",
+            "pr": tag or "PR?",
             "backend": jax.default_backend(),
             "python": platform.python_version(),
             "jax": jax.__version__,
@@ -149,10 +173,14 @@ def _write_json(path: str, *, quick: bool) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run only these tables (comma-separated)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write machine-readable rows (BENCH_PR5.json)")
+    ap.add_argument("--force", action="store_true",
+                    help="allow --json to overwrite a prior PR's "
+                         "BENCH_PR*.json trajectory file")
     args = ap.parse_args()
 
     from . import accuracy, speed
@@ -173,15 +201,21 @@ def main() -> None:
         "vi": lambda: run_vi(_report),
         "grad": lambda: run_grad(_report, quick=args.quick),
     }
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(tables)
+        if unknown:
+            ap.error(f"unknown table(s) {sorted(unknown)}; "
+                     f"have {sorted(tables)}")
     print("name,us_per_call,derived")
     for name, fn in tables.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         t0 = time.time()
         fn()
         _report(f"{name}/_table_wall_s", (time.time() - t0) * 1e6, "")
     if args.json:
-        _write_json(args.json, quick=args.quick)
+        _write_json(args.json, quick=args.quick, force=args.force)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,117 @@
+"""CLI for the compile-artifact regression guard (DESIGN.md §13).
+
+    python -m repro.analysis                 # lint + diff vs tests/golden/
+    python -m repro.analysis --update        # regenerate the goldens
+    python -m repro.analysis --scenario tod-bf16
+    python -m repro.analysis --out DIR       # also dump current docs
+
+The check mode is the CI ``static-analysis`` job: it recomputes every
+scenario's fingerprint document, diffs it against the committed golden
+(structured diff inline in the log), runs the three golden-free lint
+passes, and exits non-zero on any difference or finding. ``--update`` is
+the sanctioned regeneration path (``tools/update_fingerprints.py`` wraps
+it): rewrite the goldens, then review the *git* diff of the JSON like any
+other code change.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from . import (
+    SCENARIOS,
+    canonical_json,
+    diff_docs,
+    fingerprint_scenario,
+    format_diff,
+    lint_scenario,
+)
+
+DEFAULT_GOLDEN_DIR = (
+    pathlib.Path(__file__).resolve().parents[3] / "tests" / "golden"
+)
+
+
+def golden_path(golden_dir: pathlib.Path, label: str) -> pathlib.Path:
+    return golden_dir / f"fingerprint-{label}.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="HLO/route fingerprint diff + Pallas lint passes")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the goldens instead of diffing")
+    ap.add_argument("--golden-dir", type=pathlib.Path,
+                    default=DEFAULT_GOLDEN_DIR,
+                    help=f"golden directory (default {DEFAULT_GOLDEN_DIR})")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="also write the freshly computed docs here "
+                         "(CI artifact)")
+    ap.add_argument("--scenario", action="append", default=None,
+                    help="restrict to these scenario labels "
+                         "(e.g. tod-bf16; repeatable)")
+    ap.add_argument("--skip-lint", action="store_true",
+                    help="fingerprint diff only")
+    ap.add_argument("--samples", type=int, default=4,
+                    help="slab/batch height of the batched entries")
+    args = ap.parse_args(argv)
+
+    cells = SCENARIOS(samples=args.samples)
+    if args.scenario:
+        want = set(args.scenario)
+        unknown = want - {s.label for s in cells}
+        if unknown:
+            ap.error(f"unknown scenario(s) {sorted(unknown)}; have "
+                     f"{[s.label for s in cells]}")
+        cells = [s for s in cells if s.label in want]
+
+    failed = False
+    for scn in cells:
+        print(f"== {scn.label} ==", flush=True)
+        doc = fingerprint_scenario(scn)
+        text = canonical_json(doc)
+        if args.out is not None:
+            args.out.mkdir(parents=True, exist_ok=True)
+            (args.out / f"fingerprint-{scn.label}.json").write_text(text)
+
+        gpath = golden_path(args.golden_dir, scn.label)
+        if args.update:
+            gpath.parent.mkdir(parents=True, exist_ok=True)
+            gpath.write_text(text)
+            print(f"  wrote {gpath}")
+        elif not gpath.exists():
+            print(f"  FAIL: no golden at {gpath} "
+                  f"(run tools/update_fingerprints.py)")
+            failed = True
+        else:
+            golden = json.loads(gpath.read_text())
+            diffs = diff_docs(golden, doc)
+            if diffs:
+                print(f"  FAIL: fingerprint differs from {gpath.name} "
+                      f"({len(diffs)} change(s)):")
+                print(format_diff(diffs))
+                failed = True
+            else:
+                print(f"  fingerprint matches {gpath.name}")
+
+        if not args.skip_lint:
+            findings = lint_scenario(scn)
+            for f in findings:
+                print(f"  FAIL: {f}")
+            if findings:
+                failed = True
+            else:
+                print("  lint passes clean (vmem, dtype, route)")
+
+    if failed:
+        print("\nstatic analysis FAILED", flush=True)
+        return 1
+    print("\nstatic analysis OK", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Structured diff between fingerprint documents (DESIGN.md §13).
+
+A golden mismatch must read like a code review comment, not a JSON blob:
+``diff_docs`` walks two documents recursively and returns ``(path, kind,
+old, new)`` tuples; ``format_diff`` renders them one change per line,
+
+    ~ plan.tpu[0].route: 'pyramid' -> 'nd-fused'
+    - entries.apply_sqrt.custom_calls.tpu_custom_call: 3
+    + entries.apply_sqrt.ops.while: 2
+
+so the CI job log states exactly which route/tile/op-count moved.
+"""
+from __future__ import annotations
+
+__all__ = ["diff_docs", "format_diff"]
+
+# diff kinds
+ADDED = "added"        # key/index present only in the current doc
+REMOVED = "removed"    # key/index present only in the golden
+CHANGED = "changed"    # scalar value differs
+
+
+def _join(path: str, key) -> str:
+    if isinstance(key, int):
+        return f"{path}[{key}]"
+    return f"{path}.{key}" if path else str(key)
+
+
+def diff_docs(golden, current, path: str = "") -> list:
+    """All differences between two JSON-like documents, as a flat list of
+    ``(path, kind, old, new)`` tuples (empty list == identical)."""
+    if isinstance(golden, dict) and isinstance(current, dict):
+        out = []
+        for k in sorted(set(golden) | set(current), key=str):
+            p = _join(path, k)
+            if k not in golden:
+                out.append((p, ADDED, None, current[k]))
+            elif k not in current:
+                out.append((p, REMOVED, golden[k], None))
+            else:
+                out.extend(diff_docs(golden[k], current[k], p))
+        return out
+    if isinstance(golden, list) and isinstance(current, list):
+        out = []
+        for i in range(max(len(golden), len(current))):
+            p = _join(path, i)
+            if i >= len(golden):
+                out.append((p, ADDED, None, current[i]))
+            elif i >= len(current):
+                out.append((p, REMOVED, golden[i], None))
+            else:
+                out.extend(diff_docs(golden[i], current[i], p))
+        return out
+    if golden != current:
+        return [(path or "<root>", CHANGED, golden, current)]
+    return []
+
+
+def _short(v) -> str:
+    s = repr(v)
+    return s if len(s) <= 60 else s[:57] + "..."
+
+
+def format_diff(diffs) -> str:
+    """One readable line per difference (``~`` changed, ``+`` added,
+    ``-`` removed), golden on the left, current on the right."""
+    lines = []
+    for path, kind, old, new in diffs:
+        if kind == CHANGED:
+            lines.append(f"  ~ {path}: {_short(old)} -> {_short(new)}")
+        elif kind == ADDED:
+            lines.append(f"  + {path}: {_short(new)}")
+        else:
+            lines.append(f"  - {path}: {_short(old)}")
+    return "\n".join(lines)

@@ -1,0 +1,167 @@
+"""Normalized compile fingerprints of lowered entry points.
+
+A fingerprint is everything about a compiled artifact that should be
+*stable* across no-op re-lowers and *change* exactly when the compiled
+structure changes:
+
+  ``ops``           canonicalized post-optimization HLO op histogram
+                    (instruction kinds with the SSA ``.N`` suffixes
+                    stripped, across every computation — fusion bodies
+                    included)
+  ``dtypes``        dtype census: how many instruction outputs carry each
+                    element type (every component of tuple outputs)
+  ``custom_calls``  custom-call target inventory — on TPU this is where
+                    the ``tpu_custom_call``/Mosaic Pallas launches show
+                    up; an empty dict on the CPU/interpret path is itself
+                    a locked-down fact
+  ``cost``          the loop-aware ``roofline.hlo_cost`` flops/bytes
+                    totals (ints), which count Pallas custom-calls at
+                    their operand+output bytes so this column agrees with
+                    the ``plan()`` byte model
+
+and, per scenario, the ``plan()`` route + tile + byte signature
+(``kernels.dispatch.plan_signature``) for both the TPU what-would-run
+answer and the backend actually lowered against.
+
+Everything is plain sorted-key JSON: ``canonical_json(doc)`` of two
+lowers of the same scenario is byte-identical (the determinism the golden
+diff relies on), and any structural change — a route flip, a lost
+pyramid cover, an f32 upcast, a fusion-count change — surfaces as a
+readable structured diff (:mod:`.diff`) instead of a wall-time blip.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import Counter, defaultdict
+
+from repro.roofline.hlo_cost import (
+    _CC_TARGET_RE,
+    _SHAPE_RE,
+    _split_def,
+    module_costs,
+)
+
+SCHEMA_VERSION = 1
+
+__all__ = ["SCHEMA_VERSION", "hlo_fingerprint", "dtype_element_counts",
+           "fingerprint_scenario", "canonical_json", "chart_summary"]
+
+
+def _instructions(hlo_text: str):
+    """Yield ``(out_type, kind_base, line)`` for every instruction in the
+    module — all computations, fusion bodies included; SSA suffixes
+    stripped so histogram keys are canonical op kinds."""
+    for raw in hlo_text.splitlines():
+        s = raw.strip()
+        if not s or s.startswith("//"):
+            continue
+        d = _split_def(s)
+        if d is None:
+            continue
+        _, out_type, kind, _after = d
+        yield out_type, re.sub(r"\.\d+$", "", kind), s
+
+
+def hlo_fingerprint(hlo_text: str) -> dict:
+    """The normalized fingerprint of one compiled module (module doc)."""
+    ops, dtypes, custom = Counter(), Counter(), Counter()
+    for out_type, kind, line in _instructions(hlo_text):
+        ops[kind] += 1
+        for dt, _dims in _SHAPE_RE.findall(out_type):
+            dtypes[dt] += 1
+        if kind == "custom-call":
+            m = _CC_TARGET_RE.search(line)
+            custom[m.group(1) if m else "<unknown>"] += 1
+    cost = module_costs(hlo_text)
+    return {
+        "ops": dict(sorted(ops.items())),
+        "dtypes": dict(sorted(dtypes.items())),
+        "custom_calls": dict(sorted(custom.items())),
+        "cost": {"flops": int(cost["flops"]), "bytes": int(cost["bytes"])},
+    }
+
+
+def dtype_element_counts(hlo_text: str) -> dict:
+    """``{hlo_dtype: set(element counts)}`` over every instruction output
+    in the module — what the dtype-policy lint pass walks to decide
+    whether a level field is resident at the storage dtype or silently
+    upcast (DESIGN.md §13)."""
+    out = defaultdict(set)
+    for out_type, _kind, _line in _instructions(hlo_text):
+        for dt, dims in _SHAPE_RE.findall(out_type):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            out[dt].add(n)
+    return dict(out)
+
+
+def chart_summary(chart) -> dict:
+    """JSON-stable geometry summary of a chart (no callables, no arrays)."""
+    phi = getattr(chart, "phi_inv", None)
+    return {
+        "shape0": [int(x) for x in chart.shape0],
+        "n_levels": int(chart.n_levels),
+        "n_csz": int(chart.n_csz),
+        "n_fsz": int(chart.n_fsz),
+        "boundary": chart.boundary,
+        "invariant": [bool(b) for b in chart.invariant],
+        "phi_inv": (None if phi is None
+                    else f"{getattr(phi, '__module__', '?')}."
+                         f"{getattr(phi, '__qualname__', repr(phi))}"),
+    }
+
+
+def fingerprint_scenario(scn, *, backend: str = "interpret",
+                         use_pallas: bool = True, use_pyramid: bool = True,
+                         policy=None, _policy_set: bool = False) -> dict:
+    """The full fingerprint document for one scenario cell.
+
+    The default arguments are the production configuration the goldens
+    lock down; the knobs exist for the self-tests' injected regressions
+    (``policy`` is only honored with ``_policy_set=True`` so ``None`` can
+    mean "inject fp32" rather than "default").
+    """
+    from repro.kernels import dispatch
+
+    from .scenarios import _UNSET, lower_entries, pinned_backend
+
+    pol_arg = policy if _policy_set else _UNSET
+    icr = scn.icr(use_pallas=use_pallas, use_pyramid=use_pyramid,
+                  policy=pol_arg)
+    chart = icr.chart
+    storage = icr.policy.storage_name
+    have_axis = use_pallas and chart.ndim > 1
+    pyramid = use_pallas and use_pyramid
+    plan_kw = dict(have_axis_mats=have_axis, samples=scn.samples,
+                   dtype=storage, pyramid=pyramid)
+    with pinned_backend(backend):
+        plan_lowered = dispatch.plan_signature(chart, **plan_kw)
+    plan_tpu = dispatch.plan_signature(chart, platform="tpu", **plan_kw)
+
+    lowered = lower_entries(scn, backend=backend, use_pallas=use_pallas,
+                            use_pyramid=use_pyramid, policy=pol_arg)
+    serving = lowered.pop("_serving")
+    entries = {
+        name: hlo_fingerprint(low.compile().as_text())
+        for name, low in sorted(lowered.items())
+    }
+    return {
+        "schema": SCHEMA_VERSION,
+        "scenario": scn.label,
+        "chart": chart_summary(chart),
+        "storage_dtype": storage,
+        "backend": backend,
+        "samples": int(scn.samples),
+        "plan": {"tpu": plan_tpu, "lowered": plan_lowered},
+        "entries": entries,
+        "serving": serving,
+    }
+
+
+def canonical_json(doc: dict) -> str:
+    """The byte-stable serialization the goldens are stored and compared
+    in: sorted keys, fixed separators, trailing newline."""
+    return json.dumps(doc, sort_keys=True, indent=1) + "\n"

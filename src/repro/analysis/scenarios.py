@@ -1,0 +1,173 @@
+"""The fingerprint scenario matrix and its lowered entry points.
+
+A :class:`Scenario` is one cell of the serving matrix — a chart workload
+(``tod``/``image``/``dust``, the `launch.serve_gp` scenarios) crossed
+with a storage dtype (``fp32``/``bf16``). For each cell this module
+builds the hot entry points as **lowerings** (no execution, shapes only
+via ``jax.eval_shape`` where possible):
+
+  ``apply_sqrt``            one forward field draw (contains the pyramid
+                            launch when the cover fires — the plan
+                            signature records the coverage explicitly)
+  ``apply_sqrt_vjp``        its fixed-matrices gradient w.r.t. ξ — the
+                            inference hot path (paper §1: two sqrt
+                            applications + the VJP)
+  ``apply_sqrt_batch``      the native sample-slab forward (§10)
+  ``apply_sqrt_batch_vjp``  its ξ-gradient
+  ``serve_slab``            the §12 serving slab step through a real
+                            ``GPFieldServer`` (draw + refine + f32 cast),
+                            plus the executable-cache key fingerprint
+
+Lowering runs under :func:`pinned_backend` (default ``interpret``) so the
+kernels' BlockSpec structure lands in the HLO deterministically,
+independent of the ambient ``REPRO_BACKEND``/platform default. The
+regression knobs (``use_pallas``/``use_pyramid``/``policy``/``backend``)
+exist so the self-tests can inject exactly the failures the fingerprints
+are meant to catch: a level forced to the jnp reference, a disabled
+pyramid cover, a bf16 policy silently dropped to f32.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+_UNSET = object()
+
+# entry points every scenario lowers and fingerprints (module doc above)
+ENTRY_POINTS = ("apply_sqrt", "apply_sqrt_vjp", "apply_sqrt_batch",
+                "apply_sqrt_batch_vjp", "serve_slab")
+
+
+@contextlib.contextmanager
+def pinned_backend(backend: str | None):
+    """Pin ``dispatch.select_backend()``'s runtime answer for the scope.
+
+    ``None`` removes the override (the platform default). Fingerprints
+    must not depend on the caller's environment, so every lowering in
+    this module runs inside this context.
+    """
+    old = os.environ.get("REPRO_BACKEND")
+    try:
+        if backend is None:
+            os.environ.pop("REPRO_BACKEND", None)
+        else:
+            os.environ["REPRO_BACKEND"] = backend
+        yield
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_BACKEND", None)
+        else:
+            os.environ["REPRO_BACKEND"] = old
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of the fingerprint matrix: chart workload × storage dtype.
+
+    ``samples`` is the slab/batch height of the batched and serving entry
+    points; ``quick`` picks the reduced CI chart geometries (the same ones
+    ``launch.serve_gp --quick`` serves).
+    """
+
+    name: str              # tod | image | dust
+    dtype: str             # fp32 | bf16
+    quick: bool = True
+    samples: int = 4
+
+    @property
+    def label(self) -> str:
+        return f"{self.name}-{self.dtype}"
+
+    @property
+    def policy(self):
+        """The ICR ``dtype_policy`` argument for this cell."""
+        return None if self.dtype == "fp32" else "bf16"
+
+    @property
+    def rho(self) -> float:
+        from repro.launch.serve_gp import SCENARIOS as RHO
+
+        return RHO[self.name]
+
+    def chart(self):
+        from repro.launch.serve_gp import scenario_chart
+
+        return scenario_chart(self.name, quick=self.quick)
+
+    def icr(self, *, use_pallas: bool = True, use_pyramid: bool = True,
+            policy=_UNSET):
+        from repro.core import ICR, matern32
+
+        return ICR(
+            chart=self.chart(),
+            kernel=matern32.with_defaults(rho=self.rho),
+            use_pallas=use_pallas,
+            use_pyramid=use_pyramid,
+            dtype_policy=self.policy if policy is _UNSET else policy,
+        )
+
+
+def SCENARIOS(quick: bool = True, samples: int = 4) -> list:
+    """The full matrix: tod/image/dust × fp32/bf16 (six cells)."""
+    return [
+        Scenario(name=n, dtype=d, quick=quick, samples=samples)
+        for n in ("tod", "image", "dust")
+        for d in ("fp32", "bf16")
+    ]
+
+
+def _xi_struct(icr, batch=None):
+    return jax.eval_shape(lambda: icr.init_xi(jax.random.PRNGKey(0),
+                                              batch=batch))
+
+
+def lower_entries(scn: Scenario, *, backend: str = "interpret",
+                  use_pallas: bool = True, use_pyramid: bool = True,
+                  policy=_UNSET) -> dict:
+    """Lower every entry point of `scn`; returns
+    ``{entry: jax.stages.Lowered}`` plus ``"_serving"`` (the server's
+    cache-key fingerprint dict, riding along for the scenario document).
+
+    The ICR entries lower from ``jax.eval_shape`` structs — no matrices
+    are computed. The serving entry builds a real (tiny) server because
+    the slab executable is created inside ``GPFieldServer._build``; its
+    matrices are the only concrete work here.
+    """
+    icr = scn.icr(use_pallas=use_pallas, use_pyramid=use_pyramid,
+                  policy=policy)
+    mats_s = jax.eval_shape(icr.matrices)
+    xi_s = _xi_struct(icr)
+    xib_s = _xi_struct(icr, batch=scn.samples)
+
+    def loss(mats, xi):
+        s = icr.apply_sqrt(mats, xi)
+        return 0.5 * jnp.sum(jnp.square(s.astype(jnp.float32)))
+
+    def loss_batch(mats, xi):
+        s = icr.apply_sqrt_batch(mats, xi)
+        return 0.5 * jnp.sum(jnp.square(s.astype(jnp.float32)))
+
+    out = {}
+    with pinned_backend(backend):
+        out["apply_sqrt"] = jax.jit(icr.apply_sqrt).lower(mats_s, xi_s)
+        out["apply_sqrt_vjp"] = jax.jit(
+            jax.grad(loss, argnums=1)).lower(mats_s, xi_s)
+        out["apply_sqrt_batch"] = jax.jit(
+            icr.apply_sqrt_batch).lower(mats_s, xib_s)
+        out["apply_sqrt_batch_vjp"] = jax.jit(
+            jax.grad(loss_batch, argnums=1)).lower(mats_s, xib_s)
+
+        from repro.core.vi import Posterior
+        from repro.launch.serve_gp import GPFieldServer
+
+        mean = icr.init_xi(jax.random.PRNGKey(0), dtype=jnp.float32)
+        log_std = [jnp.full_like(m, -1.5) for m in mean]
+        srv = GPFieldServer(Posterior(icr=icr, mean=mean, log_std=log_std),
+                            slab=scn.samples)
+        out["serve_slab"] = srv.lowered_slab()
+        out["_serving"] = srv.cache_key_fingerprint()
+    return out

@@ -1,0 +1,99 @@
+"""The one dtype -> byte-width table for the whole repo (DESIGN.md §13).
+
+Three subsystems account bytes per element and historically each carried
+its own table: ``kernels.policy`` (storage itemsize for VMEM autotuning),
+``roofline.level_traffic`` (the analytic HBM-traffic model) and
+``roofline.hlo_cost`` (parsing dtypes out of HLO text, where the names are
+the short XLA spellings ``f32``/``bf16``/``s8``/...). A dtype added to one
+table but not the others silently desynchronizes the byte columns that
+``dispatch.plan()`` and the benchmark JSON report, so all three now
+resolve through this module.
+
+Two name spaces meet here:
+
+  * **framework names** — anything ``jnp.dtype`` accepts: numpy dtypes,
+    ``"float32"``, ``"bfloat16"``, the ml_dtypes fp8 types, jnp scalar
+    types. Resolved by :func:`itemsize` / :func:`canonical_name`.
+  * **HLO short names** — what post-optimization HLO text spells:
+    ``f32``, ``bf16``, ``s8``, ``f8e4m3fn``, ... Resolved by
+    :data:`HLO_DTYPE_BYTES` (and mapped back from framework names by
+    :func:`hlo_name`).
+
+The fp8 rows (``f8e4m3fn``/``f8e5m2`` — 1 byte) are present ahead of the
+int8/fp8 quantized-matrix PR (ROADMAP) so the traffic model, the VMEM
+autotuners and the HLO parsers pick the new itemsize up from one place.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["HLO_DTYPE_BYTES", "itemsize", "canonical_name", "hlo_name"]
+
+# HLO/XLA short spelling -> bytes per element. This is the table
+# roofline.hlo_cost parses compiled modules with; "token"/"opaque" are
+# zero-width pseudo-types (control deps, custom-call handles).
+HLO_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+# framework canonical name -> HLO short spelling (the reverse direction:
+# np/ml_dtypes names as jnp.dtype(...).name reports them)
+_CANONICAL_TO_HLO = {
+    "bool": "pred",
+    "int4": "s4", "uint4": "u4",
+    "int8": "s8", "uint8": "u8",
+    "int16": "s16", "uint16": "u16",
+    "int32": "s32", "uint32": "u32",
+    "int64": "s64", "uint64": "u64",
+    "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2",
+    "float8_e4m3b11fnuz": "f8e4m3b11fnuz",
+    "float8_e4m3fnuz": "f8e4m3fnuz", "float8_e5m2fnuz": "f8e5m2fnuz",
+    "bfloat16": "bf16", "float16": "f16",
+    "float32": "f32", "float64": "f64",
+    "complex64": "c64", "complex128": "c128",
+}
+
+
+def _resolve(dtype) -> np.dtype:
+    """``np.dtype`` over the extended (ml_dtypes) name space: bfloat16 and
+    the fp8 types resolve because jax imports ml_dtypes, which registers
+    them with numpy."""
+    if isinstance(dtype, str) and dtype in HLO_DTYPE_BYTES:
+        # accept the HLO spelling too: callers fingerprinting parsed HLO
+        # shouldn't need to translate before asking for a width
+        for canon, short in _CANONICAL_TO_HLO.items():
+            if short == dtype:
+                return np.dtype(canon)
+        raise TypeError(f"HLO pseudo-type {dtype!r} has no framework dtype")
+    return np.dtype(dtype)
+
+
+def itemsize(dtype) -> int:
+    """Bytes per element of `dtype` (framework or HLO spelling)."""
+    if isinstance(dtype, str) and dtype in HLO_DTYPE_BYTES:
+        return HLO_DTYPE_BYTES[dtype]
+    return _resolve(dtype).itemsize
+
+
+def canonical_name(dtype) -> str:
+    """The framework canonical name (``jnp.dtype(...).name`` spelling)."""
+    return _resolve(dtype).name
+
+
+def hlo_name(dtype) -> str:
+    """The HLO short spelling of `dtype` (``float32`` -> ``f32``)."""
+    if isinstance(dtype, str) and dtype in HLO_DTYPE_BYTES:
+        return dtype
+    name = canonical_name(dtype)
+    try:
+        return _CANONICAL_TO_HLO[name]
+    except KeyError:
+        raise ValueError(f"no HLO spelling known for dtype {name!r}") \
+            from None

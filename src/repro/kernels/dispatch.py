@@ -86,12 +86,12 @@ ROUTE_REFERENCE = "reference"
 VMEM_BUDGET_BYTES = 64 * 2**20
 
 
-def autotune_block_families(t: int, n_csz: int, n_fsz: int, *, charted: bool,
-                            batch_block: int = 1, itemsize: int = 4,
-                            vmem_budget: int = VMEM_BUDGET_BYTES) -> int:
-    """Largest power-of-two family block whose working set fits the budget,
-    clamped to the family count ``t`` (a block larger than the level is pure
-    padding — tiny levels used to get the floor of 8 regardless of ``t``).
+def block1d_bytes(t: int, n_csz: int, n_fsz: int, *, charted: bool,
+                  block_families: int, batch_block: int = 1,
+                  itemsize: int = 4) -> int:
+    """VMEM working set of one 1-D kernel grid step (the model both 1-D
+    autotuners grow against, and the static re-derivation the VMEM lint
+    pass checks autotuned plans with — repro.analysis, DESIGN.md §13).
 
     Per grid step the kernel holds: the coarse block + its halo view
     (``2*b_f*s``), the xi block and the output block (``2*b_f*n_fsz``) —
@@ -99,21 +99,41 @@ def autotune_block_families(t: int, n_csz: int, n_fsz: int, *, charted: bool,
     ``(n_fsz, n_csz)+(n_fsz, n_fsz)`` when stationary, per-family (scaling
     with ``b_f``) when charted. Everything is double buffered by the Pallas
     pipeline, hence the factor 2.
-
-    The returned block never drops below ``q_max = (n_csz-1)//s``: the
-    kernels' one-block halo view must cover the window overhang.
     """
     s = max(1, n_fsz // 2)
-    b_b = max(1, batch_block)
-    floor = max(min(8, t), halo_floor(n_csz, n_fsz), 1)
+    b_f, b_b = block_families, max(1, batch_block)
+    per = b_b * (2 * b_f * s + 2 * b_f * n_fsz) \
+        + n_fsz * n_csz + n_fsz * n_fsz
+    if charted:
+        per += b_f * (n_fsz * n_csz + n_fsz * n_fsz)
+    return 2 * itemsize * per
+
+
+def block1d_floor(t: int, n_csz: int, n_fsz: int) -> int:
+    """Smallest family block the 1-D kernels accept: ``min(8, t)`` but
+    never below ``q_max = (n_csz-1)//s`` — the one-block halo view must
+    cover the window overhang. The floor is returned by the autotuner
+    whether or not it fits the budget (a level cannot tile finer)."""
+    return max(min(8, t), halo_floor(n_csz, n_fsz), 1)
+
+
+def autotune_block_families(t: int, n_csz: int, n_fsz: int, *, charted: bool,
+                            batch_block: int = 1, itemsize: int = 4,
+                            vmem_budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Largest power-of-two family block whose working set (the
+    ``block1d_bytes`` model) fits the budget, clamped to the family count
+    ``t`` (a block larger than the level is pure padding — tiny levels
+    used to get the floor of 8 regardless of ``t``) and floored at
+    ``block1d_floor`` (always returned, budget-fitting or not).
+    """
+    floor = block1d_floor(t, n_csz, n_fsz)
     best, b_f = floor, floor
     while True:
-        per = b_b * (2 * b_f * s + 2 * b_f * n_fsz) \
-            + n_fsz * n_csz + n_fsz * n_fsz
-        if charted:
-            per += b_f * (n_fsz * n_csz + n_fsz * n_fsz)
-        if b_f > floor and 2 * itemsize * per > vmem_budget:
-            break  # floor is always returned, budget-fitting or not
+        ws = block1d_bytes(t, n_csz, n_fsz, charted=charted,
+                           block_families=b_f, batch_block=batch_block,
+                           itemsize=itemsize)
+        if b_f > floor and ws > vmem_budget:
+            break
         best = b_f
         if b_f >= t:
             break
@@ -128,15 +148,12 @@ def autotune_batch_block(samples: int, t: int, n_csz: int, n_fsz: int, *,
     """Largest power-of-two sample slab the 1-D kernels can hold per grid
     step at the given family block — the native sample-batch dimension that
     amortizes matrix loads across batched sampling / serving."""
-    s = max(1, n_fsz // 2)
-    b_f = block_families
-    mats = n_fsz * n_csz + n_fsz * n_fsz
-    if charted:
-        mats += b_f * (n_fsz * n_csz + n_fsz * n_fsz)
     best, b_b = 1, 1
     while True:
-        per = b_b * (2 * b_f * s + 2 * b_f * n_fsz) + mats
-        if b_b > 1 and 2 * itemsize * per > vmem_budget:
+        ws = block1d_bytes(t, n_csz, n_fsz, charted=charted,
+                           block_families=block_families, batch_block=b_b,
+                           itemsize=itemsize)
+        if b_b > 1 and ws > vmem_budget:
             break
         best = b_b
         if b_b >= samples:
@@ -490,6 +507,35 @@ def plan_cached(chart, *, have_axis_mats: bool | None = None,
 def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
     plan_cache_stats.update(hits=0, misses=0)
+
+
+def plan_signature(chart, **plan_kwargs) -> list:
+    """Canonical JSON-serializable export of ``plan()`` — the route + tile
+    + byte signature the compile-fingerprint subsystem (repro.analysis,
+    DESIGN.md §13) locks down as a golden.
+
+    One dict per level, primitives only (dict keys stringified, byte
+    totals as ints), deterministically ordered: ``json.dumps(...,
+    sort_keys=True)`` of two signatures of the same geometry is
+    byte-identical, and any routing/tiling/byte-model change shows up as a
+    structured diff against the golden rather than a wall-time blip.
+    """
+    out = []
+    for e in plan(chart, **plan_kwargs):
+        out.append({
+            "level": e["level"],
+            "route": e["route"],
+            "backend": e["backend"],
+            "block_families": {str(k): int(v)
+                               for k, v in e["block_families"].items()},
+            "sample_block": (None if e["sample_block"] is None
+                             else int(e["sample_block"])),
+            "dtype": e["dtype"],
+            "hbm_bytes": {str(k): int(v) for k, v in e["hbm_bytes"].items()},
+            "vjp": {"route": e["vjp"]["route"],
+                    "backend": e["vjp"]["backend"]},
+        })
+    return out
 
 
 def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,

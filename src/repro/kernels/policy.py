@@ -59,7 +59,12 @@ class DtypePolicy:
 
     @property
     def storage_itemsize(self) -> int:
-        return jnp.dtype(self.storage_dtype).itemsize
+        # resolved through the shared table (repro.dtypes) so the VMEM
+        # autotuners, the traffic model and the HLO parsers can never
+        # disagree on a width — fp8 policies included
+        from repro.dtypes import itemsize
+
+        return itemsize(self.storage_dtype)
 
     @property
     def storage_name(self) -> str:

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
 import time
 from typing import List, Optional
 
@@ -62,6 +63,29 @@ class GPRequest:
     _wcount: int = 0
     _wmean: Optional[np.ndarray] = None
     _wm2: Optional[np.ndarray] = None
+
+
+def _canonical_key(x) -> str:
+    """Deterministic printable form of an executable-cache key component.
+
+    ``repr`` alone is not reproducible across processes: charts carry
+    ``phi_inv`` function objects (repr embeds a memory address) and θ
+    fingerprints carry raw bytes. Functions canonicalize to their
+    qualified name, bytes to a content hash, dataclasses (Chart,
+    DtypePolicy) recurse over their fields — so two servers built from
+    equal configs print (and digest) identically in any process.
+    """
+    if isinstance(x, tuple):
+        return "(" + ",".join(_canonical_key(v) for v in x) + ")"
+    if isinstance(x, bytes):
+        return "bytes<sha256:" + hashlib.sha256(x).hexdigest()[:12] + ">"
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        fields = ",".join(f"{f.name}={_canonical_key(getattr(x, f.name))}"
+                          for f in dataclasses.fields(x))
+        return f"{type(x).__name__}({fields})"
+    if callable(x) and hasattr(x, "__qualname__"):
+        return f"fn:{getattr(x, '__module__', '?')}.{x.__qualname__}"
+    return repr(x)
 
 
 def _welford_merge(count, m, m2, batch: np.ndarray):
@@ -262,6 +286,33 @@ class GPFieldServer:
     def route(self) -> str:
         """Dispatch route of the finest (dominant) refinement level."""
         return self._entry["plan"][-1]["route"]
+
+    def cache_key_fingerprint(self) -> dict:
+        """Deterministic printable fingerprint of the active
+        executable-cache key (DESIGN.md §13) — the serving column of the
+        compile fingerprints (repro.analysis). Equal server configs
+        produce byte-identical fingerprints in any process; anything that
+        would be a cache miss (chart geometry, θ, dtype policy, routing
+        flags, effective backend, slab height) changes the digest."""
+        canon = _canonical_key(self._cache_key(self.posterior))
+        icr = self.posterior.icr
+        return {
+            "digest": hashlib.sha256(canon.encode()).hexdigest()[:16],
+            "key": canon,
+            "slab": self.slab,
+            "backend": dispatch.select_backend(),
+            "storage_dtype": icr.policy.storage_name,
+        }
+
+    def lowered_slab(self):
+        """``jax.stages.Lowered`` of the active entry's slab executable —
+        the §12 hot step as one lowering, handed to the compile-fingerprint
+        subsystem (repro.analysis) so a serving-path route or dtype
+        regression is caught by the golden diff, not by wall-time noise."""
+        e = self._entry
+        seeds = jnp.zeros(self.slab, jnp.int32)
+        rows = jnp.zeros(self.slab, jnp.int32)
+        return e["fn"].lower(e["mats"], e["mean"], e["std"], seeds, rows)
 
 
 # -- demo / smoke entry point ---------------------------------------------------

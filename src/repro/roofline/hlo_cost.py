@@ -28,14 +28,9 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-    "f64": 8, "c64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
-    "token": 0, "opaque": 0,
-}
+from repro.dtypes import HLO_DTYPE_BYTES as _DTYPE_BYTES
 
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
@@ -63,9 +58,23 @@ _BODY_RE = re.compile(r"body=(%[\w.\-]+)")
 _COND_RE = re.compile(r"condition=(%[\w.\-]+)")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CC_TARGET_RE = re.compile(r'custom_call_target="([^"]*)"')
 
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute", "ragged-all-to-all")
+
+# custom-call targets that are Pallas kernel launches: the TPU Mosaic
+# custom call and the GPU Triton spellings. These move real HBM traffic
+# (exactly the operand+output bytes — the kernel reads/writes each Blocked
+# operand once per element) and must not be treated as zero-byte opaque
+# ops the way unknown custom calls are.
+PALLAS_TARGETS = ("tpu_custom_call", "mosaic", "triton_kernel_call",
+                  "__gpu$xla.gpu.triton")
+
+
+def is_pallas_target(target: str) -> bool:
+    t = target.lower()
+    return any(p in t for p in PALLAS_TARGETS)
 
 
 def _type_bytes(type_str: str) -> int:
@@ -84,6 +93,12 @@ def _type_dims(type_str: str) -> list:
     if not m:
         return []
     return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _type_width(type_str: str) -> int:
+    """Byte width of the (first) element type in `type_str` (4 if none)."""
+    m = _SHAPE_RE.search(type_str)
+    return _DTYPE_BYTES.get(m.group(1), 4) if m else 4
 
 
 @dataclasses.dataclass
@@ -105,6 +120,10 @@ class CompCost:
         default_factory=lambda: defaultdict(int))
     whiles: list = dataclasses.field(default_factory=list)  # (body, trips)
     calls: list = dataclasses.field(default_factory=list)   # fusion callees
+    cc_counts: dict = dataclasses.field(      # custom-call target -> count
+        default_factory=lambda: defaultdict(int))
+    cc_bytes: dict = dataclasses.field(       # custom-call target -> bytes
+        default_factory=lambda: defaultdict(float))
 
 
 def _group_size(line: str) -> int:
@@ -124,6 +143,7 @@ def _dot_flops(line: str, out_dims: list, symbols: dict) -> float:
     lhs = symbols.get(ops[0])
     if lhs is None:
         return 0.0
+    lhs = lhs[0]  # (dims, width) -> dims
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     contract = 1
     if m and m.group(1):
@@ -175,23 +195,36 @@ def parse_module(hlo: str) -> Tuple[Dict[str, CompCost], Optional[str]]:
             continue
         name, out_type, kind, _after = d
         kind_base = re.sub(r"\.\d+$", "", kind)
-        symbols[name] = _type_dims(out_type)
+        out_width = _type_width(out_type)
+        symbols[name] = (_type_dims(out_type), out_width)
         cc = comps[current]
         out_bytes = _type_bytes(out_type)
-        # HBM traffic: operands + output (fusion internals are free)
+        # HBM traffic: operands + output (fusion internals are free).
+        # Operand widths come from the defining op's element type, so a
+        # bf16 operand of an f32-accumulating op counts 2 bytes, not 4.
         operand_names = _OPERAND_RE.findall(s.split("(", 1)[1])
         op_bytes = 0
         for on in operand_names:
-            dims = symbols.get(on)
-            if dims is not None:
+            sym = symbols.get(on)
+            if sym is not None:
+                dims, width = sym
                 n = 1
                 for d in dims:
                     n *= d
-                # dtype unknown from dims alone; assume output dtype width
-                dts = _SHAPE_RE.search(out_type)
-                width = _DTYPE_BYTES.get(dts.group(1), 4) if dts else 4
                 op_bytes += n * width
-        if kind_base in ("dynamic-slice",) or "dynamic-slice" in name:
+        if kind_base == "custom-call":
+            # Pallas kernel launches (tpu_custom_call / Mosaic / Triton)
+            # move exactly their operand+output bytes through HBM — the
+            # traffic plan() models. Unknown targets stay opaque (0 bytes)
+            # but are inventoried either way, so a fingerprint sees every
+            # custom call and the byte model sees the Pallas ones.
+            m = _CC_TARGET_RE.search(s)
+            target = m.group(1) if m else "<unknown>"
+            cc.cc_counts[target] += 1
+            if is_pallas_target(target):
+                cc.bytes += out_bytes + op_bytes
+                cc.cc_bytes[target] += out_bytes + op_bytes
+        elif kind_base in ("dynamic-slice",) or "dynamic-slice" in name:
             # reads only the slice (operand = whole scan stack otherwise)
             cc.bytes += 2 * out_bytes
         elif kind_base == "dynamic-update-slice" or \
@@ -200,16 +233,14 @@ def parse_module(hlo: str) -> Tuple[Dict[str, CompCost], Optional[str]]:
             # r/w of the update slice, not the whole stacked carry
             sizes = []
             for on in operand_names:
-                dims = symbols.get(on)
-                if dims is not None:
+                sym = symbols.get(on)
+                if sym is not None:
                     n = 1
-                    for d in dims:
+                    for d in sym[0]:
                         n *= d
                     sizes.append(n)
             if sizes:
-                dts = _SHAPE_RE.search(out_type)
-                width = _DTYPE_BYTES.get(dts.group(1), 4) if dts else 4
-                cc.bytes += 2 * (sum(sizes) - max(sizes)) * width
+                cc.bytes += 2 * (sum(sizes) - max(sizes)) * out_width
         elif kind_base not in ("parameter", "constant", "tuple",
                                "get-tuple-element", "bitcast", "while",
                                "conditional", "call", "after-all"):
@@ -261,7 +292,8 @@ def module_costs(hlo: str, default_trip: int = 1) -> dict:
 
     tot = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0,
            "coll_by_kind": defaultdict(float),
-           "coll_counts": defaultdict(float)}
+           "coll_counts": defaultdict(float),
+           "custom_calls": defaultdict(lambda: {"count": 0.0, "bytes": 0.0})}
     for name, cc in comps.items():
         m = mult[name]
         if m == 0.0:
@@ -273,6 +305,14 @@ def module_costs(hlo: str, default_trip: int = 1) -> dict:
             tot["coll_by_kind"][k] += m * v
         for k, v in cc.coll_counts.items():
             tot["coll_counts"][k] += m * v
+        for k, v in cc.cc_counts.items():
+            tot["custom_calls"][k]["count"] += m * v
+            tot["custom_calls"][k]["bytes"] += m * cc.cc_bytes.get(k, 0.0)
     tot["coll_by_kind"] = dict(tot["coll_by_kind"])
     tot["coll_counts"] = {k: int(v) for k, v in tot["coll_counts"].items()}
+    tot["custom_calls"] = {
+        k: {"count": int(v["count"]), "bytes": v["bytes"],
+            "pallas": is_pallas_target(k)}
+        for k, v in tot["custom_calls"].items()
+    }
     return tot

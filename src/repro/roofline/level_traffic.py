@@ -48,6 +48,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.dtypes import canonical_name, itemsize as dtype_itemsize
+
 __all__ = ["refine_level_traffic"]
 
 
@@ -95,13 +97,15 @@ def refine_level_traffic(geom, route: str, *, itemsize: int | None = None,
     covered level's position in the VMEM-resident prefix.
     """
     if dtype is not None:
-        dtype = np.dtype(dtype)
-        if itemsize is not None and itemsize != dtype.itemsize:
+        # the shared table (repro.dtypes) resolves HLO spellings and the
+        # fp8 types the same way the VMEM autotuners and HLO parsers do
+        width, dtype_name = dtype_itemsize(dtype), canonical_name(dtype)
+        if itemsize is not None and itemsize != width:
             raise ValueError(
                 f"conflicting byte width: itemsize={itemsize} vs "
-                f"dtype={dtype.name} ({dtype.itemsize} bytes)"
+                f"dtype={dtype_name} ({width} bytes)"
             )
-        itemsize, dtype_name = dtype.itemsize, dtype.name
+        itemsize = width
     elif itemsize is not None:
         dtype_name = f"{itemsize}-byte"  # hand-sized caller: honest label
     else:

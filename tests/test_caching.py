@@ -1,0 +1,116 @@
+"""Cache-key integrity: dispatch.plan_cached and ICR.matrices_cached.
+
+The serving warm path (DESIGN.md §12) leans on both caches; a key
+collision would silently serve one configuration's routing/matrices to
+another. These tests enumerate the axes that must separate entries and
+the events that must evict them.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ICR, matern32
+from repro.core.charts import regular_chart
+from repro.kernels import dispatch
+
+
+@pytest.fixture(autouse=True)
+def fresh_plan_cache():
+    dispatch.plan_cache_clear()
+    yield
+    dispatch.plan_cache_clear()
+
+
+def test_plan_cached_distinct_keys_never_collide():
+    """Every (chart, dtype, backend-platform, samples) combination gets
+    its own entry — same-argument repeats hit, nothing collides."""
+    charts = [regular_chart(64, 2), regular_chart(64, 3),
+              regular_chart((16, 16), 2)]
+    combos = list(itertools.product(charts, ["float32", "bfloat16"],
+                                    ["tpu", "cpu"], [1, 4]))
+    plans = {}
+    for chart, dtype, platform, samples in combos:
+        plans[(chart, dtype, platform, samples)] = dispatch.plan_cached(
+            chart, dtype=dtype, platform=platform, samples=samples)
+    assert dispatch.plan_cache_stats["misses"] == len(combos)
+    assert dispatch.plan_cache_stats["hits"] == 0
+    # repeat traffic: all hits, and identical objects (shared, read-only)
+    for chart, dtype, platform, samples in combos:
+        again = dispatch.plan_cached(chart, dtype=dtype, platform=platform,
+                                     samples=samples)
+        assert again is plans[(chart, dtype, platform, samples)]
+    assert dispatch.plan_cache_stats["hits"] == len(combos)
+    # and the cached plans really differ along each axis
+    assert (plans[(charts[0], "float32", "tpu", 1)]
+            != plans[(charts[1], "float32", "tpu", 1)])
+    assert (plans[(charts[0], "float32", "tpu", 1)][0]["dtype"]
+            != plans[(charts[0], "bfloat16", "tpu", 1)][0]["dtype"])
+    assert (plans[(charts[0], "float32", "tpu", 1)][0]["backend"]
+            != plans[(charts[0], "float32", "cpu", 1)][0]["backend"])
+
+
+def test_plan_cached_backend_override_changes_key(monkeypatch):
+    """A REPRO_BACKEND flip must be a miss: the override changes what
+    select_backend answers at runtime, so a cached plan from before the
+    flip would report the wrong backend."""
+    chart = regular_chart(64, 2)
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    base = dispatch.plan_cached(chart)
+    monkeypatch.setenv("REPRO_BACKEND", "interpret")
+    flipped = dispatch.plan_cached(chart)
+    assert dispatch.plan_cache_stats["misses"] == 2
+    assert flipped is not base
+    assert any(e["backend"] == dispatch.BACKEND_INTERPRET
+               for e in flipped)
+    # flipping back hits the original entry
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    assert dispatch.plan_cached(chart) is base
+
+
+def test_plan_cache_clear_evicts():
+    chart = regular_chart(64, 2)
+    first = dispatch.plan_cached(chart)
+    dispatch.plan_cache_clear()
+    assert dispatch.plan_cache_stats == {"hits": 0, "misses": 0}
+    second = dispatch.plan_cached(chart)
+    assert dispatch.plan_cache_stats["misses"] == 1
+    assert second is not first  # recomputed, not resurrected
+
+
+def _icr():
+    return ICR(chart=regular_chart(32, 2),
+               kernel=matern32.with_defaults(rho=8.0), use_pallas=True)
+
+
+def test_matrices_cached_theta_keying():
+    icr = _icr()
+    m_none = icr.matrices_cached()
+    assert icr.matrices_cached() is m_none  # None-θ repeat hits
+    m_a = icr.matrices_cached({"rho": jnp.asarray(4.0)})
+    m_b = icr.matrices_cached({"rho": jnp.asarray(2.0)})
+    assert m_a is not m_b and m_a is not m_none
+    # same θ value under a fresh array object: same bytes, same entry
+    assert icr.matrices_cached({"rho": jnp.asarray(4.0)}) is m_a
+    assert icr.matrices_cache_stats == {"hits": 2, "misses": 3}
+    # the cached matrices actually differ (not just the keys)
+    assert not jnp.allclose(m_a["sqrt0"], m_b["sqrt0"])
+
+
+def test_matrices_cached_tracer_bypasses_cache():
+    """Learning θ inside a jitted step must not poison the cache: traced
+    values are unhashable as data, so the cache is bypassed entirely."""
+    icr = _icr()
+    icr.matrices_cached({"rho": jnp.asarray(4.0)})  # seed one real entry
+    stats_before = dict(icr.matrices_cache_stats)
+
+    @jax.jit
+    def sqrt0_of(rho):
+        return icr.matrices_cached({"rho": rho})["sqrt0"]
+
+    out = sqrt0_of(jnp.asarray(2.0))
+    assert out.shape == icr.matrices()["sqrt0"].shape
+    assert icr.matrices_cache_stats == stats_before  # untouched by tracing
+    # and the traced result is correct, not the cached-θ one
+    assert jnp.allclose(out, icr.matrices({"rho": jnp.asarray(2.0)})["sqrt0"])

@@ -1,0 +1,52 @@
+"""Committed compile-fingerprint goldens vs a fresh lowering.
+
+This is the regression guard itself, run as part of tier-1: every
+scenario cell's fingerprint document is recomputed in this process and
+must serialize byte-identically to the JSON committed under
+``tests/golden/``. An intentional compile-structure change regenerates
+them with ``python tools/update_fingerprints.py`` and reviews the git
+diff; an *unintentional* one fails here with a structured diff.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis import (
+    SCENARIOS,
+    canonical_json,
+    diff_docs,
+    fingerprint_scenario,
+    format_diff,
+)
+from repro.analysis.__main__ import golden_path
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+LABELS = [s.label for s in SCENARIOS()]
+
+
+def test_golden_set_is_exactly_the_scenario_matrix():
+    have = sorted(p.name for p in GOLDEN_DIR.glob("fingerprint-*.json"))
+    want = sorted(f"fingerprint-{lb}.json" for lb in LABELS)
+    assert have == want, (
+        "goldens out of sync with the scenario matrix — run "
+        "tools/update_fingerprints.py and commit the result"
+    )
+
+
+@pytest.mark.parametrize("label", LABELS)
+def test_fingerprint_matches_golden(label):
+    scn = next(s for s in SCENARIOS() if s.label == label)
+    gpath = golden_path(GOLDEN_DIR, label)
+    golden = json.loads(gpath.read_text())
+    doc = fingerprint_scenario(scn)
+    diffs = diff_docs(golden, doc)
+    assert not diffs, (
+        f"compile fingerprint for {label} drifted from {gpath.name} "
+        f"({len(diffs)} change(s)):\n{format_diff(diffs)}\n"
+        f"If intentional: python tools/update_fingerprints.py and review "
+        f"the git diff."
+    )
+    # the stored text itself is the canonical serialization (update tool
+    # and golden round-trip agree byte for byte)
+    assert gpath.read_text() == canonical_json(golden)

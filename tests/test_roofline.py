@@ -7,6 +7,7 @@ from repro.roofline.analysis import (
     collective_bytes,
     collective_counts,
 )
+from repro.roofline.hlo_cost import is_pallas_target, module_costs
 
 HLO = """
 HloModule jit_step, entry_computation_layout={...}
@@ -64,3 +65,68 @@ def test_terms_and_dominance():
 def test_empty_hlo():
     out = collective_bytes("ENTRY %m { ROOT %x = f32[2] add(%a, %b) }")
     assert out["total"] == 0
+
+
+CC_HLO = """
+HloModule jit_refine
+
+ENTRY %main {
+  %mats = f32[24,8]{1,0} parameter(0)
+  %field = bf16[128,64]{1,0} parameter(1)
+  %k = bf16[256,64]{1,0} custom-call(%field, %mats), custom_call_target="tpu_custom_call", api_version=API_VERSION_STATUS_RETURNING
+  %opaque = f32[16]{0} custom-call(%mats), custom_call_target="SomeVendorOp"
+  ROOT %out = bf16[256,64]{1,0} add(%k, %k)
+}
+"""
+
+
+def test_pallas_custom_call_bytes():
+    costs = module_costs(CC_HLO)
+    cc = costs["custom_calls"]
+    assert cc["tpu_custom_call"]["pallas"] is True
+    assert cc["tpu_custom_call"]["count"] == 1
+    # operand bytes (bf16 field + f32 mats) + bf16 output
+    expected = 128 * 64 * 2 + 24 * 8 * 4 + 256 * 64 * 2
+    assert cc["tpu_custom_call"]["bytes"] == expected
+    # unknown targets are inventoried but stay zero-byte opaque
+    assert cc["SomeVendorOp"]["pallas"] is False
+    assert cc["SomeVendorOp"]["count"] == 1
+    assert cc["SomeVendorOp"]["bytes"] == 0
+    # the pallas bytes flow into the module byte total
+    assert costs["bytes"] >= expected
+
+
+def test_pallas_custom_call_in_loop_multiplied():
+    hlo = """
+HloModule jit_scan
+
+%body {
+  %pb = (s32[], bf16[64]) parameter(0)
+  %t = bf16[64]{0} get-tuple-element(%pb), index=1
+  %kb = bf16[64]{0} custom-call(%t), custom_call_target="tpu_custom_call"
+  ROOT %tb = (s32[], bf16[64]) tuple(%i, %kb)
+}
+
+%cond {
+  %pc = (s32[], bf16[64]) parameter(0)
+  ROOT %lt = pred[] compare(%a, %b), direction=LT
+}
+
+ENTRY %main {
+  %p = (s32[], bf16[64]) parameter(0)
+  ROOT %w = (s32[], bf16[64]) while(%p), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+}
+"""
+    costs = module_costs(hlo)
+    assert costs["custom_calls"]["tpu_custom_call"]["count"] == 7
+    assert costs["custom_calls"]["tpu_custom_call"]["bytes"] == \
+        7 * (64 * 2 + 64 * 2)
+
+
+def test_is_pallas_target_spellings():
+    assert is_pallas_target("tpu_custom_call")
+    assert is_pallas_target("MosaicGpuKernel".lower()) or \
+        is_pallas_target("mosaic")
+    assert is_pallas_target("triton_kernel_call")
+    assert not is_pallas_target("cu_dnn$convForward")
+    assert not is_pallas_target("Sharding")

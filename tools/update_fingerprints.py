@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""Regenerate the compile-fingerprint goldens in tests/golden/.
+
+Thin wrapper over ``python -m repro.analysis --update`` that works from a
+plain checkout (no install, no PYTHONPATH): run it after an *intentional*
+compile-structure change (new route, retuned tile, dtype-policy change),
+then review the git diff of the JSON goldens like any other code change.
+
+    python tools/update_fingerprints.py [--scenario tod-bf16] ...
+
+Extra arguments are forwarded to ``repro.analysis`` verbatim.
+"""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(["--update", *sys.argv[1:]]))
