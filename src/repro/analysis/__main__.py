@@ -1,6 +1,8 @@
-"""CLI for the compile-artifact regression guard (DESIGN.md §13).
+"""CLI for the compile-artifact regression guard (DESIGN.md §13/§14).
 
     python -m repro.analysis                 # lint + diff vs tests/golden/
+    python -m repro.analysis check           # same (explicit)
+    python -m repro.analysis verify          # launch-plan verifier (§14)
     python -m repro.analysis --update        # regenerate the goldens
     python -m repro.analysis --scenario tod-bf16
     python -m repro.analysis --out DIR       # also dump current docs
@@ -12,6 +14,13 @@ passes, and exits non-zero on any difference or finding. ``--update`` is
 the sanctioned regeneration path (``tools/update_fingerprints.py`` wraps
 it): rewrite the goldens, then review the *git* diff of the JSON like any
 other code change.
+
+``verify`` runs ``kernel_verify.verify_scenario`` over every scenario
+cell: exact output coverage / in-bounds halo reads of every exported
+LaunchPlan, the VMEM + roofline byte cross-checks, the custom-VJP
+transpose proof (jaxpr linearity walk + interpret-mode dot test at the
+verified tile config) and the jaxpr hygiene passes. Exits non-zero on
+any finding.
 """
 from __future__ import annotations
 
@@ -42,6 +51,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="HLO/route fingerprint diff + Pallas lint passes")
+    ap.add_argument("command", nargs="?", choices=("check", "verify"),
+                    default="check",
+                    help="check: fingerprint diff + lint (default); "
+                         "verify: the DESIGN.md §14 launch-plan verifier")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the goldens instead of diffing")
     ap.add_argument("--golden-dir", type=pathlib.Path,
@@ -67,6 +80,26 @@ def main(argv=None) -> int:
             ap.error(f"unknown scenario(s) {sorted(unknown)}; have "
                      f"{[s.label for s in cells]}")
         cells = [s for s in cells if s.label in want]
+
+    if args.command == "verify":
+        from .kernel_verify import verify_scenario
+
+        failed = False
+        for scn in cells:
+            print(f"== {scn.label} ==", flush=True)
+            findings = verify_scenario(scn)
+            for f in findings:
+                print(f"  FAIL: {f}")
+            if findings:
+                failed = True
+            else:
+                print("  launch plans verified (coverage, bounds, halo, "
+                      "bytes, transpose, hygiene)")
+        if failed:
+            print("\nkernel verify FAILED", flush=True)
+            return 1
+        print("\nkernel verify OK", flush=True)
+        return 0
 
     failed = False
     for scn in cells:

@@ -12,7 +12,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

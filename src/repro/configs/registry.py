@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from .base import ArchConfig, SHAPES, ShapeCell, input_specs
+from .base import ArchConfig
 from .starcoder2_15b import CONFIG as starcoder2_15b
 from .gemma3_27b import CONFIG as gemma3_27b
 from .command_r_35b import CONFIG as command_r_35b

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Sequence
+from typing import Callable
 
 import numpy as np
 import jax.numpy as jnp
@@ -151,7 +151,6 @@ class Chart:
     def origin(self, level: int) -> tuple:
         o = list(self.origin0)
         for lvl in range(level):
-            d = self.delta0[0] / (2.0**lvl)  # per-axis below
             for a in range(self.ndim):
                 da = self.delta0[a] / (2.0**lvl)
                 anchor0 = self.b if self.boundary == "shrink" else 0
@@ -281,7 +280,6 @@ def galactic_dust_chart(shape0, n_levels, *, n_csz=5, n_fsz=4,
         r = jnp.exp(x[..., 0])
         return jnp.stack([r, x[..., 1], x[..., 2]], axis=-1)
 
-    nd = 3
     d_ang = angular_extent / (shape0[1] if not np.isscalar(shape0) else shape0)
     return Chart(shape0=shape0, n_levels=n_levels, n_csz=n_csz, n_fsz=n_fsz,
                  delta0=(delta_logr, d_ang, d_ang),

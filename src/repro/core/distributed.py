@@ -21,7 +21,6 @@ just two of the 512 ring edges (DCN links), everything else stays on ICI.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Sequence
 
 import numpy as np
@@ -120,10 +119,6 @@ class DistributedICR:
         k = self.first_sharded_level()
         r_specs, d_specs = [], []
         for lvl in range(c.n_levels):
-            kept = tuple(
-                1 if c.invariant[a] else c.family_count(lvl, a)
-                for a in range(c.ndim)
-            )
             if lvl >= k and not c.invariant[self.shard_axis]:
                 spec = [None] * (c.ndim + 2)
                 spec[self.shard_axis] = self.axis_names
@@ -240,7 +235,6 @@ class DistributedICR:
                                  mats["sqrtD"][lvl], geom)
 
         # transition: slice my block along shard_axis
-        t_k = c.family_count(k, self.shard_axis)
         blk = c.shape(k)[self.shard_axis] // self.n_dev
         idx = lax.axis_index(self.axis_names)
         field = lax.dynamic_slice_in_dim(field, idx * blk, blk,
@@ -259,9 +253,6 @@ class DistributedICR:
     def apply_sqrt(self, mats: dict, xi: Sequence[Array]) -> Array:
         """shard_map'd sqrt(K_ICR) application. xi leaves must be laid out per
         ``xi_structure()``; use ``shardings()`` to place them."""
-        c = self.chart
-        k = self.first_sharded_level()
-
         mat_specs = self.mat_specs()
         xi_specs = self.xi_specs()
 

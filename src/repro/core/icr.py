@@ -20,7 +20,7 @@ precomputed and donated for fixed-θ sampling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Mapping, Sequence
+from typing import List, Mapping, Sequence
 
 import numpy as np
 import jax

@@ -12,7 +12,6 @@ log-determinant with 10 probes × 15 Lanczos iterations.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import numpy as np

@@ -266,7 +266,6 @@ def refine_level(coarse: Array, xi: Array, r: Array, sqrt_d: Array,
         w = _axis_windows(w, a, geom)
     # w: (T_0..T_{nd-1}, csz, csz, ...) -> (*T, csz^d)
     csz, fsz = geom.n_csz**nd, geom.n_fsz**nd
-    f_total = int(np.prod(geom.T))
     w = w.reshape(geom.T + (csz,))
 
     # Batched GEMM over the NON-invariant family dims only: invariant axes

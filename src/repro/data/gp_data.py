@@ -1,7 +1,6 @@
 """Synthetic GP regression datasets on charted grids (paper §5 setting)."""
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

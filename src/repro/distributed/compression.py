@@ -13,7 +13,6 @@ the collective.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

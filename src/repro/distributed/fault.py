@@ -19,7 +19,6 @@ Tests inject synthetic failures/stragglers (tests/test_fault.py).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import numpy as np

@@ -22,8 +22,7 @@ pods; gradient all-reduces become hierarchical (ICI within pod, DCN across).
 """
 from __future__ import annotations
 
-import re
-from typing import Any, Sequence
+from typing import Any
 
 import numpy as np
 import jax

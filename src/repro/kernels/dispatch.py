@@ -538,6 +538,201 @@ def plan_signature(chart, **plan_kwargs) -> list:
     return out
 
 
+# -- declarative launch-plan export (DESIGN.md §14) -----------------------------
+# The kernel impls build LaunchPlan records (kernels.launch) and hand them
+# to run_plan; these exports rebuild the *identical* records from geometry
+# alone — same builders, same autotuned tiles — so analysis.kernel_verify
+# can prove coverage/bounds/halo/byte properties about exactly the
+# launches that would run, without touching an array.
+def level_launch_plans(geom: LevelGeom, route: str | None = None, *,
+                       samples: int = 1, dtype=None,
+                       accum_dtype: str = "float32",
+                       have_axis_mats: bool | None = None,
+                       block_families: int | None = None,
+                       sample_block: int | None = None) -> list:
+    """Every Pallas launch one refinement level executes on ``route``:
+    the forward launch(es) followed by the adjoint launch(es) its custom
+    VJP runs at fixed matrices (``[]`` for the reference route — no
+    Pallas launch to verify).
+
+    ``route`` defaults to ``route_for`` of the geometry; tiles are the
+    autotuners' answers at the storage ``dtype`` unless overridden, so
+    the records match the kernel impls' own plans bit for bit. The N-D
+    routes mirror the composed backward exactly: the megakernel's
+    ``_core_bwd`` runs the 1-D adjoints in reverse axis order (axis 0
+    with noise, trailing axes without), the per-axis route one
+    forward/adjoint pair per axis with orthogonal axes folded into the
+    batch dimension.
+    """
+    from .icr_refine import refine_adjoint_launch_plan, refine_fwd_launch_plan
+
+    dtype = jnp.dtype(dtype or jnp.float32)
+    itemsize = dtype.itemsize
+    if have_axis_mats is None:
+        have_axis_mats = len(geom.coarse_shape) > 1
+    if route is None:
+        route = route_for(geom, have_axis_mats=have_axis_mats,
+                          itemsize=itemsize)
+    if route == ROUTE_REFERENCE:
+        return []
+    csz, fsz = geom.n_csz, geom.n_fsz
+    s = max(1, fsz // 2)
+    q_max = (csz - 1) // s
+    pad = 2 * geom.b if geom.boundary == "reflect" else 0
+
+    if route in (ROUTE_STATIONARY_1D, ROUTE_CHARTED_1D):
+        charted = route == ROUTE_CHARTED_1D
+        t = geom.T[0]
+        b_f = block_families or autotune_block_families(
+            t, csz, fsz, charted=charted, itemsize=itemsize)
+        b_b = sample_block or autotune_batch_block(
+            samples, t, csz, fsz, charted=charted, block_families=b_f,
+            itemsize=itemsize)
+        kw = dict(batch=samples, t=t, coarse_len=geom.coarse_shape[0] + pad,
+                  n_csz=csz, n_fsz=fsz, block_families=b_f, batch_block=b_b,
+                  dtype=dtype, accum_dtype=accum_dtype, charted=charted)
+        return [refine_fwd_launch_plan(**kw),
+                refine_adjoint_launch_plan(**kw)]
+
+    if route == ROUTE_ND_FUSED:
+        from .nd_fused import fused_launch_shapes, nd_fused_launch_plan
+
+        charted = _pyramid_charted(geom)
+        T = tuple(geom.T)
+        tuned = autotune_nd_fused(geom, charted=charted, samples=samples,
+                                  itemsize=itemsize)
+        if tuned is None:
+            raise ValueError(
+                "nd-fused route on a level whose minimal tile busts the "
+                "VMEM budget — dispatch would route it to the per-axis "
+                "passes")
+        b_f, s_b = tuned
+        if block_families is not None:
+            b_f = max(min(block_families, T[0]), q_max, 1)
+        if sample_block is not None:
+            s_b = max(1, min(sample_block, samples))
+        sh = fused_launch_shapes(geom, samples=samples, b_f=b_f, s_b=s_b)
+        nd, sp, l0p = sh["nd"], sh["sp"], sh["l0p"]
+        lp_trail, prod_f = sh["lp_trail"], sh["prod_f"]
+        plans = [nd_fused_launch_plan(
+            nd=nd, csz=csz, fsz=fsz, T=T, charted=charted, b_f=b_f,
+            s_b=s_b, sp=sp, l0p=l0p, lp_trail=lp_trail, nblk=sh["nblk"],
+            prod_f=prod_f, dtype=dtype, accum_dtype=accum_dtype)]
+        # fixed-matrix backward (nd_fused._core_bwd): 1-D adjoints in
+        # reverse axis order on the padded operand extents
+        t0p = sh["nblk"] * b_f
+        f_trail = tuple(T[a] * fsz for a in range(1, nd))
+        bf0 = autotune_block_families(t0p, csz, fsz, charted=charted[0])
+        plans.append(refine_adjoint_launch_plan(
+            batch=sp * prod_f, t=t0p, coarse_len=l0p, n_csz=csz, n_fsz=fsz,
+            block_families=bf0, batch_block=1, dtype=dtype,
+            accum_dtype=accum_dtype, charted=charted[0]))
+        for a in range(1, nd):
+            batch_a = sp * l0p
+            for j in range(1, a):
+                batch_a *= lp_trail[j - 1]
+            for j in range(a + 1, nd):
+                batch_a *= f_trail[j - 1]
+            bf_a = autotune_block_families(T[a], csz, fsz,
+                                           charted=charted[a])
+            plans.append(refine_adjoint_launch_plan(
+                batch=batch_a, t=T[a], coarse_len=(T[a] + q_max) * s,
+                n_csz=csz, n_fsz=fsz, block_families=bf_a, batch_block=1,
+                dtype=dtype, accum_dtype=accum_dtype, charted=charted[a],
+                noise=False))
+        return plans
+
+    if route == ROUTE_AXES_ND:
+        nd = len(geom.coarse_shape)
+        T = tuple(geom.T)
+        fwd, bwd = [], []
+        for a in range(nd - 1, -1, -1):
+            ag = geom.axis(a)
+            charted_a = ag.kept_T[0] > 1
+            batch_a = samples
+            for j in range(a):
+                batch_a *= geom.coarse_shape[j]
+            for j in range(a + 1, nd):
+                batch_a *= T[j] * fsz
+            bf = block_families or autotune_block_families(
+                ag.T[0], csz, fsz, charted=charted_a, itemsize=itemsize)
+            kw = dict(batch=batch_a, t=T[a],
+                      coarse_len=geom.coarse_shape[a] + pad, n_csz=csz,
+                      n_fsz=fsz, block_families=bf, batch_block=1,
+                      dtype=dtype, accum_dtype=accum_dtype,
+                      charted=charted_a, noise=a == 0)
+            fwd.append(refine_fwd_launch_plan(**kw))
+            bwd.append(refine_adjoint_launch_plan(**kw))
+        return fwd + bwd[::-1]
+
+    raise ValueError(f"no launch plans for route {route!r}")
+
+
+def chart_launch_plans(chart, *, samples: int = 1, dtype=None,
+                       accum_dtype: str = "float32",
+                       have_axis_mats: bool | None = None,
+                       pyramid: bool = True,
+                       sample_block: int | None = None,
+                       vmem_budget: int = VMEM_BUDGET_BYTES) -> list:
+    """Launch-plan export for a whole chart, mirroring ``plan()`` routing.
+
+    One group dict per launch unit: ``{"level", "route", "geom",
+    "plans"}``. When the §11 pyramid cover fires, the covered prefix is
+    ONE group (``route="pyramid"``, ``level=(0, k-1)``, ``geom`` the list
+    of covered geometries) whose single plan is the multi-level launch;
+    the remaining levels follow with their per-level forward + adjoint
+    plans. Reference-routed levels appear with an empty plan list so the
+    verifier can still see them. ``sample_block`` overrides the pyramid
+    cover's autotuned sample block (the tile-sweep tests drive it).
+    """
+    from .pyramid import pyramid_launch_plan
+
+    if have_axis_mats is None:
+        have_axis_mats = chart.ndim > 1
+    dtype = jnp.dtype(dtype or jnp.float32)
+    itemsize = dtype.itemsize
+    cover = (pyramid_cover(chart, have_axis_mats=have_axis_mats,
+                           samples=samples, itemsize=itemsize,
+                           vmem_budget=vmem_budget) if pyramid else None)
+    k_cov, s_b_cov = cover if cover is not None else (0, None)
+    groups = []
+    if k_cov:
+        geoms = [LevelGeom.for_level(chart, lvl) for lvl in range(k_cov)]
+        fsz, csz = geoms[0].n_fsz, geoms[0].n_csz
+        s_b = max(1, min(sample_block or s_b_cov or 1, samples))
+        sp = -(-samples // s_b) * s_b
+        xi_shapes, r_shapes, d_shapes, levels = [], [], [], []
+        for g in geoms:
+            T = tuple(g.T)
+            ch = _pyramid_charted(g)
+            prod_f = 1
+            for a in range(1, len(T)):
+                prod_f *= T[a] * fsz
+            xi_shapes.append((sp, T[0] * fsz, prod_f))
+            r_shapes.append([(T[a], fsz, csz) if ch[a] else (fsz, csz)
+                             for a in range(len(T))])
+            d_shapes.append((T[0], fsz, fsz) if ch[0] else (fsz, fsz))
+            levels.append((T, tuple(g.coarse_shape)))
+        groups.append({
+            "level": (0, k_cov - 1), "route": ROUTE_PYRAMID, "geom": geoms,
+            "plans": [pyramid_launch_plan(
+                field_shape=(sp,) + tuple(geoms[0].coarse_shape),
+                xi_shapes=xi_shapes, r_shapes=r_shapes, d_shapes=d_shapes,
+                levels=levels, s_b=s_b, fsz=fsz, dtype=dtype,
+                accum_dtype=accum_dtype)],
+        })
+    for lvl in range(k_cov, chart.n_levels):
+        geom = LevelGeom.for_level(chart, lvl)
+        route = route_for(geom, have_axis_mats=have_axis_mats,
+                          itemsize=itemsize)
+        groups.append({"level": lvl, "route": route, "geom": geom,
+                       "plans": level_launch_plans(
+                           geom, route, samples=samples, dtype=dtype,
+                           accum_dtype=accum_dtype,
+                           have_axis_mats=have_axis_mats)})
+    return groups
+
+
 def refine(field: Array, xi: Array, r: Array, d: Array, geom: LevelGeom, *,
            axis_mats=None, backend: str | None = None,
            block_families: int | None = None,

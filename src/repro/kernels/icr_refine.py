@@ -67,8 +67,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.custom_derivatives import SymbolicZero
-from jax.experimental import pallas as pl
 
+from .launch import IndexMap, LaunchPlan, OperandSpec, pad_to, run_plan
 from .ref import windows_1d
 
 Array = jnp.ndarray
@@ -274,180 +274,239 @@ def _block_shapes(t: int, batch: int, n_csz: int, n_fsz: int,
     return s, b_f, nblk, b_b, nbb
 
 
-def _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz):
-    """Pad coarse so every block's main+halo view is in bounds, xi to a
-    whole number of blocks. Garbage families are sliced off by the caller."""
+# Named index maps (DESIGN.md §14): the grid is (family block i, batch
+# block b) with batch innermost, so blocked matrix operands stay VMEM-
+# resident across the whole batch. The names appear verbatim in verifier
+# findings and plan descriptions.
+_IM_BI = IndexMap("(b, i)", lambda i, b: (b, i))
+_IM_BI1 = IndexMap("(b, i + 1)", lambda i, b: (b, i + 1))
+_IM_BI0 = IndexMap("(b, i, 0)", lambda i, b: (b, i, 0))
+_IM_BI10 = IndexMap("(b, i + 1, 0)", lambda i, b: (b, i + 1, 0))
+_IM_00 = IndexMap("(0, 0)", lambda i, b: (0, 0))
+_IM_I00 = IndexMap("(i, 0, 0)", lambda i, b: (i, 0, 0))
+_IM_I100 = IndexMap("(i + 1, 0, 0)", lambda i, b: (i + 1, 0, 0))
+
+
+def refine_fwd_launch_plan(*, batch: int, t: int, coarse_len: int,
+                           n_csz: int, n_fsz: int, block_families: int,
+                           batch_block: int, dtype, accum_dtype,
+                           charted: bool, noise: bool = True) -> LaunchPlan:
+    """Declarative launch geometry of one forward 1-D refinement launch.
+
+    This is the single source of truth: the impls pad their operands to
+    the plan's array shapes and :func:`run_plan` builds the pallas_call
+    from it, and ``dispatch.level_launch_plans`` exports the identical
+    record to ``analysis.kernel_verify`` for coverage/bounds proofs.
+    """
+    s, b_f, nblk, b_b, nbb = _block_shapes(
+        t, batch, n_csz, n_fsz, block_families, batch_block)
     b_c = b_f * s
-    need = (nblk + 1) * b_c  # +1 block: the shifted halo view of the last blk
-    pad_c = need - coarse.shape[-1]
-    if pad_c > 0:
-        coarse = jnp.pad(coarse, [(0, 0)] * (coarse.ndim - 1) + [(0, pad_c)])
-    if xi is not None:
-        pad_t = nblk * b_f - t
-        if pad_t > 0:
-            xi = jnp.pad(
-                xi, [(0, 0)] * (xi.ndim - 2) + [(0, pad_t), (0, 0)]
-            )
-    return coarse, xi
+    q_max = (n_csz - 1) // s
+    dtype = jnp.dtype(dtype).name
+    # +1 block: the shifted halo view of the last block must stay in
+    # bounds; round a longer incoming buffer up to whole blocks.
+    l_pad = max((nblk + 1) * b_c, -(-coarse_len // b_c) * b_c)
+    coarse_shape = (nbb * b_b, l_pad)
+    inputs = [
+        OperandSpec("coarse", (b_b, b_c), _IM_BI, coarse_shape, dtype,
+                    overhang=((0, 0), (0, q_max * s))),
+        OperandSpec("coarse_halo", (b_b, b_c), _IM_BI1, coarse_shape, dtype,
+                    halo_of="coarse"),
+    ]
+    if noise:
+        inputs.append(OperandSpec("xi", (b_b, b_f, n_fsz), _IM_BI0,
+                                  (nbb * b_b, nblk * b_f, n_fsz), dtype))
+    if charted:
+        inputs.append(OperandSpec("r", (b_f, n_fsz, n_csz), _IM_I00,
+                                  (nblk * b_f, n_fsz, n_csz), dtype))
+        if noise:
+            inputs.append(OperandSpec("d", (b_f, n_fsz, n_fsz), _IM_I00,
+                                      (nblk * b_f, n_fsz, n_fsz), dtype))
+    else:
+        inputs.append(OperandSpec("r", (n_fsz, n_csz), _IM_00,
+                                  (n_fsz, n_csz), dtype))
+        if noise:
+            inputs.append(OperandSpec("d", (n_fsz, n_fsz), _IM_00,
+                                      (n_fsz, n_fsz), dtype))
+    out = OperandSpec("fine", (b_b, b_f * n_fsz), _IM_BI,
+                      (nbb * b_b, nblk * b_f * n_fsz), dtype)
+    name = ("charted" if charted else "stationary") + ("" if noise else "_nn")
+    return LaunchPlan(
+        kernel=f"refine_{name}_fwd", grid=(nblk, nbb),
+        inputs=tuple(inputs), outputs=(out,),
+        accum_dtype=jnp.dtype(accum_dtype).name,
+        params=dict(kind="fwd", charted=charted, noise=noise, t=t,
+                    batch=batch, coarse_len=coarse_len, n_csz=n_csz,
+                    n_fsz=n_fsz, s=s, b_f=b_f, b_b=b_b, nblk=nblk, nbb=nbb),
+    )
 
 
-def _pad_batch(arrs, batch, b_b, nbb):
-    pad_b = nbb * b_b - batch
-    if pad_b == 0:
-        return arrs
-    return [None if a is None
-            else jnp.pad(a, [(0, pad_b)] + [(0, 0)] * (a.ndim - 1))
-            for a in arrs]
+_FWD_KERNELS = {
+    (False, True): _stationary_kernel,
+    (False, False): _stationary_nn_kernel,
+    (True, True): _charted_kernel,
+    (True, False): _charted_nn_kernel,
+}
+
+
+def _run_fwd(plan: LaunchPlan, coarse, xi, r, d, interpret) -> Array:
+    p = plan.params
+    kern = functools.partial(
+        _FWD_KERNELS[(p["charted"], p["noise"])], b_b=p["b_b"], b_f=p["b_f"],
+        s=p["s"], n_csz=p["n_csz"], n_fsz=p["n_fsz"],
+        accum=jnp.dtype(plan.accum_dtype),
+    )
+    coarse = pad_to(coarse, plan.operand("coarse").array_shape)
+    operands = [coarse, coarse]
+    if p["noise"]:
+        operands.append(pad_to(xi, plan.operand("xi").array_shape))
+    operands.append(pad_to(r, plan.operand("r").array_shape))
+    if p["noise"]:
+        operands.append(pad_to(d, plan.operand("d").array_shape))
+    out = run_plan(kern, plan, operands, interpret=interpret)
+    return out[: p["batch"], : p["t"] * p["n_fsz"]]
 
 
 def _refine_stationary_impl(meta, coarse: Array, xi: Array, r: Array,
                             d: Array) -> Array:
     n_csz, n_fsz, block_families, batch_block, interpret, accum_name = meta
-    t = xi.shape[-2]
-    batch = coarse.shape[0]
-    s, b_f, nblk, b_b, nbb = _block_shapes(
-        t, batch, n_csz, n_fsz, block_families, batch_block)
-    coarse, xi = _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz)
-    coarse, xi = _pad_batch([coarse, xi], batch, b_b, nbb)
-    b_c = b_f * s
-
-    kern = functools.partial(
-        _stationary_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz,
-        accum=jnp.dtype(accum_name),
-    )
-    out = pl.pallas_call(
-        kern,
-        grid=(nblk, nbb),  # batch innermost: blocked operands stay resident
-        in_specs=[
-            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),        # main
-            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i + 1)),    # halo view
-            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
-            pl.BlockSpec((n_fsz, n_csz), lambda i, b: (0, 0)),
-            pl.BlockSpec((n_fsz, n_fsz), lambda i, b: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((b_b, b_f * n_fsz), lambda i, b: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((nbb * b_b, nblk * b_f * n_fsz),
-                                       coarse.dtype),
-        interpret=interpret,
-    )(coarse, coarse, xi, r, d)
-    return out[:batch, : t * n_fsz]
+    plan = refine_fwd_launch_plan(
+        batch=coarse.shape[0], t=xi.shape[-2], coarse_len=coarse.shape[-1],
+        n_csz=n_csz, n_fsz=n_fsz, block_families=block_families,
+        batch_block=batch_block, dtype=coarse.dtype, accum_dtype=accum_name,
+        charted=False)
+    return _run_fwd(plan, coarse, xi, r, d, interpret)
 
 
 def _refine_stationary_nn_impl(meta, coarse: Array, r: Array) -> Array:
     t, n_csz, n_fsz, block_families, batch_block, interpret, accum_name = meta
-    batch = coarse.shape[0]
-    s, b_f, nblk, b_b, nbb = _block_shapes(
-        t, batch, n_csz, n_fsz, block_families, batch_block)
-    coarse, _ = _pad_operands(coarse, None, t, s, b_f, nblk, n_csz)
-    (coarse,) = _pad_batch([coarse], batch, b_b, nbb)
-    b_c = b_f * s
-
-    kern = functools.partial(
-        _stationary_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-        n_fsz=n_fsz, accum=jnp.dtype(accum_name),
-    )
-    out = pl.pallas_call(
-        kern,
-        grid=(nblk, nbb),
-        in_specs=[
-            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
-            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i + 1)),
-            pl.BlockSpec((n_fsz, n_csz), lambda i, b: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((b_b, b_f * n_fsz), lambda i, b: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((nbb * b_b, nblk * b_f * n_fsz),
-                                       coarse.dtype),
-        interpret=interpret,
-    )(coarse, coarse, r)
-    return out[:batch, : t * n_fsz]
+    plan = refine_fwd_launch_plan(
+        batch=coarse.shape[0], t=t, coarse_len=coarse.shape[-1],
+        n_csz=n_csz, n_fsz=n_fsz, block_families=block_families,
+        batch_block=batch_block, dtype=coarse.dtype, accum_dtype=accum_name,
+        charted=False, noise=False)
+    return _run_fwd(plan, coarse, None, r, None, interpret)
 
 
 def _refine_charted_impl(meta, coarse: Array, xi: Array, r: Array,
                          d: Array) -> Array:
     n_csz, n_fsz, block_families, batch_block, interpret, accum_name = meta
-    t = xi.shape[-2]
-    batch = coarse.shape[0]
-    s, b_f, nblk, b_b, nbb = _block_shapes(
-        t, batch, n_csz, n_fsz, block_families, batch_block)
-    coarse, xi = _pad_operands(coarse, xi, t, s, b_f, nblk, n_csz)
-    coarse, xi = _pad_batch([coarse, xi], batch, b_b, nbb)
-    pad_t = nblk * b_f - t
-    if pad_t > 0:
-        r = jnp.pad(r, [(0, pad_t), (0, 0), (0, 0)])
-        d = jnp.pad(d, [(0, pad_t), (0, 0), (0, 0)])
-    b_c = b_f * s
-
-    kern = functools.partial(
-        _charted_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz,
-        accum=jnp.dtype(accum_name),
-    )
-    out = pl.pallas_call(
-        kern,
-        grid=(nblk, nbb),
-        in_specs=[
-            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
-            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i + 1)),
-            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
-            pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i, 0, 0)),
-            pl.BlockSpec((b_f, n_fsz, n_fsz), lambda i, b: (i, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((b_b, b_f * n_fsz), lambda i, b: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((nbb * b_b, nblk * b_f * n_fsz),
-                                       coarse.dtype),
-        interpret=interpret,
-    )(coarse, coarse, xi, r, d)
-    return out[:batch, : t * n_fsz]
+    plan = refine_fwd_launch_plan(
+        batch=coarse.shape[0], t=xi.shape[-2], coarse_len=coarse.shape[-1],
+        n_csz=n_csz, n_fsz=n_fsz, block_families=block_families,
+        batch_block=batch_block, dtype=coarse.dtype, accum_dtype=accum_name,
+        charted=True)
+    return _run_fwd(plan, coarse, xi, r, d, interpret)
 
 
 def _refine_charted_nn_impl(meta, coarse: Array, r: Array) -> Array:
     t, n_csz, n_fsz, block_families, batch_block, interpret, accum_name = meta
-    batch = coarse.shape[0]
-    s, b_f, nblk, b_b, nbb = _block_shapes(
-        t, batch, n_csz, n_fsz, block_families, batch_block)
-    coarse, _ = _pad_operands(coarse, None, t, s, b_f, nblk, n_csz)
-    (coarse,) = _pad_batch([coarse], batch, b_b, nbb)
-    pad_t = nblk * b_f - t
-    if pad_t > 0:
-        r = jnp.pad(r, [(0, pad_t), (0, 0), (0, 0)])
-    b_c = b_f * s
-
-    kern = functools.partial(
-        _charted_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz, n_fsz=n_fsz,
-        accum=jnp.dtype(accum_name),
-    )
-    out = pl.pallas_call(
-        kern,
-        grid=(nblk, nbb),
-        in_specs=[
-            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
-            pl.BlockSpec((b_b, b_c), lambda i, b: (b, i + 1)),
-            pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((b_b, b_f * n_fsz), lambda i, b: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((nbb * b_b, nblk * b_f * n_fsz),
-                                       coarse.dtype),
-        interpret=interpret,
-    )(coarse, coarse, r)
-    return out[:batch, : t * n_fsz]
+    plan = refine_fwd_launch_plan(
+        batch=coarse.shape[0], t=t, coarse_len=coarse.shape[-1],
+        n_csz=n_csz, n_fsz=n_fsz, block_families=block_families,
+        batch_block=batch_block, dtype=coarse.dtype, accum_dtype=accum_name,
+        charted=True, noise=False)
+    return _run_fwd(plan, coarse, None, r, None, interpret)
 
 
 # -- adjoint launches -----------------------------------------------------------
-def _adjoint_shapes(g, n_csz, n_fsz, block_families, batch_block):
-    """Grid/padding for one adjoint launch. g: (B, T, n_fsz) fine cotangent.
+def refine_adjoint_launch_plan(*, batch: int, t: int, coarse_len: int,
+                               n_csz: int, n_fsz: int, block_families: int,
+                               batch_block: int, dtype, accum_dtype,
+                               charted: bool, noise: bool = True
+                               ) -> LaunchPlan:
+    """Declarative launch geometry of one adjoint (transpose) launch.
 
     The adjoint flips the halo direction: coarse-block i receives window
-    cotangents from its own g-block plus the *previous* block's tail. Front-
-    padding g by one zero block lets the halo view use index map ``i`` while
-    the main view uses ``i + 1`` (in-bounds at i = 0, zero contribution). One
-    extra grid step (nblk + 1) covers the coarse tail the last windows
-    overhang into; its main g-block is the zero back-padding.
+    cotangents from its own g-block plus the *previous* block's tail.
+    Front-padding g by one zero block lets the halo view use index map
+    ``(b, i, 0)`` while the main view uses ``(b, i + 1, 0)`` (in-bounds at
+    i = 0, zero contribution). One extra grid step (nblk + 1) covers the
+    coarse tail the last windows overhang into; its main g-block is the
+    zero back-padding. In the charted variant the halo families' window
+    cotangents need the *previous* block's stencils, so r rides along
+    twice exactly like g (main + shifted view).
     """
-    t = g.shape[-2]
-    batch = g.shape[0]
     s, b_f, nblk, b_b, nbb = _block_shapes(
         t, batch, n_csz, n_fsz, block_families, batch_block)
-    pad = [(0, nbb * b_b - batch), (b_f, (nblk + 1) * b_f - t), (0, 0)]
-    return t, s, b_f, nblk, b_b, nbb, jnp.pad(g, pad)
+    b_c = b_f * s
+    q_max = (n_csz - 1) // s
+    dtype = jnp.dtype(dtype).name
+    g_shape = (nbb * b_b, (nblk + 2) * b_f, n_fsz)
+    inputs = [
+        OperandSpec("g", (b_b, b_f, n_fsz), _IM_BI10, g_shape, dtype,
+                    overhang=((0, 0), (q_max, 0), (0, 0))),
+        OperandSpec("g_halo", (b_b, b_f, n_fsz), _IM_BI0, g_shape, dtype,
+                    halo_of="g"),
+    ]
+    if charted:
+        r_shape = ((nblk + 2) * b_f, n_fsz, n_csz)
+        inputs.append(OperandSpec("r", (b_f, n_fsz, n_csz), _IM_I100,
+                                  r_shape, dtype,
+                                  overhang=((q_max, 0), (0, 0), (0, 0))))
+        inputs.append(OperandSpec("r_halo", (b_f, n_fsz, n_csz), _IM_I00,
+                                  r_shape, dtype, halo_of="r"))
+        if noise:
+            inputs.append(OperandSpec("d", (b_f, n_fsz, n_fsz), _IM_I100,
+                                      ((nblk + 2) * b_f, n_fsz, n_fsz),
+                                      dtype))
+    else:
+        inputs.append(OperandSpec("r", (n_fsz, n_csz), _IM_00,
+                                  (n_fsz, n_csz), dtype))
+        if noise:
+            inputs.append(OperandSpec("d", (n_fsz, n_fsz), _IM_00,
+                                      (n_fsz, n_fsz), dtype))
+    outputs = [OperandSpec("dcoarse", (b_b, b_c), _IM_BI,
+                           (nbb * b_b, (nblk + 1) * b_c), dtype)]
+    if noise:
+        outputs.append(OperandSpec("dxi", (b_b, b_f, n_fsz), _IM_BI0,
+                                   (nbb * b_b, (nblk + 1) * b_f, n_fsz),
+                                   dtype))
+    name = ("charted" if charted else "stationary") + ("" if noise else "_nn")
+    return LaunchPlan(
+        kernel=f"refine_{name}_adjoint", grid=(nblk + 1, nbb),
+        inputs=tuple(inputs), outputs=tuple(outputs),
+        accum_dtype=jnp.dtype(accum_dtype).name,
+        params=dict(kind="bwd", charted=charted, noise=noise, t=t,
+                    batch=batch, coarse_len=coarse_len, n_csz=n_csz,
+                    n_fsz=n_fsz, s=s, b_f=b_f, b_b=b_b, nblk=nblk, nbb=nbb),
+    )
+
+
+_ADJ_KERNELS = {
+    (False, True): _stationary_adjoint_kernel,
+    (False, False): _stationary_adjoint_nn_kernel,
+    (True, True): _charted_adjoint_kernel,
+    (True, False): _charted_adjoint_nn_kernel,
+}
+
+
+def _run_adjoint(plan: LaunchPlan, g, r, d, interpret):
+    p = plan.params
+    batch, t, b_f, nblk = p["batch"], p["t"], p["b_f"], p["nblk"]
+    kern = functools.partial(
+        _ADJ_KERNELS[(p["charted"], p["noise"])], b_b=p["b_b"], b_f=b_f,
+        s=p["s"], n_csz=p["n_csz"], n_fsz=p["n_fsz"],
+        accum=jnp.dtype(plan.accum_dtype),
+    )
+    # front-pad one zero block (halo at i = 0), back-pad to whole blocks
+    pad_fam = (b_f, (nblk + 1) * b_f - t)
+    g_pad = jnp.pad(g, [(0, p["nbb"] * p["b_b"] - batch), pad_fam, (0, 0)])
+    operands = [g_pad, g_pad]
+    if p["charted"]:
+        r_pad = jnp.pad(r, [pad_fam, (0, 0), (0, 0)])
+        operands += [r_pad, r_pad]
+        if p["noise"]:
+            operands.append(jnp.pad(d, [pad_fam, (0, 0), (0, 0)]))
+    else:
+        operands.append(r)
+        if p["noise"]:
+            operands.append(d)
+    out = run_plan(kern, plan, operands, interpret=interpret)
+    if p["noise"]:
+        dc, dxi = out
+        return dc[:batch, :p["coarse_len"]], dxi[:batch, :t]
+    return out[:batch, :p["coarse_len"]]
 
 
 @functools.partial(
@@ -472,55 +531,11 @@ def refine_stationary_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
     """
     batch = g.shape[0]
     g = g.reshape(batch, -1, n_fsz)
-    t, s, b_f, nblk, b_b, nbb, g_pad = _adjoint_shapes(
-        g, n_csz, n_fsz, block_families, batch_block)
-    b_c = b_f * s
-
-    if noise:
-        kern = functools.partial(
-            _stationary_adjoint_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-            n_fsz=n_fsz, accum=jnp.dtype(accum_dtype),
-        )
-        dc, dxi = pl.pallas_call(
-            kern,
-            grid=(nblk + 1, nbb),
-            in_specs=[
-                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i + 1, 0)),
-                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
-                pl.BlockSpec((n_fsz, n_csz), lambda i, b: (0, 0)),
-                pl.BlockSpec((n_fsz, n_fsz), lambda i, b: (0, 0)),
-            ],
-            out_specs=[
-                pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
-                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
-            ],
-            out_shape=[
-                jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_c), g.dtype),
-                jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_f, n_fsz),
-                                     g.dtype),
-            ],
-            interpret=interpret,
-        )(g_pad, g_pad, r, d)
-        return dc[:batch, :coarse_len], dxi[:batch, :t]
-
-    kern = functools.partial(
-        _stationary_adjoint_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-        n_fsz=n_fsz, accum=jnp.dtype(accum_dtype),
-    )
-    dc = pl.pallas_call(
-        kern,
-        grid=(nblk + 1, nbb),
-        in_specs=[
-            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i + 1, 0)),
-            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
-            pl.BlockSpec((n_fsz, n_csz), lambda i, b: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_c),
-                                       g.dtype),
-        interpret=interpret,
-    )(g_pad, g_pad, r)
-    return dc[:batch, :coarse_len]
+    plan = refine_adjoint_launch_plan(
+        batch=batch, t=g.shape[-2], coarse_len=coarse_len, n_csz=n_csz,
+        n_fsz=n_fsz, block_families=block_families, batch_block=batch_block,
+        dtype=g.dtype, accum_dtype=accum_dtype, charted=False, noise=noise)
+    return _run_adjoint(plan, g, r, d, interpret)
 
 
 @functools.partial(
@@ -537,65 +552,16 @@ def refine_charted_adjoint_pallas(g: Array, r: Array, d: Array = None, *,
                                   accum_dtype: str = "float32"):
     """Fused adjoint of ``refine_charted_pallas`` (per-family matrices).
 
-    The halo families' window cotangents need the *previous* block's
-    stencils, so r rides along twice exactly like g (main + shifted view).
+    See ``refine_adjoint_launch_plan`` for the halo-flip geometry; r rides
+    along twice exactly like g (main + shifted view).
     """
     batch = g.shape[0]
     g = g.reshape(batch, -1, n_fsz)
-    t, s, b_f, nblk, b_b, nbb, g_pad = _adjoint_shapes(
-        g, n_csz, n_fsz, block_families, batch_block)
-    b_c = b_f * s
-    pad_fam = [(b_f, (nblk + 1) * b_f - t)]
-    r_pad = jnp.pad(r, pad_fam + [(0, 0), (0, 0)])
-
-    if noise:
-        d_pad = jnp.pad(d, pad_fam + [(0, 0), (0, 0)])
-        kern = functools.partial(
-            _charted_adjoint_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-            n_fsz=n_fsz, accum=jnp.dtype(accum_dtype),
-        )
-        dc, dxi = pl.pallas_call(
-            kern,
-            grid=(nblk + 1, nbb),
-            in_specs=[
-                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i + 1, 0)),
-                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
-                pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i + 1, 0, 0)),
-                pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i, 0, 0)),
-                pl.BlockSpec((b_f, n_fsz, n_fsz), lambda i, b: (i + 1, 0, 0)),
-            ],
-            out_specs=[
-                pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
-                pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
-            ],
-            out_shape=[
-                jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_c), g.dtype),
-                jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_f, n_fsz),
-                                     g.dtype),
-            ],
-            interpret=interpret,
-        )(g_pad, g_pad, r_pad, r_pad, d_pad)
-        return dc[:batch, :coarse_len], dxi[:batch, :t]
-
-    kern = functools.partial(
-        _charted_adjoint_nn_kernel, b_b=b_b, b_f=b_f, s=s, n_csz=n_csz,
-        n_fsz=n_fsz, accum=jnp.dtype(accum_dtype),
-    )
-    dc = pl.pallas_call(
-        kern,
-        grid=(nblk + 1, nbb),
-        in_specs=[
-            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i + 1, 0)),
-            pl.BlockSpec((b_b, b_f, n_fsz), lambda i, b: (b, i, 0)),
-            pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i + 1, 0, 0)),
-            pl.BlockSpec((b_f, n_fsz, n_csz), lambda i, b: (i, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((b_b, b_c), lambda i, b: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((nbb * b_b, (nblk + 1) * b_c),
-                                       g.dtype),
-        interpret=interpret,
-    )(g_pad, g_pad, r_pad, r_pad)
-    return dc[:batch, :coarse_len]
+    plan = refine_adjoint_launch_plan(
+        batch=batch, t=g.shape[-2], coarse_len=coarse_len, n_csz=n_csz,
+        n_fsz=n_fsz, block_families=block_families, batch_block=batch_block,
+        dtype=g.dtype, accum_dtype=accum_dtype, charted=True, noise=noise)
+    return _run_adjoint(plan, g, r, d, interpret)
 
 
 # -- custom VJP registration ----------------------------------------------------

@@ -47,7 +47,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.custom_derivatives import SymbolicZero
-from jax.experimental import pallas as pl
 
 from repro.core.refine import LevelGeom
 
@@ -56,6 +55,7 @@ from .icr_refine import (
     refine_charted_adjoint_pallas,
     refine_stationary_adjoint_pallas,
 )
+from .launch import IndexMap, LaunchPlan, OperandSpec, pad_to, run_plan
 from .ref import windows_1d
 
 Array = jnp.ndarray
@@ -149,56 +149,110 @@ def _nd_fused_kernel(*refs, nd: int, csz: int, fsz: int, T: tuple,
     out_ref[...] = fine.reshape(s_b, b_f * fsz, prod_f).astype(out_ref.dtype)
 
 
+# Named index maps — grid (family block i, sample block b), samples
+# innermost so the blocked matrices stay VMEM-resident (DESIGN.md §14).
+_IM_BI0 = IndexMap("(b, i, 0)", lambda i, b: (b, i, 0))
+_IM_00 = IndexMap("(0, 0)", lambda i, b: (0, 0))
+_IM_000 = IndexMap("(0, 0, 0)", lambda i, b: (0, 0, 0))
+_IM_I00 = IndexMap("(i, 0, 0)", lambda i, b: (i, 0, 0))
+
+
+def fused_launch_shapes(geom: LevelGeom, *, samples: int, b_f: int,
+                        s_b: int) -> dict:
+    """Padded operand extents of one megakernel launch.
+
+    The single source of truth shared by ``refine_nd_fused``'s padding and
+    the geom-level plan export (``dispatch.level_launch_plans``) — the
+    shapes the wrapper pads to and the shapes the verifier proves coverage
+    for cannot drift apart.
+    """
+    nd = len(geom.coarse_shape)
+    fsz, csz, b = geom.n_fsz, geom.n_csz, geom.b
+    s = fsz // 2
+    q_max = (csz - 1) // s
+    T = tuple(geom.T)
+    pad = 2 * b if geom.boundary == "reflect" else 0
+    lp_trail = tuple(max(geom.coarse_shape[a] + pad, (T[a] + q_max) * s)
+                     for a in range(1, nd))
+    nblk = -(-T[0] // b_f)
+    l0 = geom.coarse_shape[0] + pad
+    nblk2 = max(nblk + 1, -(-l0 // (b_f * s)))
+    prod_f = 1
+    for a in range(1, nd):
+        prod_f *= T[a] * fsz
+    return dict(nd=nd, T=T, nblk=nblk, l0p=nblk2 * b_f * s,
+                lp_trail=lp_trail, sp=-(-samples // s_b) * s_b,
+                prod_f=prod_f)
+
+
+def nd_fused_launch_plan(*, nd: int, csz: int, fsz: int, T: tuple,
+                         charted: tuple, b_f: int, s_b: int, sp: int,
+                         l0p: int, lp_trail: tuple, nblk: int, prod_f: int,
+                         dtype, accum_dtype) -> LaunchPlan:
+    """Declarative launch geometry of one fused N-D level launch."""
+    s = fsz // 2
+    q_max = (csz - 1) // s
+    nbs = sp // s_b
+    dtype = jnp.dtype(dtype).name
+    zeros_t = (0,) * (nd - 1)
+    trail = ", 0" * (nd - 1)
+    im_main = IndexMap(f"(b, i{trail})", lambda i, b: (b, i) + zeros_t)
+    im_halo = IndexMap(f"(b, i + 1{trail})",
+                       lambda i, b: (b, i + 1) + zeros_t)
+    field_shape = (sp, l0p) + tuple(lp_trail)
+    field_blk = (s_b, b_f * s) + tuple(lp_trail)
+    inputs = [
+        OperandSpec("field", field_blk, im_main, field_shape, dtype,
+                    overhang=((0, 0), (0, q_max * s)) + ((0, 0),) * (nd - 1)),
+        OperandSpec("field_halo", field_blk, im_halo, field_shape, dtype,
+                    halo_of="field"),
+        OperandSpec("xi", (s_b, b_f * fsz, prod_f), _IM_BI0,
+                    (sp, nblk * b_f * fsz, prod_f), dtype),
+    ]
+    if charted[0]:
+        inputs.append(OperandSpec("r0", (b_f, fsz, csz), _IM_I00,
+                                  (nblk * b_f, fsz, csz), dtype))
+        inputs.append(OperandSpec("d0", (b_f, fsz, fsz), _IM_I00,
+                                  (nblk * b_f, fsz, fsz), dtype))
+    else:
+        inputs.append(OperandSpec("r0", (fsz, csz), _IM_00,
+                                  (fsz, csz), dtype))
+        inputs.append(OperandSpec("d0", (fsz, fsz), _IM_00,
+                                  (fsz, fsz), dtype))
+    for a in range(1, nd):
+        if charted[a]:
+            inputs.append(OperandSpec(f"r{a}", (T[a], fsz, csz), _IM_000,
+                                      (T[a], fsz, csz), dtype))
+        else:
+            inputs.append(OperandSpec(f"r{a}", (fsz, csz), _IM_00,
+                                      (fsz, csz), dtype))
+    out = OperandSpec("fine", (s_b, b_f * fsz, prod_f), _IM_BI0,
+                      (sp, nblk * b_f * fsz, prod_f), dtype)
+    return LaunchPlan(
+        kernel="refine_nd_fused", grid=(nblk, nbs),
+        inputs=tuple(inputs), outputs=(out,),
+        accum_dtype=jnp.dtype(accum_dtype).name,
+        params=dict(kind="fwd", nd=nd, csz=csz, fsz=fsz, T=tuple(T),
+                    charted=tuple(charted), s=s, b_f=b_f, s_b=s_b,
+                    nblk=nblk, nbs=nbs, l0p=l0p,
+                    lp_trail=tuple(lp_trail), prod_f=prod_f),
+    )
+
+
 def _nd_fused_impl(meta, field: Array, xi0: Array, r0: Array, d0: Array,
                    rts: tuple) -> Array:
     nd, csz, fsz, T, charted, b_f, s_b, interpret, accum_name = meta
-    s = fsz // 2
-    sp = field.shape[0]
-    nbs = sp // s_b
-    lp_trail = field.shape[2:]
-    nblk = xi0.shape[1] // (b_f * fsz)
-    prod_f = xi0.shape[2]
-
-    zeros_t = (0,) * (nd - 1)
-    in_specs = [
-        pl.BlockSpec((s_b, b_f * s) + lp_trail,
-                     lambda i, b: (b, i) + zeros_t),               # main
-        pl.BlockSpec((s_b, b_f * s) + lp_trail,
-                     lambda i, b: (b, i + 1) + zeros_t),           # halo view
-        pl.BlockSpec((s_b, b_f * fsz, prod_f), lambda i, b: (b, i, 0)),
-    ]
-    if charted[0]:
-        in_specs += [
-            pl.BlockSpec((b_f, fsz, csz), lambda i, b: (i, 0, 0)),
-            pl.BlockSpec((b_f, fsz, fsz), lambda i, b: (i, 0, 0)),
-        ]
-    else:
-        in_specs += [
-            pl.BlockSpec((fsz, csz), lambda i, b: (0, 0)),
-            pl.BlockSpec((fsz, fsz), lambda i, b: (0, 0)),
-        ]
-    for a in range(1, nd):
-        if charted[a]:
-            in_specs.append(
-                pl.BlockSpec((T[a], fsz, csz), lambda i, b: (0, 0, 0)))
-        else:
-            in_specs.append(pl.BlockSpec((fsz, csz), lambda i, b: (0, 0)))
-
+    plan = nd_fused_launch_plan(
+        nd=nd, csz=csz, fsz=fsz, T=T, charted=charted, b_f=b_f, s_b=s_b,
+        sp=field.shape[0], l0p=field.shape[1], lp_trail=field.shape[2:],
+        nblk=xi0.shape[1] // (b_f * fsz), prod_f=xi0.shape[2],
+        dtype=field.dtype, accum_dtype=accum_name)
     kern = functools.partial(
         _nd_fused_kernel, nd=nd, csz=csz, fsz=fsz, T=T, charted=charted,
         b_f=b_f, s_b=s_b, accum=jnp.dtype(accum_name),
     )
-    out = pl.pallas_call(
-        kern,
-        grid=(nblk, nbs),  # samples innermost: blocked matrices stay resident
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((s_b, b_f * fsz, prod_f),
-                               lambda i, b: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((sp, nblk * b_f * fsz, prod_f),
-                                       field.dtype),
-        interpret=interpret,
-    )(field, field, xi0, r0, d0, *rts)
-    return out
+    return run_plan(kern, plan, (field, field, xi0, r0, d0, *rts),
+                    interpret=interpret)
 
 
 def _nd_fused_ref(meta, field: Array, xi0: Array, r0: Array, d0: Array,
@@ -406,33 +460,18 @@ def refine_nd_fused(field: Array, xi: Array, rs, ds, geom: LevelGeom, *,
     # -- excitation: pre-contract noise factors of axes 1..d-1 -----------------
     xi0 = prepare_xi0(xi, ds, T, fsz, accum=accum, storage=field.dtype)
 
-    # -- field: reflect pre-pad every axis once, then tile-shape pads ----------
+    # -- pad to the plan's operand extents (reflect pre-pad is a real array
+    # op, the rest is zero fill up to the shared launch-shape record) ---------
+    shapes = fused_launch_shapes(geom, samples=n_s, b_f=b_f, s_b=s_b)
+    nblk, sp = shapes["nblk"], shapes["sp"]
     if geom.boundary == "reflect":
         field = jnp.pad(field, [(0, 0)] + [(b, b)] * nd, mode="reflect")
-    pads = [(0, 0), (0, 0)]
-    for a in range(1, nd):
-        pads.append((0, max(0, (T[a] + q_max) * s - field.shape[1 + a])))
-    field = jnp.pad(field, pads)
-
-    nblk = -(-T[0] // b_f)
-    nblk2 = max(nblk + 1, -(-field.shape[1] // (b_f * s)))
-    l0p = nblk2 * b_f * s
-    field = jnp.pad(
-        field, [(0, 0), (0, l0p - field.shape[1])] + [(0, 0)] * (nd - 1))
-
-    pad_t0 = nblk * b_f - T[0]
-    if pad_t0 > 0:
-        xi0 = jnp.pad(xi0, [(0, 0), (0, pad_t0 * fsz), (0, 0)])
+    field = pad_to(field, (sp, shapes["l0p"]) + shapes["lp_trail"])
+    xi0 = pad_to(xi0, (sp, nblk * b_f * fsz, xi0.shape[2]))
     r0, d0 = rs[0], ds[0]
-    if charted[0] and pad_t0 > 0:
-        r0 = jnp.pad(r0, [(0, pad_t0), (0, 0), (0, 0)])
-        d0 = jnp.pad(d0, [(0, pad_t0), (0, 0), (0, 0)])
-
-    nbs = -(-n_s // s_b)
-    pad_s = nbs * s_b - n_s
-    if pad_s > 0:
-        field = jnp.pad(field, [(0, pad_s)] + [(0, 0)] * nd)
-        xi0 = jnp.pad(xi0, [(0, pad_s), (0, 0), (0, 0)])
+    if charted[0]:
+        r0 = pad_to(r0, (nblk * b_f,) + r0.shape[1:])
+        d0 = pad_to(d0, (nblk * b_f,) + d0.shape[1:])
 
     meta = (nd, csz, fsz, T, charted, b_f, s_b, interpret, accum_dtype)
     out = _nd_fused_core(meta, field, xi0, r0, d0,

@@ -1,14 +1,16 @@
-"""Jit'd public wrappers around the Pallas refinement kernels.
+"""DEPRECATED shim — use ``repro.kernels.dispatch.refine`` directly.
 
-These adapt core.refine's calling convention (LevelGeom + matrices as
-produced by ``refinement_matrices_level``) to the kernel layer. Since the
-dispatch layer landed (dispatch.py), both wrappers are thin aliases of
-``dispatch.refine``: the backend (pallas on TPU, interpret elsewhere,
-reference for uncovered geometry) and the kernel variant (stationary vs
-charted) are selected from the level geometry, not from which wrapper the
-caller picked — the old ad-hoc shape guards live there now.
+The ops layer predates the dispatch layer; its wrappers were already
+thin aliases of :func:`repro.kernels.dispatch.refine`, and with the
+launch-plan refactor (DESIGN.md §14) every caller goes through dispatch
+so the executed launch matches the exported plans.  This module stays
+importable only for backward compatibility and emits a
+``DeprecationWarning`` on use; it will be removed once nothing imports
+it.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax.numpy as jnp
 
@@ -17,6 +19,12 @@ from repro.core.refine import LevelGeom
 from . import dispatch, ref as _ref
 
 Array = jnp.ndarray
+
+
+def _warn(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{name} is deprecated; call {repl} instead",
+        DeprecationWarning, stacklevel=3)
 
 
 def _backend(interpret: bool | None) -> str | None:
@@ -28,10 +36,8 @@ def _backend(interpret: bool | None) -> str | None:
 def refine_stationary(field: Array, xi: Array, r: Array, d: Array,
                       geom: LevelGeom, *, interpret: bool | None = None,
                       block_families: int | None = None) -> Array:
-    """Drop-in replacement for core.refine.refine_level on 1-D charts.
-
-    Falls back to the jnp reference for geometry the kernels don't cover
-    (joint N-D refinement without per-axis factors)."""
+    """Deprecated alias of ``dispatch.refine`` (stationary 1-D route)."""
+    _warn("refine_stationary", "repro.kernels.dispatch.refine")
     return dispatch.refine(field, xi, r, d, geom,
                            backend=_backend(interpret),
                            block_families=block_families)
@@ -40,16 +46,20 @@ def refine_stationary(field: Array, xi: Array, r: Array, d: Array,
 def refine_charted(field: Array, xi: Array, r: Array, d: Array,
                    geom: LevelGeom, *, interpret: bool | None = None,
                    block_families: int | None = None) -> Array:
-    """Charted 1-D refinement with per-family matrices (paper §4.3)."""
+    """Deprecated alias of ``dispatch.refine`` (charted 1-D route)."""
+    _warn("refine_charted", "repro.kernels.dispatch.refine")
     return dispatch.refine(field, xi, r, d, geom,
                            backend=_backend(interpret),
                            block_families=block_families)
 
 
-# -- flat functional forms (benchmarks / tests) --------------------------------
 def refine_stationary_jnp(coarse, xi, r, d):
+    """Deprecated alias of ``ref.refine_stationary_ref``."""
+    _warn("refine_stationary_jnp", "repro.kernels.ref.refine_stationary_ref")
     return _ref.refine_stationary_ref(coarse, xi, r, d)
 
 
 def refine_charted_jnp(coarse, xi, r, d):
+    """Deprecated alias of ``ref.refine_charted_ref``."""
+    _warn("refine_charted_jnp", "repro.kernels.ref.refine_charted_ref")
     return _ref.refine_charted_ref(coarse, xi, r, d)

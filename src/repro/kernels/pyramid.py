@@ -49,8 +49,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.custom_derivatives import SymbolicZero
-from jax.experimental import pallas as pl
 
+from .launch import IndexMap, LaunchPlan, OperandSpec, run_plan
 from .nd_fused import (
     _axis_windows,
     _contract_windows,
@@ -163,6 +163,55 @@ def _pyramid_kernel(*refs, meta):
     out_ref[...] = out.astype(out_ref.dtype)
 
 
+def _sample_blocked_spec(name: str, shape, s_b: int, dtype) -> OperandSpec:
+    """Sample-slab operand: the grid runs over sample blocks only."""
+    zeros = (0,) * (len(shape) - 1)
+    im = IndexMap("(s" + ", 0" * len(zeros) + ")",
+                  lambda s, _z=zeros: (s,) + _z)
+    return OperandSpec(name, (s_b,) + tuple(shape[1:]), im, tuple(shape),
+                       dtype)
+
+
+def _resident_spec(name: str, shape, dtype) -> OperandSpec:
+    """Fully VMEM-resident operand (matrices): one block, zero index map."""
+    zeros = (0,) * len(shape)
+    im = IndexMap("(" + ", ".join(["0"] * len(shape)) + ")",
+                  lambda s, _z=zeros: _z)
+    return OperandSpec(name, tuple(shape), im, tuple(shape), dtype)
+
+
+def pyramid_launch_plan(*, field_shape, xi_shapes, r_shapes, d_shapes,
+                        levels, s_b: int, fsz: int, dtype,
+                        accum_dtype) -> LaunchPlan:
+    """Declarative launch geometry of one pyramid (multi-level) launch.
+
+    One grid axis — sample slabs — and per covered level the operand
+    bundle [ξ0, per-axis R factors, sqrt(D)0]; only the last level's fine
+    field is an output (inter-level fields never touch HBM).
+    """
+    sp = field_shape[0]
+    T_last = levels[-1][0]
+    prod_f = int(np.prod([t * fsz for t in T_last[1:]])) or 1
+    dtype = jnp.dtype(dtype).name
+    inputs = [_sample_blocked_spec("field", field_shape, s_b, dtype)]
+    for lvl in range(len(levels)):
+        inputs.append(_sample_blocked_spec(f"xi{lvl}", xi_shapes[lvl], s_b,
+                                           dtype))
+        for a, r_shape in enumerate(r_shapes[lvl]):
+            inputs.append(_resident_spec(f"r{lvl}_{a}", r_shape, dtype))
+        inputs.append(_resident_spec(f"d{lvl}", d_shapes[lvl], dtype))
+    out = OperandSpec("fine", (s_b, T_last[0] * fsz, prod_f),
+                      IndexMap("(s, 0, 0)", lambda s: (s, 0, 0)),
+                      (sp, T_last[0] * fsz, prod_f), dtype)
+    return LaunchPlan(
+        kernel="refine_pyramid", grid=(sp // s_b,),
+        inputs=tuple(inputs), outputs=(out,),
+        accum_dtype=jnp.dtype(accum_dtype).name,
+        params=dict(kind="fwd", levels=tuple(levels), s_b=s_b, fsz=fsz,
+                    n_levels=len(levels), prod_f=prod_f),
+    )
+
+
 def _pyramid_impl(meta, field: Array, xi0s, r_all, d0s) -> Array:
     (csz, fsz, boundary, b, levels, s_b, interpret, accum_name) = meta
     if interpret == "reference":
@@ -170,42 +219,20 @@ def _pyramid_impl(meta, field: Array, xi0s, r_all, d0s) -> Array:
         # fused multi-level chain as ONE jnp jit region — no Pallas
         # interpret emulation, which is slower than plain jnp on CPU
         return _pyramid_ref(meta, field, xi0s, r_all, d0s)
-    n_s = field.shape[0]
-    nbs = n_s // s_b
-    T_last = levels[-1][0]
-    prod_f = int(np.prod([t * fsz for t in T_last[1:]])) or 1
-
-    def sample_blocked(shape):
-        zeros = (0,) * (len(shape) - 1)
-        return pl.BlockSpec((s_b,) + tuple(shape[1:]),
-                            lambda s, _z=zeros: (s,) + _z)
-
-    def resident(shape):
-        zeros = (0,) * len(shape)
-        return pl.BlockSpec(tuple(shape), lambda s, _z=zeros: _z)
-
-    in_specs = [sample_blocked(field.shape)]
+    plan = pyramid_launch_plan(
+        field_shape=field.shape,
+        xi_shapes=[x.shape for x in xi0s],
+        r_shapes=[[r.shape for r in rl] for rl in r_all],
+        d_shapes=[d.shape for d in d0s],
+        levels=levels, s_b=s_b, fsz=fsz, dtype=field.dtype,
+        accum_dtype=accum_name)
     operands = [field]
     for lvl in range(len(levels)):
-        in_specs.append(sample_blocked(xi0s[lvl].shape))
         operands.append(xi0s[lvl])
-        for r in r_all[lvl]:
-            in_specs.append(resident(r.shape))
-            operands.append(r)
-        in_specs.append(resident(d0s[lvl].shape))
+        operands.extend(r_all[lvl])
         operands.append(d0s[lvl])
-
-    out = pl.pallas_call(
-        functools.partial(_pyramid_kernel, meta=meta),
-        grid=(nbs,),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((s_b, T_last[0] * fsz, prod_f),
-                               lambda s: (s, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_s, T_last[0] * fsz, prod_f),
-                                       field.dtype),
-        interpret=interpret,
-    )(*operands)
-    return out
+    return run_plan(functools.partial(_pyramid_kernel, meta=meta), plan,
+                    operands, interpret=interpret)
 
 
 def _pyramid_ref(meta, field: Array, xi0s, r_all, d0s) -> Array:

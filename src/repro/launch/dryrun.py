@@ -43,14 +43,12 @@ def run_lm_cell(arch: str, shape: str, mesh_kind: str) -> dict:
     import jax
     from repro.configs import SHAPES, get_arch, input_specs
     from repro.launch.steps import (
-        active_param_count,
-        choose_accum,
-        data_model_axes,
-        make_prefill_step,
-        make_serve_step,
-        make_train_step,
-    )
-    from repro.distributed.sharding import batch_spec, shardings_for
+    active_param_count,
+    choose_accum,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
     from repro.models import build_model
     from repro.roofline.analysis import (
         analyze_compiled,

@@ -17,7 +17,6 @@ Mesh layouts (TPU v5e pod = 16x16 = 256 chips):
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import numpy as np

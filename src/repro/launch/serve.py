@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 
 

@@ -9,15 +9,14 @@ MoE configs inside one pod's HBM).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeCell, input_specs
+from repro.configs.base import ArchConfig, ShapeCell
 from repro.distributed.sharding import (
     batch_spec,
     cache_specs,

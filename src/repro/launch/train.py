@@ -22,7 +22,6 @@ import dataclasses
 import time
 from typing import Optional
 
-import numpy as np
 import jax
 
 from repro.checkpoint import CheckpointManager
@@ -30,7 +29,6 @@ from repro.configs import get_arch
 from repro.configs.base import ShapeCell
 from repro.data import SyntheticLMData, make_batch_iterator
 from repro.distributed.fault import FaultSupervisor, StragglerMonitor
-from repro.distributed.sharding import batch_spec, shardings_for
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import choose_accum, make_train_step
 

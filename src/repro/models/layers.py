@@ -7,7 +7,6 @@ matmuls run in the activation dtype with fp32 accumulation
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,6 @@ from .layers import (
     unembed_chunked,
 )
 from .transformer import (
-    Slot,
     _init_shared_block,
     _init_slot,
     decode_hidden,
@@ -282,7 +281,6 @@ class Model:
         return rmsnorm(params["final_norm"], h, cfg.norm_eps)
 
     def _whisper_hidden(self, params, batch):
-        cfg = self.cfg
         enc_out = self._whisper_encode(params, batch["enc_embeds"])
         b, se, _ = enc_out.shape
         enc_pos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32)[None],
@@ -353,7 +351,6 @@ class Model:
                            jnp.minimum(positions, cfg.encoder.max_target - 1),
                            axis=0)
         h = h + pos_emb[:, None, :]
-        nf = cfg.encoder.n_frames
         for i, lp in enumerate(params["dec"]):
             hn = rmsnorm(lp["norm1"], h, cfg.norm_eps)
             y, cache["self"][i] = attn.attention_decode(

@@ -16,27 +16,16 @@ dominated by its 1-in-6 global layers only (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from . import attention as attn
 from . import moe as moe_mod
 from . import ssm
-from .layers import (
-    embed,
-    init_embedding,
-    init_mlp,
-    init_rmsnorm,
-    matmul,
-    mlp,
-    rmsnorm,
-    unembed_chunked,
-)
+from .layers import init_mlp, init_rmsnorm, mlp, rmsnorm
 
 Array = jnp.ndarray
 

@@ -1,6 +1,5 @@
 """Checkpointing: atomicity, async, retention, restore, restart-resume."""
 import os
-import time
 
 import numpy as np
 import pytest

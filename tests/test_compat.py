@@ -9,7 +9,6 @@ import importlib
 
 import pytest
 
-import jax
 
 PUBLIC_MODULES = [
     "repro",
@@ -33,6 +32,7 @@ PUBLIC_MODULES = [
     "repro.kernels",
     "repro.kernels.dispatch",
     "repro.kernels.icr_refine",
+    "repro.kernels.launch",
     "repro.kernels.nd",
     "repro.kernels.nd_fused",
     "repro.kernels.ops",

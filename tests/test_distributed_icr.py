@@ -11,7 +11,6 @@ import sys
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import ICR, matern32, regular_chart

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core import ICR, matern32, regular_chart
 from repro.core.charts import galactic_dust_chart, log_chart
 from repro.core.refine import LevelGeom, axis_refinement_matrices_level
-from repro.kernels import dispatch, nd, nd_fused
+from repro.kernels import dispatch, nd
 from repro.kernels.policy import BF16, FP32, DtypePolicy, resolve
 from repro.roofline import refine_level_traffic
 

@@ -9,7 +9,6 @@ import jax.numpy as jnp
 
 from repro.core import (
     ICR,
-    Chart,
     cov_errors,
     exact_cov,
     gauss_kl,
@@ -20,11 +19,7 @@ from repro.core import (
     rbf,
     regular_chart,
 )
-from repro.core.refine import (
-    LevelGeom,
-    refine_level,
-    refinement_matrices_level,
-)
+from repro.core.refine import refinement_matrices_level
 
 
 def paper_log_setup(n_csz=5, n_fsz=4, n_levels=5, target_n=200, span=50.0):

@@ -20,7 +20,6 @@ from repro.core.refine import (
 )
 from repro.kernels import dispatch, nd
 from repro.kernels import ref as R
-from repro.kernels import ops
 from repro.kernels.icr_refine import (
     refine_charted_pallas,
     refine_stationary_pallas,
@@ -89,7 +88,7 @@ def test_block_size_invariance(block):
 
 
 class TestOpsIntegration:
-    """ops.refine_* must agree with core.refine.refine_level end-to-end."""
+    """dispatch.refine must agree with core.refine.refine_level end-to-end."""
 
     def test_stationary_shrink_end_to_end(self):
         c = regular_chart(64, 2, n_csz=5, n_fsz=4)
@@ -131,7 +130,8 @@ class TestOpsIntegration:
         from repro.core.refine import refine_level
 
         want = refine_level(field, xi, r, d, geom)
-        got = ops.refine_charted(field, xi, r, d, geom, interpret=True)
+        got = dispatch.refine(field, xi, r, d, geom,
+                              backend=dispatch.BACKEND_INTERPRET)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
 
@@ -146,7 +146,7 @@ class TestOpsIntegration:
         field = jnp.asarray(rng.normal(size=geom.coarse_shape), jnp.float32)
         f = int(np.prod(geom.T))
         xi = jnp.asarray(rng.normal(size=(f, geom.n_fsz**2)), jnp.float32)
-        out = ops.refine_stationary(field, xi, r, d, geom)
+        out = dispatch.refine(field, xi, r, d, geom)
         assert out.shape == geom.fine_shape
         np.testing.assert_allclose(
             np.asarray(out), np.asarray(refine_level(field, xi, r, d, geom)),

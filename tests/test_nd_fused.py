@@ -12,7 +12,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import ICR, matern32, regular_chart
+from repro.core import matern32, regular_chart
 from repro.core.charts import Chart, galactic_dust_chart
 from repro.core.refine import (
     LevelGeom,

@@ -1,5 +1,4 @@
 """Roofline analyzer: HLO collective parsing + term arithmetic."""
-import numpy as np
 import pytest
 
 from repro.roofline.analysis import (

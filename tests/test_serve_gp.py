@@ -9,14 +9,12 @@ first, with no retrace and no matrix rebuild).
 import time
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ICR, matern32, regular_chart
-from repro.core.charts import galactic_dust_chart
-from repro.core.vi import Posterior, advi_posterior, map_posterior
+from repro.core.vi import Posterior, map_posterior
 from repro.kernels import dispatch
 from repro.launch.serve_gp import (
     GPFieldServer,

@@ -1,5 +1,4 @@
 """Sharding rules: param/batch/cache PartitionSpec policies."""
-import numpy as np
 import pytest
 
 import jax
@@ -12,7 +11,6 @@ from repro.distributed.sharding import (
     opt_state_specs,
     param_specs,
 )
-from repro.launch.mesh import make_mesh
 from repro.models import build_model
 
 

@@ -9,6 +9,13 @@ then review the git diff of the JSON goldens like any other code change.
     python tools/update_fingerprints.py [--scenario tod-bf16] ...
 
 Extra arguments are forwarded to ``repro.analysis`` verbatim.
+
+Before rewriting anything, the launch-plan verifier (DESIGN.md §14,
+``python -m repro.analysis verify``) runs over the scenarios being
+re-baselined: goldens must never be regenerated on top of a launch the
+verifier can prove broken (coverage gap, out-of-bounds halo, swapped
+adjoint, ...), because that would bless the defect as the new baseline.
+``--force`` skips the gate — the findings are still printed.
 """
 import pathlib
 import sys
@@ -18,5 +25,37 @@ sys.path.insert(0, str(REPO / "src"))
 
 from repro.analysis.__main__ import main  # noqa: E402
 
+
+def _verifier_gate(argv) -> int:
+    """Refuse to re-baseline while the launch-plan verifier has findings."""
+    from repro.analysis import SCENARIOS
+    from repro.analysis.kernel_verify import verify_scenario
+
+    want = [argv[i + 1] for i, a in enumerate(argv) if a == "--scenario"]
+    cells = SCENARIOS()
+    if want:
+        cells = [s for s in cells if s.label in set(want)]
+    findings = []
+    for scn in cells:
+        findings += verify_scenario(scn)
+    if not findings:
+        return 0
+    print("update_fingerprints: the launch-plan verifier reports "
+          f"{len(findings)} finding(s) — refusing to re-baseline the "
+          "goldens on top of a provably broken launch:", file=sys.stderr)
+    for f in findings:
+        print(f"  {f}", file=sys.stderr)
+    print("fix the kernels (or pass --force to override).", file=sys.stderr)
+    return 1
+
+
 if __name__ == "__main__":
-    sys.exit(main(["--update", *sys.argv[1:]]))
+    argv = [a for a in sys.argv[1:] if a != "--force"]
+    force = len(argv) != len(sys.argv) - 1
+    gate = _verifier_gate(argv)
+    if gate and not force:
+        sys.exit(gate)
+    if gate:
+        print("update_fingerprints: --force given, re-baselining anyway",
+              file=sys.stderr)
+    sys.exit(main(["--update", *argv]))
