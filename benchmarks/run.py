@@ -11,6 +11,9 @@
   serving   — GP posterior serving (DESIGN.md §12): the three chart
               scenarios x fp32/bf16 through launch.serve_gp's slab-packed
               server — warm samples/s + fields/s, modeled bytes, bw util
+  serving_mesh — mesh serving (DESIGN.md §15): samples/s at mesh 1 vs 8
+              virtual CPU devices + fault-recovery time (device kill ->
+              first completed slab), via repro.distributed.chaos --bench
   scaling   — paper Eq. 13 (O(N) check, log-log slope)
   vi        — §3.2 end-to-end: standardized GP regression (MAP)
   grad      — one value_and_grad step of the §3.2 loss: fused adjoint
@@ -38,7 +41,7 @@ _ROWS = []
 def _report(name: str, value: float, derived: str = "", **extra):
     print(f"{name},{value:.6g},{derived}", flush=True)
     row = {"name": name, "us_per_call": float(value), "derived": derived}
-    for key in ("route", "backend", "hbm_bytes", "bw_util", "dtype"):
+    for key in ("route", "backend", "hbm_bytes", "bw_util", "dtype", "mesh"):
         if key in extra and extra[key] is not None:
             row[key] = extra[key]
     _ROWS.append(row)
@@ -195,6 +198,8 @@ def main() -> None:
         "batch": lambda: speed.run_batch(_report, quick=args.quick),
         "dtype": lambda: speed.run_dtype(_report, quick=args.quick),
         "serving": lambda: speed.run_serving(_report, quick=args.quick),
+        "serving_mesh": lambda: speed.run_serving_mesh(_report,
+                                                       quick=args.quick),
         "scaling": lambda: speed.run_scaling(
             _report, sizes=(1024, 4096, 16384) if args.quick
             else (1024, 4096, 16384, 65536, 262144)),

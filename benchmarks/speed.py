@@ -244,9 +244,59 @@ def run_serving(report, *, quick: bool = False):
                    f"slab={slab} {rows:.0f} rows/batch "
                    f"{fields / warm:.1f} fields/s",
                    route=route, backend=backend, dtype=dt_name,
-                   hbm_bytes=hbm, bw_util=_bw_util(hbm, warm))
+                   hbm_bytes=hbm, bw_util=_bw_util(hbm, warm), mesh=1)
             report(f"serving/{name}/{dt_name}/warm_cold_ratio", cold / warm,
-                   "first-batch (compile+build) over warm-batch wall time")
+                   "first-batch (compile+build) over warm-batch wall time",
+                   mesh=1)
+
+
+def run_serving_mesh(report, *, quick: bool = False):
+    """Mesh-serving dimension (DESIGN.md §15; BENCH_PR8.json): warm
+    samples/s at mesh sizes 1 vs 8 virtual CPU devices, plus the
+    fault-recovery time — a device killed mid-stream to the first
+    completed slab after the detect → remesh → rewarm → replay cycle.
+
+    Runs ``repro.distributed.chaos --bench`` in a subprocess because
+    ``--xla_force_host_platform_device_count`` must be set before jax
+    initializes (the parent already holds a 1-device runtime). On CPU the
+    virtual 8-mesh is *emulation* (one physical socket timeslicing eight
+    XLA devices) — the mesh column tracks the schema and the recovery
+    path, not a parallel speedup.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    env.pop("REPRO_BACKEND", None)  # serving path: production backend rule
+    cmd = [sys.executable, "-m", "repro.distributed.chaos", "--bench"]
+    if not quick:
+        cmd.append("--full")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(f"chaos --bench failed:\n{out.stdout}"
+                           f"\n{out.stderr}")
+    for line in out.stdout.splitlines():
+        if not line.startswith("BENCH "):
+            continue
+        row = json.loads(line[len("BENCH "):])
+        if row.get("mode") == "recovery":
+            report("serving_mesh/tod/recovery_s", row["recovery_s"],
+                   f"device kill -> first completed slab "
+                   f"({row['replayed_slabs']} slab(s) replayed)",
+                   mesh=row["mesh"])
+        else:
+            report(f"serving_mesh/tod/mesh{row['mesh']}/samples_per_s",
+                   row["samples_per_s"],
+                   f"{row['mode']} warm {row['warm_s']*1e3:.1f} ms/batch",
+                   mesh=row["mesh"])
 
 
 def run_scaling(report, sizes=(1024, 4096, 16384, 65536, 262144)):

@@ -5,40 +5,152 @@ the supervisor rebuilds the mesh and calls ``remesh`` on params + optimizer
 state; training resumes at the same step with the new device count — only
 the per-device batch slice changes. Resharding is a device_put with the new
 NamedShardings (XLA moves only the bytes that must move).
+
+Serving (DESIGN.md §15) uses the same machinery: on device loss the
+GP server builds the surviving mesh with :func:`shrink_mesh` and re-places
+its cached matrices/q-parameters through :func:`remesh_report`. A spec that
+cannot be honored on the new mesh is **never silently dropped** anymore:
+every degraded leaf produces a structured :class:`Degradation` record
+(leaf path, requested spec, what was applied, why) that the caller logs
+and the serving metrics surface — replication is still the fallback, but
+it is now a reported decision, not a hidden one.
 """
 from __future__ import annotations
 
-from typing import Any
+import dataclasses
+import logging
+from typing import Any, Callable, List, Optional, Tuple
 
+import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any
 
+logger = logging.getLogger(__name__)
 
-def remesh(tree: PyTree, new_mesh: Mesh, spec_tree: PyTree) -> PyTree:
+
+@dataclasses.dataclass(frozen=True)
+class Degradation:
+    """One leaf whose requested PartitionSpec could not be honored.
+
+    ``path`` is the pytree path of the leaf (``"w"``, ``"R/1"``, ...),
+    ``requested`` / ``applied`` are the printable specs, ``reason`` says
+    which dim degraded and why (mesh axis missing, or the dim size not
+    divisible by the mesh-axes product).
+    """
+
+    path: str
+    requested: str
+    applied: str
+    reason: str
+
+    def __str__(self) -> str:
+        return (f"{self.path}: {self.requested} -> {self.applied} "
+                f"({self.reason})")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+        else:
+            parts.append(str(e))
+    return "/".join(parts) or "<root>"
+
+
+def _fit_spec(spec, leaf, new_mesh) -> Tuple[P, List[str]]:
+    """Per-dim fit of `spec` onto `new_mesh`; returns the applied spec and
+    the list of degradation reasons (empty when honored exactly)."""
+    dims, reasons = [], []
+    for i, axes in enumerate(tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+        if axes is None:
+            dims.append(None)
+            continue
+        ax = (axes,) if isinstance(axes, str) else tuple(axes)
+        missing = [a for a in ax if a not in new_mesh.shape]
+        if missing:
+            dims.append(None)
+            reasons.append(f"dim {i}: mesh axis {missing[0]!r} not on the "
+                           f"new mesh (axes {tuple(new_mesh.shape)})")
+            continue
+        size = 1
+        for a in ax:
+            size *= new_mesh.shape[a]
+        if leaf.shape[i] % size != 0:
+            dims.append(None)
+            reasons.append(f"dim {i}: size {leaf.shape[i]} not divisible "
+                           f"by mesh axes {ax} (= {size})")
+        else:
+            dims.append(axes)
+    return P(*dims), reasons
+
+
+def remesh_report(tree: PyTree, new_mesh: Mesh,
+                  spec_tree: PyTree) -> Tuple[PyTree, List[Degradation]]:
+    """Re-shard `tree` onto `new_mesh`; returns ``(tree, degradations)``.
+
+    Specs whose axes don't exist or don't divide on the new mesh degrade to
+    replication on that dim — each such leaf/dim yields a
+    :class:`Degradation` record instead of being silently swallowed.
+    """
+    report: List[Degradation] = []
+
+    def one(path, leaf, spec):
+        applied, reasons = _fit_spec(spec, leaf, new_mesh)
+        if reasons:
+            report.append(Degradation(
+                path=_path_str(path), requested=str(spec),
+                applied=str(applied), reason="; ".join(reasons)))
+        return jax.device_put(leaf, NamedSharding(new_mesh, applied))
+
+    out = jax.tree_util.tree_map_with_path(one, tree, spec_tree)
+    return out, report
+
+
+def remesh(tree: PyTree, new_mesh: Mesh, spec_tree: PyTree, *,
+           on_degrade: Optional[Callable[[Degradation], None]] = None
+           ) -> PyTree:
     """Re-shard `tree` onto `new_mesh` with `spec_tree` PartitionSpecs.
 
-    Specs whose axes don't divide on the new mesh degrade to replication
-    (same graceful rule as sharding.py).
+    Same graceful per-dim fallback to replication as before, but every
+    degradation is logged (and handed to ``on_degrade`` when given) — use
+    :func:`remesh_report` to get the records back directly.
     """
-    def fit(spec, leaf):
-        dims = []
-        for i, axes in enumerate(tuple(spec) + (None,) * (leaf.ndim - len(spec))):
-            if axes is None:
-                dims.append(None)
-                continue
-            ax = (axes,) if isinstance(axes, str) else tuple(axes)
-            size = 1
-            ok = True
-            for a in ax:
-                if a not in new_mesh.shape:
-                    ok = False
-                    break
-                size *= new_mesh.shape[a]
-            dims.append(axes if ok and leaf.shape[i] % size == 0 else None)
-        return NamedSharding(new_mesh, P(*dims))
+    out, report = remesh_report(tree, new_mesh, spec_tree)
+    for d in report:
+        logger.warning("remesh degradation: %s", d)
+        if on_degrade is not None:
+            on_degrade(d)
+    return out
 
-    return jax.tree.map(
-        lambda leaf, spec: jax.device_put(leaf, fit(spec, leaf)),
-        tree, spec_tree)
+
+def surviving_devices(mesh: Mesh, dead_ids) -> list:
+    """Devices of `mesh` whose ``.id`` is not in `dead_ids`, in mesh order."""
+    dead = set(dead_ids)
+    return [d for d in np.asarray(mesh.devices).flat if d.id not in dead]
+
+
+def shrink_mesh(mesh: Mesh, dead_ids, *,
+                axis_name: str | None = None) -> Optional[Mesh]:
+    """The surviving mesh after losing `dead_ids`: a 1-axis mesh over the
+    remaining devices (elastic-resize pattern — the ring/data axis simply
+    shrinks; per-device work grows, the program re-plans and resumes).
+
+    Returns ``None`` when one device (or fewer) survives: the caller's
+    degradation ladder drops to the single-device path. Raises when no
+    device survives at all.
+    """
+    live = surviving_devices(mesh, dead_ids)
+    if not live:
+        raise RuntimeError(
+            f"no devices survive (mesh had {np.asarray(mesh.devices).size}, "
+            f"all in dead set)")
+    if len(live) < 2:
+        return None
+    return Mesh(np.asarray(live), (axis_name or mesh.axis_names[0],))

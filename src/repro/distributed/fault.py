@@ -19,9 +19,26 @@ Tests inject synthetic failures/stragglers (tests/test_fault.py).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import numpy as np
+
+
+class DeviceLossError(RuntimeError):
+    """A device (or its runtime) is gone.
+
+    Unlike a transient collective hiccup this is **not retryable in place**:
+    re-running the slab on the same mesh cannot succeed. The serving layer
+    catches it and runs the re-plan path (shrink mesh → remesh cached state
+    → rewarm executable → replay the in-flight slab); the training driver
+    maps it onto restore + elastic re-mesh.
+    """
+
+    def __init__(self, device_ids, message: str = ""):
+        self.device_ids = tuple(int(i) for i in device_ids)
+        super().__init__(
+            message or f"lost device(s) {list(self.device_ids)}")
 
 
 @dataclasses.dataclass
@@ -75,3 +92,73 @@ class FaultSupervisor:
                 raise
             step, state = self.restore_fn()
             return state, step, True
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/timeout/backoff policy for one slab execution.
+
+    ``timeout_s`` is *post-hoc*: a blocking XLA dispatch cannot be aborted
+    portably, so an attempt that completes but overruns the deadline is
+    counted as a timeout (and feeds the straggler monitor) rather than
+    cancelled mid-flight.
+    """
+
+    max_retries: int = 2
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+    timeout_s: float = 120.0
+
+    def backoff(self, attempt: int) -> float:
+        return self.backoff_s * self.backoff_factor ** attempt
+
+
+@dataclasses.dataclass
+class ServingFaultSupervisor:
+    """Request-level fault policy for the GP serving layer (DESIGN.md §15).
+
+    Transient slab errors are retried in place with exponential backoff;
+    :class:`DeviceLossError` is never retried in place — it propagates to
+    the server's detect → remesh → rewarm → replay path. Every attempt's
+    wall time feeds the :class:`StragglerMonitor`, so serving step times
+    drive the same straggler detection as training steps.
+    """
+
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    monitor: StragglerMonitor = dataclasses.field(
+        default_factory=StragglerMonitor)
+    device_losses: int = 0
+    transient_retries: int = 0
+    timeouts: int = 0
+
+    def execute(self, attempt_fn: Callable[[], "object"]):
+        """Run one slab attempt to completion, retrying transient errors."""
+        attempt = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                out = attempt_fn()
+            except DeviceLossError:
+                self.device_losses += 1
+                raise
+            except Exception:  # noqa: BLE001 — runtime/collective errors
+                if attempt >= self.retry.max_retries:
+                    raise
+                self.transient_retries += 1
+                time.sleep(self.retry.backoff(attempt))
+                attempt += 1
+                continue
+            dt = time.perf_counter() - t0
+            if dt > self.retry.timeout_s:
+                self.timeouts += 1
+            self.monitor.observe(dt)
+            return out
+
+    def metrics(self) -> dict:
+        return {
+            "device_losses": self.device_losses,
+            "transient_retries": self.transient_retries,
+            "timeouts": self.timeouts,
+            "stragglers": self.monitor.stragglers,
+            "median_step_s": self.monitor.median,
+        }

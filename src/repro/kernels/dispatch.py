@@ -482,13 +482,23 @@ plan_cache_stats = {"hits": 0, "misses": 0}
 def plan_cached(chart, *, have_axis_mats: bool | None = None,
                 platform: str | None = None, samples: int = 1,
                 dtype=None, pyramid: bool = True,
-                vmem_budget: int = VMEM_BUDGET_BYTES) -> list:
+                vmem_budget: int = VMEM_BUDGET_BYTES,
+                mesh_key=None) -> list:
     """Memoized ``plan()`` — the serving fast path asks for the same
     routing decision on every batch. The returned list is shared across
-    callers: treat it as read-only."""
+    callers: treat it as read-only.
+
+    ``mesh_key`` is an opaque hashable describing the device mesh the plan
+    will execute under (the sharded server passes its mesh fingerprint, see
+    DESIGN.md §15). It does not change the per-device routing decision —
+    ``samples`` is already the *local* slab height — but it keys the cache,
+    so an elastic re-mesh is a deliberate plan-cache miss and can never be
+    served a stale pre-resize plan.
+    """
     backend = select_backend(platform=platform)
     key = (chart, have_axis_mats, backend, samples,
-           jnp.dtype(dtype or jnp.float32).name, pyramid, vmem_budget)
+           jnp.dtype(dtype or jnp.float32).name, pyramid, vmem_budget,
+           mesh_key)
     hit = _PLAN_CACHE.pop(key, None)
     if hit is not None:
         plan_cache_stats["hits"] += 1

@@ -1,4 +1,4 @@
-"""Batched GP posterior field server (DESIGN.md §12).
+"""Batched GP posterior field server (DESIGN.md §12, §15).
 
 The `launch.serve` BatchedServer pattern applied to the GP side of the
 repo: clients submit posterior-sample and predictive-moment requests
@@ -13,14 +13,28 @@ against a fitted ICR posterior (`core.vi.Posterior` — a MAP ξ̂ or ADVI
     over slabs (Chan parallel merge per slab — no request ever needs its
     full MC budget resident at once);
   * never recompiles or rebuilds structure for repeat traffic: the
-    executable cache is keyed on (chart geometry, θ, dtype policy) and
-    holds the matrices (`ICR.matrices_cached`), the routing decision
+    executable cache is keyed on (chart geometry, θ, dtype policy, mesh)
+    and holds the matrices (`ICR.matrices_cached`), the routing decision
     (`dispatch.plan_cached`) and the jitted slab executable.
 
 Per-row excitation noise is keyed by (request seed, row index) only —
 `fold_in(PRNGKey(seed), row)` — so a request's draws are independent of
-how they were packed: a packed heterogeneous batch reproduces the
-per-request loop exactly (the slab-parity test pins this at 1e-5).
+how they were packed **and of the mesh they ran on**: a packed
+heterogeneous batch reproduces the per-request loop exactly (the
+slab-parity test pins this at 1e-5), and a slab replayed after a device
+loss reproduces the unfaulted run bit-for-bit (tests/test_chaos.py).
+
+Mesh serving (DESIGN.md §15): pass ``mesh=`` to shard slabs over devices.
+``shard="samples"`` runs data-parallel over the sample axis through
+`shard_map` (the axis the PR3 kernels tile innermost); ``shard="chart"``
+routes each row through the `DistributedICR` halo-exchange body for
+fields that exceed one device. On a `DeviceLossError` the server runs
+detect → remesh (``elastic.shrink_mesh`` + ``remesh_report`` with
+structured degradation records) → rewarm (background compile on the
+surviving mesh) → replay (the in-flight slab re-executes; same
+(seed, row) keys ⇒ identical results). When the mesh collapses to one
+device it degrades to the single-device path (pallas on TPU, jnp
+reference elsewhere) and keeps serving.
 
 Run:  PYTHONPATH=src python -m repro.launch.serve_gp [--scenario dust]
 """
@@ -29,15 +43,41 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import hashlib
+import threading
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.vi import Posterior
+from repro.distributed import elastic
+from repro.distributed.fault import DeviceLossError, ServingFaultSupervisor
 from repro.kernels import dispatch
+
+_PAD_ROW = 2**30  # padding rows index past every request's eps stream
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestError:
+    """Structured per-request admission/serving error.
+
+    Truthy (so existing ``if req.error`` call sites keep working), with a
+    stable machine-readable ``code`` — clients branch on the code, humans
+    read the message.
+    """
+
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.code}] {self.message}"
+
+    def __bool__(self) -> bool:
+        return True
 
 
 @dataclasses.dataclass
@@ -47,22 +87,35 @@ class GPRequest:
     kind="sample": return ``n`` posterior field draws (in ``fields``).
     kind="moments": MC predictive mean/std over an ``n``-draw budget
     (in ``mean``/``std``; the draws themselves are never retained).
+
+    ``xi`` optionally replaces the posterior mean for this request's rows
+    (a client-supplied excitation, e.g. a conditioning point estimate):
+    leaf shapes must match the served chart's ``xi_shapes()`` and all
+    values must be finite — both are checked at admission, so one bad
+    request is rejected with a structured error instead of NaN-poisoning
+    the slab it would have been packed into. ``theta`` optionally pins the
+    hyperparameters the client expects to be served; a mismatch with the
+    active posterior is an admission error, not silent wrong answers.
     """
 
     kind: str
     n: int
     seed: int = 0
+    xi: Optional[list] = None
+    theta: Optional[dict] = None
     done: bool = False
-    error: Optional[str] = None
+    error: Optional[object] = None  # RequestError (or legacy str)
     fields: list = dataclasses.field(default_factory=list)
     mean: Optional[np.ndarray] = None
     std: Optional[np.ndarray] = None
-    # internal: rows drawn so far (the per-request eps stream index) and
-    # the streaming Welford state (count, running mean, running M2)
+    # internal: rows drawn so far (the per-request eps stream index),
+    # the streaming Welford state (count, running mean, running M2),
+    # and whether admission validation already ran
     _next_row: int = 0
     _wcount: int = 0
     _wmean: Optional[np.ndarray] = None
     _wm2: Optional[np.ndarray] = None
+    _admitted: bool = False
 
 
 def _canonical_key(x) -> str:
@@ -102,19 +155,50 @@ def _welford_merge(count, m, m2, batch: np.ndarray):
     return tot, m, m2
 
 
+def _all_finite(x) -> bool:
+    return bool(np.isfinite(np.asarray(x, np.float64)).all())
+
+
 class GPFieldServer:
     """Continuous-batching server over one (swappable) fitted Posterior.
 
-    ``slab`` is the fixed sample-slab height: every step draws exactly one
-    (slab, *final_shape) batch of posterior fields through one jitted
-    executable — static shapes, so repeat traffic never retraces. Rows are
-    assigned to queued requests greedily in queue order; short steps pad
-    with throwaway rows (their keys index past every request's stream).
+    ``slab`` is the fixed sample-slab height: every step draws one
+    fixed-shape batch of posterior fields through one jitted executable —
+    static shapes, so repeat traffic never retraces. Rows are assigned to
+    queued requests greedily in queue order; short steps pad with
+    throwaway rows (their keys index past every request's stream).
+
+    ``mesh`` (optional) shards execution. ``shard="samples"``: the slab is
+    rounded up to a multiple of the mesh size (the *capacity*) and split
+    over all mesh axes via `shard_map` — each device draws and refines its
+    own rows. ``shard="chart"``: rows stay whole but each field is
+    spatially decomposed through the `DistributedICR` halo-exchange body.
+    The executable cache key includes the mesh fingerprint, so an elastic
+    re-mesh is always a deliberate miss, never a stale executable.
     """
 
     def __init__(self, posterior: Posterior, slab: int = 8,
-                 max_cached: int = 8):
+                 max_cached: int = 8, mesh=None, shard: str = "samples",
+                 supervisor: Optional[ServingFaultSupervisor] = None,
+                 fault_injector: Optional[Callable] = None):
+        if shard not in ("samples", "chart"):
+            raise ValueError(f"shard={shard!r}: expected 'samples' or "
+                             "'chart'")
         self.slab = int(slab)
+        self.mesh = mesh
+        self.shard = shard
+        # per-device rows are pinned at construction and survive re-meshes:
+        # a replayed slab must run the *same local gemm shapes* on the
+        # shrunk mesh, else batch-size-dependent rounding breaks the
+        # bit-identical replay guarantee (capacity shrinks with the mesh,
+        # local work per device stays constant)
+        n0 = (int(np.asarray(mesh.devices).size)
+              if mesh is not None and shard == "samples" else 1)
+        self._local_rows = -(-self.slab // n0)
+        self.supervisor = supervisor or ServingFaultSupervisor()
+        # test/chaos hook: called once per slab attempt with the server;
+        # may raise DeviceLossError (kill), sleep (straggler), or no-op
+        self.fault_injector = fault_injector
         # (key -> entry) executable cache, LRU-bounded: a long-running
         # server periodically re-fit at new θ must not pin one matrices
         # set + compiled executable per historical θ forever
@@ -123,10 +207,60 @@ class GPFieldServer:
         self.cache_hits = 0
         self.cache_misses = 0
         self.slabs_run = 0
+        self.slabs_attempted = 0  # execution attempts incl. faulted/retried
         self.rows_served = 0      # non-padding rows (posterior draws)
         self.fields_delivered = 0  # arrays handed back to clients
+        self.replans = 0           # device-loss re-mesh events
+        self.replayed_slabs = 0    # in-flight slabs re-executed after loss
+        self.dead_devices: set = set()
+        self.degradations: list = []  # elastic.Degradation records
+        self.last_recovery_s: Optional[float] = None  # fault -> first slab
         self.posterior = None
         self.set_posterior(posterior)
+
+    # -- mesh geometry ---------------------------------------------------------
+    def _n_shards(self) -> int:
+        """Sample-axis parallelism: mesh size in "samples" mode, else 1."""
+        if self.mesh is None or self.shard != "samples":
+            return 1
+        return int(np.asarray(self.mesh.devices).size)
+
+    @property
+    def capacity(self) -> int:
+        """Rows per executed slab. Unsharded / chart-sharded: the slab
+        height. Sample-sharded: ``local_rows * n_dev`` with the per-device
+        ``local_rows`` pinned at construction — on the full mesh this is
+        ``slab`` rounded up to divide evenly; after an elastic shrink the
+        capacity contracts with the mesh (local shapes never change)."""
+        n = self._n_shards()
+        return self.slab if n == 1 else self._local_rows * n
+
+    def _mesh_key(self):
+        """Hashable mesh fingerprint for the executable-cache key: shard
+        mode, axis names, mesh shape, and the exact device set — so a
+        re-mesh (even to an equal-size mesh on different devices) is a
+        deliberate miss, never a stale executable."""
+        if self.mesh is None:
+            return None
+        devs = np.asarray(self.mesh.devices)
+        return (self.shard, tuple(self.mesh.axis_names),
+                tuple(int(s) for s in devs.shape),
+                tuple((int(d.id), str(d.platform)) for d in devs.flat))
+
+    def _mesh_desc(self) -> str:
+        """Printable mesh dimension for fingerprints/metrics."""
+        if self.mesh is None:
+            return "unsharded"
+        devs = np.asarray(self.mesh.devices)
+        shape = "x".join(str(int(s)) for s in devs.shape)
+        return f"{self.shard}:{shape}:{','.join(self.mesh.axis_names)}"
+
+    @property
+    def serving_mode(self) -> str:
+        """Where on the degradation ladder this server executes: sharded
+        pallas → single-device pallas → jnp reference (DESIGN.md §15)."""
+        tier = "single" if self.mesh is None else f"sharded-{self.shard}"
+        return f"{tier}:{dispatch.select_backend()}"
 
     # -- executable cache ------------------------------------------------------
     def _cache_key(self, post: Posterior):
@@ -142,18 +276,37 @@ class GPFieldServer:
         kkey = (kern.fn, kern.name,
                 tuple(sorted((k, float(v))
                              for k, v in kern.default_theta.items())))
-        # routing flags and the effective backend belong in the key: an
-        # equal-chart/θ/policy ICR with a different executor config (or a
-        # REPRO_BACKEND flip) must not be served the cached executable
+        # routing flags, the effective backend and the mesh belong in the
+        # key: an equal-chart/θ/policy ICR with a different executor config
+        # (a REPRO_BACKEND flip, or a resized/re-homed mesh after an
+        # elastic re-plan) must not be served the cached executable
         return (icr.chart, kkey, icr.jitter, tkey, icr.policy,
                 icr.use_pallas, icr.use_pyramid,
-                dispatch.select_backend(), self.slab)
+                dispatch.select_backend(), self.slab, self._mesh_key())
 
-    def set_posterior(self, post: Posterior):
+    def _validate_posterior(self, post: Posterior):
+        """A poisoned fit can never be installed: non-finite θ or
+        q-parameters would NaN every slab for every client."""
+        # std() rather than log_std: log_std = -inf is a legitimate delta
+        # posterior (sigma = 0), but NaN or +inf sigma poisons every slab
+        for name, leaves in (("theta", list((post.theta or {}).values())),
+                             ("mean", list(post.mean)),
+                             ("std", list(post.std()))):
+            for leaf in leaves:
+                if not _all_finite(leaf):
+                    raise ValueError(
+                        f"posterior rejected: non-finite values in {name}")
+
+    def set_posterior(self, post: Posterior, *, rewarm: bool = False):
         """Point the server at a (new) fit. Same (chart geometry, θ, dtype
-        policy) ⇒ cache hit: the matrices, plan and compiled executable are
-        reused even across re-fits (only the q-parameters swap); anything
-        else is a miss and builds a fresh entry."""
+        policy, mesh) ⇒ cache hit: the matrices, plan and compiled
+        executable are reused even across re-fits (only the q-parameters
+        swap); anything else is a miss and builds a fresh entry.
+
+        ``rewarm=True`` (the fault-recovery path) compiles a fresh entry's
+        executable in a background thread; the first slab on that entry
+        joins it before executing."""
+        self._validate_posterior(post)
         key = self._cache_key(post)
         entry = self._exec.pop(key, None)  # re-insert below: LRU order
         if entry is not None:
@@ -169,71 +322,325 @@ class GPFieldServer:
         entry["std"] = post.std()
         self.posterior = post
         self._entry = entry
+        if rewarm and "warm" not in entry:
+            args = self._slab_args(entry, [])
+            t = threading.Thread(
+                target=lambda: jax.block_until_ready(entry["fn"](*args)),
+                daemon=True)
+            t.start()
+            entry["warm"] = t
         return entry
 
     def _build(self, post: Posterior) -> dict:
         icr = post.icr
-        mats = icr.matrices_cached(post.theta)
-        # model what this ICR actually executes: no pyramid overlay when
-        # it is disabled, no axis factors without the fused path
-        plan = dispatch.plan_cached(
-            icr.chart, samples=self.slab, dtype=icr.policy.storage_dtype,
-            pyramid=icr.use_pallas and icr.use_pyramid,
-            have_axis_mats=icr.use_pallas and icr.chart.ndim > 1)
         shapes = icr.xi_shapes()
+        n_shards = self._n_shards()
+        capacity = self.capacity
+        local_rows = capacity // n_shards
+        # model what this ICR actually executes on *one device*: no pyramid
+        # overlay when disabled, no axis factors without the fused path;
+        # the mesh fingerprint keys the plan so a re-mesh re-plans
+        plan = dispatch.plan_cached(
+            icr.chart, samples=local_rows, dtype=icr.policy.storage_dtype,
+            pyramid=icr.use_pallas and icr.use_pyramid,
+            have_axis_mats=icr.use_pallas and icr.chart.ndim > 1,
+            mesh_key=self._mesh_key())
 
-        def slab_fn(mats, mean, std, seeds, rows):
-            def draw(seed, row):
-                k = jax.random.fold_in(jax.random.PRNGKey(seed), row)
-                ks = jax.random.split(k, len(shapes))
-                return [
-                    m + s * jax.random.normal(kk, m.shape, m.dtype)
-                    for kk, m, s in zip(ks, mean, std)
-                ]
+        def draw(mean, std, seed, row, use_xi, xi_row):
+            """One row's excitation: (seed, row)-keyed noise around the
+            posterior mean — or the request's own ξ when it supplied one."""
+            k = jax.random.fold_in(jax.random.PRNGKey(seed), row)
+            ks = jax.random.split(k, len(shapes))
+            out = []
+            for kk, m, s, x in zip(ks, mean, std, xi_row):
+                base = jnp.where(use_xi, x.astype(m.dtype), m)
+                out.append(base + s * jax.random.normal(kk, m.shape, m.dtype))
+            return out
 
-            xi = jax.vmap(draw)(seeds, rows)
-            # clients get f32 fields whatever the internal storage dtype
+        if self.mesh is not None and self.shard == "chart":
+            entry = self._build_chart_sharded(post, draw, shapes)
+        elif self.mesh is not None:
+            entry = self._build_sample_sharded(post, draw)
+        else:
+            def slab_fn(mats, mean, std, seeds, rows, use_xi, xi_rows):
+                one = lambda se, ro, fl, xp: draw(mean, std, se, ro, fl, xp)
+                xi = jax.vmap(one)(seeds, rows, use_xi, xi_rows)
+                # clients get f32 fields whatever the internal storage dtype
+                return icr.apply_sqrt_batch(mats, xi).astype(jnp.float32)
+
+            mats = icr.matrices_cached(post.theta)
+            entry = {"mats": mats, "fn": jax.jit(slab_fn)}
+        entry.update(plan=plan, capacity=capacity, shapes=shapes,
+                     mode=self.serving_mode)
+        return entry
+
+    def _build_sample_sharded(self, post: Posterior, draw) -> dict:
+        """Data-parallel over the sample axis: each device draws and
+        refines ``capacity / n_dev`` rows; matrices and q-params are
+        replicated, seeds/rows/ξ-overrides are split. Row keying is
+        (seed, row) — device-independent — so the global result is
+        identical to the unsharded slab."""
+        icr = post.icr
+        mesh = self.mesh
+        axes = tuple(mesh.axis_names)
+
+        def slab_fn(mats, mean, std, seeds, rows, use_xi, xi_rows):
+            one = lambda se, ro, fl, xp: draw(mean, std, se, ro, fl, xp)
+            xi = jax.vmap(one)(seeds, rows, use_xi, xi_rows)
             return icr.apply_sqrt_batch(mats, xi).astype(jnp.float32)
 
-        return {"mats": mats, "plan": plan, "fn": jax.jit(slab_fn)}
+        mats = icr.matrices_cached(post.theta)
+        repl = lambda tree: jax.tree.map(lambda _: P(), tree)
+        # exercise the elastic placement path (replicated specs never
+        # degrade, but a future param-sharded layout reports through the
+        # same channel)
+        mats, report = elastic.remesh_report(mats, mesh, repl(mats))
+        self.degradations.extend(report)
+        n_levels = len(post.mean)
+        in_specs = (repl(mats), [P()] * n_levels, [P()] * n_levels,
+                    P(axes), P(axes), P(axes), [P(axes)] * n_levels)
+        fn = jax.jit(shard_map(slab_fn, mesh=mesh, in_specs=in_specs,
+                               out_specs=P(axes), check_vma=False))
+        return {"mats": mats, "fn": fn}
 
-    # -- serving loop ----------------------------------------------------------
+    def _build_chart_sharded(self, post: Posterior, draw, shapes) -> dict:
+        """Spatial decomposition via the DistributedICR halo-exchange body:
+        every device owns a block of the field along ``shard_axis`` and
+        each row's refinement exchanges halos with ring neighbors. The ξ
+        draw itself is replicated per row (same (seed, row) keys on every
+        device) and each device keeps its local block — numerics match the
+        single-device path to fp tolerance (interior math identical; see
+        tests/test_distributed_icr.py)."""
+        from repro.core.distributed import DistributedICR
+
+        icr = post.icr
+        mesh = self.mesh
+        dist = DistributedICR(icr=icr, mesh=mesh,
+                              axis_names=tuple(mesh.axis_names))
+        k = dist.first_sharded_level()
+        struct = dist.xi_structure()
+        n_dev = dist.n_dev
+        ax = dist.shard_axis
+
+        def slab_fn(mats, mean, std, seeds, rows, use_xi, xi_rows):
+            idx = jax.lax.axis_index(dist.axis_names)
+
+            def one(seed, row, flag, xi_row):
+                xi = draw(mean, std, seed, row, flag, xi_row)
+                loc = [xi[0]]
+                for lvl in range(icr.chart.n_levels):
+                    leaf = xi[lvl + 1].reshape(struct[lvl + 1])
+                    if lvl >= k:
+                        blk = struct[lvl + 1][ax] // n_dev
+                        leaf = jax.lax.dynamic_slice_in_dim(
+                            leaf, idx * blk, blk, axis=ax)
+                    loc.append(leaf)
+                return dist._sharded_body(mats, loc)
+
+            out = jax.vmap(one)(seeds, rows, use_xi, xi_rows)
+            return out.astype(jnp.float32)
+
+        # the sharded body runs the joint path; place the matrices with the
+        # distributed specs and surface any degradation (e.g. a ring the
+        # family counts don't divide would replicate — reported, not hidden)
+        mats = icr.matrices_cached(post.theta, joint=True, axes=False)
+        mat_specs = dist.mat_specs()
+        mats, report = elastic.remesh_report(mats, mesh, mat_specs)
+        self.degradations.extend(report)
+        n_levels = len(post.mean)
+        in_specs = (mat_specs, [P()] * n_levels, [P()] * n_levels,
+                    P(), P(), P(), [P()] * n_levels)
+        fn = jax.jit(shard_map(slab_fn, mesh=mesh, in_specs=in_specs,
+                               out_specs=P(None, *dist.out_spec()),
+                               check_vma=False))
+        return {"mats": mats, "fn": fn}
+
+    # -- admission -------------------------------------------------------------
+    def _reject(self, req: GPRequest, code: str, message: str):
+        req.error = RequestError(code=code, message=message)
+        req.done = True
+
     def _admit(self, queue: List[GPRequest]):
+        """Validate each request once, before any of its rows are packed:
+        a rejected request never enters a slab, so it cannot poison the
+        streaming moments of the healthy requests packed beside it."""
+        shapes = self.posterior.icr.xi_shapes()
+        served_theta = dict(self.posterior.icr.kernel.default_theta)
+        served_theta.update(self.posterior.theta or {})
         for req in queue:
-            if req.done or req.error:
+            if req.done or req.error or req._admitted:
                 continue
+            req._admitted = True
             if req.kind not in ("sample", "moments") \
                     or not isinstance(req.n, (int, np.integer)) \
                     or req.n <= 0 or not 0 <= int(req.seed) < 2**31:
-                req.error = (f"bad request: kind={req.kind!r} n={req.n} "
-                             f"seed={req.seed} (seed must fit int32)")
-                req.done = True
+                self._reject(req, "bad-request",
+                             f"kind={req.kind!r} n={req.n} seed={req.seed} "
+                             "(seed must fit int32)")
+                continue
+            if req.theta is not None:
+                bad = [k for k, v in req.theta.items()
+                       if not _all_finite(v)]
+                if bad:
+                    self._reject(req, "theta-nonfinite",
+                                 f"non-finite theta entries {bad}")
+                    continue
+                stale = [k for k, v in req.theta.items()
+                         if k not in served_theta
+                         or not np.allclose(served_theta[k], v)]
+                if stale:
+                    self._reject(
+                        req, "theta-mismatch",
+                        f"request pinned theta {sorted(req.theta)} but the "
+                        f"server is fitted at {sorted(served_theta)} with "
+                        f"different values for {stale}")
+                    continue
+            if req.xi is not None:
+                got = [tuple(np.shape(leaf)) for leaf in req.xi]
+                want = [tuple(s) for s in shapes]
+                if got != want:
+                    self._reject(req, "xi-geometry",
+                                 f"xi leaves {got} do not match the served "
+                                 f"chart's xi_shapes() {want}")
+                    continue
+                if not all(_all_finite(leaf) for leaf in req.xi):
+                    self._reject(req, "xi-nonfinite",
+                                 "xi contains NaN/Inf values")
+                    continue
 
+    # -- slab execution --------------------------------------------------------
+    def _slab_args(self, entry: dict, rows: list) -> tuple:
+        """Device arguments for one slab: fixed ``capacity`` height, rows
+        beyond the packed prefix are padding (keys past every stream)."""
+        cap = entry["capacity"]
+        seeds = np.zeros(cap, np.int32)
+        idxs = np.full(cap, _PAD_ROW, np.int32)
+        flags = np.zeros(cap, bool)
+        xi_rows = [np.zeros((cap,) + tuple(s), np.float32)
+                   for s in entry["shapes"]]
+        for i, (req, ridx) in enumerate(rows):
+            seeds[i], idxs[i] = req.seed, ridx
+            if req.xi is not None:
+                flags[i] = True
+                for lvl, leaf in enumerate(req.xi):
+                    xi_rows[lvl][i] = np.asarray(leaf, np.float32)
+        return (entry["mats"], entry["mean"], entry["std"],
+                jnp.asarray(seeds), jnp.asarray(idxs), jnp.asarray(flags),
+                [jnp.asarray(x) for x in xi_rows])
+
+    def _execute_once(self, entry: dict, args: tuple) -> np.ndarray:
+        """One slab attempt under the fault supervisor: transient errors
+        retry with backoff, DeviceLossError propagates to the re-plan
+        path, wall time feeds the straggler monitor."""
+        warm = entry.pop("warm", None)
+        if warm is not None:
+            warm.join()
+
+        def attempt():
+            self.slabs_attempted += 1
+            if self.fault_injector is not None:
+                self.fault_injector(self)
+            return np.asarray(entry["fn"](*args), dtype=np.float32)
+
+        return self.supervisor.execute(attempt)
+
+    def _on_device_loss(self, exc: DeviceLossError):
+        """detect → remesh → rewarm: shrink the mesh to the surviving
+        devices, re-key the executable cache (the mesh is in the key, so
+        this is a deliberate miss), rebuild matrices/plan on the new mesh
+        and start the compile in the background. The caller then replays
+        the in-flight slab."""
+        if self.mesh is None:
+            raise exc  # single device lost: nothing left to shrink onto
+        self.dead_devices.update(exc.device_ids)
+        new_mesh = elastic.shrink_mesh(self.mesh, self.dead_devices)
+        if new_mesh is not None and self.shard == "chart":
+            new_mesh = self._feasible_chart_mesh(new_mesh)
+        if new_mesh is None:
+            self.degradations.append(elastic.Degradation(
+                path="<mesh>", requested=self._mesh_desc(),
+                applied="unsharded",
+                reason=f"lost device(s) {sorted(self.dead_devices)}; "
+                       "degrading to the single-device path"))
+        self.mesh = new_mesh
+        self.replans += 1
+        self.set_posterior(self.posterior, rewarm=True)
+
+    def _feasible_chart_mesh(self, mesh):
+        """Chart sharding needs the family counts divisible by the ring:
+        shrink to the largest feasible ring ≤ the survivor count (recorded
+        as a degradation when devices must idle), or None when no ring ≥ 2
+        is feasible."""
+        from repro.core.distributed import DistributedICR
+
+        devs = list(np.asarray(mesh.devices).flat)
+        for n in range(len(devs), 1, -1):
+            cand = type(mesh)(np.asarray(devs[:n]), mesh.axis_names)
+            try:
+                DistributedICR(icr=self.posterior.icr, mesh=cand,
+                               axis_names=tuple(cand.axis_names)
+                               ).first_sharded_level()
+            except ValueError:
+                continue
+            if n < len(devs):
+                self.degradations.append(elastic.Degradation(
+                    path="<mesh>", requested=f"{self.shard}:{len(devs)}",
+                    applied=f"{self.shard}:{n}",
+                    reason=f"no refinement level shardable over {len(devs)} "
+                           f"survivors; largest feasible ring is {n}"))
+            return cand
+        self.degradations.append(elastic.Degradation(
+            path="<mesh>", requested=f"{self.shard}:{len(devs)}",
+            applied="unsharded",
+            reason="no feasible chart ring over the survivors"))
+        return None
+
+    def _run_rows(self, rows: list) -> np.ndarray:
+        """Execute packed rows, chunked to the active entry's capacity.
+        A DeviceLossError mid-chunk re-plans onto the surviving mesh and
+        replays that chunk — the (seed, row) noise keys make the replay
+        reproduce the unfaulted results exactly."""
+        outs = []
+        i = 0
+        recovery_t0 = None
+        while i < len(rows):
+            entry = self._entry
+            chunk = rows[i:i + entry["capacity"]]
+            args = self._slab_args(entry, chunk)
+            try:
+                out = self._execute_once(entry, args)
+            except DeviceLossError as exc:
+                if recovery_t0 is None:
+                    recovery_t0 = time.perf_counter()
+                self._on_device_loss(exc)
+                self.replayed_slabs += 1
+                continue  # replay the same chunk on the new entry
+            if recovery_t0 is not None:
+                self.last_recovery_s = time.perf_counter() - recovery_t0
+                recovery_t0 = None
+            outs.append(out[:len(chunk)])
+            self.slabs_run += 1
+            i += len(chunk)
+        return outs[0] if len(outs) == 1 else np.concatenate(outs, axis=0)
+
+    # -- serving loop ----------------------------------------------------------
     def step(self, queue: List[GPRequest]) -> bool:
         """Pack one slab from the queue, execute it, scatter the results.
         Returns False when no request had demand (queue drained)."""
         self._admit(queue)
+        cap = self._entry["capacity"]
         rows = []  # (request, row index in its eps stream)
         for req in queue:
             if req.done:
                 continue
-            take = min(req.n - req._next_row, self.slab - len(rows))
+            take = min(req.n - req._next_row, cap - len(rows))
             rows.extend((req, req._next_row + j) for j in range(take))
             req._next_row += take
-            if len(rows) == self.slab:
+            if len(rows) == cap:
                 break
         if not rows:
             return False
-        seeds = np.zeros(self.slab, np.int32)
-        idxs = np.full(self.slab, 2**30, np.int32)  # padding: throwaway rows
-        for i, (req, ridx) in enumerate(rows):
-            seeds[i], idxs[i] = req.seed, ridx
-        e = self._entry
-        out = np.asarray(
-            e["fn"](e["mats"], e["mean"], e["std"],
-                    jnp.asarray(seeds), jnp.asarray(idxs)),
-            dtype=np.float32)
-        self.slabs_run += 1
+        out = self._run_rows(rows)
         self.rows_served += len(rows)
         # scatter: contiguous runs per request (greedy packing keeps order)
         i = 0
@@ -263,7 +670,7 @@ class GPFieldServer:
     def run(self, requests: List[GPRequest], max_iters: int = 1_000_000):
         queue = list(requests)
         # re-resolve the executable for this batch: warm traffic against the
-        # same (chart, θ, policy) counts a hit and reuses everything
+        # same (chart, θ, policy, mesh) counts a hit and reuses everything
         self.set_posterior(self.posterior)
         it = 0
         while any(not r.done for r in queue) and it < max_iters:
@@ -272,14 +679,17 @@ class GPFieldServer:
             it += 1
         for r in queue:
             if not r.done:  # max_iters exhausted: signal, never silently
-                r.error = (f"server stopped after max_iters={max_iters} "
-                           f"slabs with {r.n - r._next_row} rows pending")
+                r.error = RequestError(
+                    code="max-iters",
+                    message=f"server stopped after max_iters={max_iters} "
+                            f"slabs with {r.n - r._next_row} rows pending")
                 r.done = True
         return requests
 
     # -- introspection ---------------------------------------------------------
     def modeled_slab_bytes(self) -> int:
-        """Roofline HBM bytes one slab application moves (plan estimate)."""
+        """Roofline HBM bytes one *per-device* slab application moves
+        (plan estimate for the local rows)."""
         return sum(e["hbm_bytes"]["selected"] for e in self._entry["plan"])
 
     @property
@@ -287,13 +697,33 @@ class GPFieldServer:
         """Dispatch route of the finest (dominant) refinement level."""
         return self._entry["plan"][-1]["route"]
 
+    def metrics(self) -> dict:
+        """Serving + fault counters for dashboards and the chaos suite."""
+        return {
+            "slabs_run": self.slabs_run,
+            "slabs_attempted": self.slabs_attempted,
+            "rows_served": self.rows_served,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "replans": self.replans,
+            "replayed_slabs": self.replayed_slabs,
+            "dead_devices": sorted(self.dead_devices),
+            "mesh": self._mesh_desc(),
+            "mode": self.serving_mode,
+            "capacity": self.capacity,
+            "last_recovery_s": self.last_recovery_s,
+            "degradations": [str(d) for d in self.degradations],
+            **{f"fault_{k}": v
+               for k, v in self.supervisor.metrics().items()},
+        }
+
     def cache_key_fingerprint(self) -> dict:
         """Deterministic printable fingerprint of the active
         executable-cache key (DESIGN.md §13) — the serving column of the
         compile fingerprints (repro.analysis). Equal server configs
         produce byte-identical fingerprints in any process; anything that
         would be a cache miss (chart geometry, θ, dtype policy, routing
-        flags, effective backend, slab height) changes the digest."""
+        flags, effective backend, slab height, mesh) changes the digest."""
         canon = _canonical_key(self._cache_key(self.posterior))
         icr = self.posterior.icr
         return {
@@ -302,6 +732,7 @@ class GPFieldServer:
             "slab": self.slab,
             "backend": dispatch.select_backend(),
             "storage_dtype": icr.policy.storage_name,
+            "mesh": self._mesh_desc(),
         }
 
     def lowered_slab(self):
@@ -310,9 +741,7 @@ class GPFieldServer:
         subsystem (repro.analysis) so a serving-path route or dtype
         regression is caught by the golden diff, not by wall-time noise."""
         e = self._entry
-        seeds = jnp.zeros(self.slab, jnp.int32)
-        rows = jnp.zeros(self.slab, jnp.int32)
-        return e["fn"].lower(e["mats"], e["mean"], e["std"], seeds, rows)
+        return e["fn"].lower(*self._slab_args(e, []))
 
 
 # -- demo / smoke entry point ---------------------------------------------------
@@ -367,17 +796,25 @@ def main():
     ap.add_argument("--mc", type=int, default=16)
     ap.add_argument("--dtype", default="fp32", choices=["fp32", "bf16"])
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard over the first N local devices (0: off)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.asarray(jax.devices()[:args.mesh]), ("data",))
 
     names = list(SCENARIOS) if args.scenario == "all" else [args.scenario]
     for name in names:
         chart = scenario_chart(name, quick=args.quick)
         pol = None if args.dtype == "fp32" else "bf16"
         post = demo_posterior(chart, SCENARIOS[name], dtype_policy=pol)
-        srv = GPFieldServer(post, slab=args.slab)
+        srv = GPFieldServer(post, slab=args.slab, mesh=mesh)
         shape = chart.final_shape
         print(f"[{name}] chart {shape} = {int(np.prod(shape)):,} px, "
-              f"slab={args.slab}, dtype={post.icr.policy.storage_name}")
+              f"slab={args.slab}, dtype={post.icr.policy.storage_name}, "
+              f"mesh={srv._mesh_desc()}")
 
         t0 = time.time()
         srv.run(mixed_requests(args.fields, args.mc))

@@ -1,0 +1,308 @@
+"""Fault-tolerant sharded serving (ISSUE 8; DESIGN.md §15).
+
+In-process tests run on the suite's single real device: retry/backoff
+semantics, structured admission errors (poisoned-ξ isolation, geometry
+mismatch, θ pinning), degradation reports from `elastic.remesh`, the
+mesh-aware executable cache key, straggler detection from serving step
+times, and 1-device-mesh parity for both shard modes.
+
+The multi-device chaos acceptance suite (kill a device mid-stream on 8
+virtual CPU devices, re-plan to a mesh of 7, bit-identical replay,
+cache-miss assertion) runs in a subprocess because
+``--xla_force_host_platform_device_count`` must be set before jax
+initializes; see ``repro.distributed.chaos``.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import regular_chart
+from repro.distributed import elastic
+from repro.distributed.chaos import (
+    ChaosInjector,
+    KillDevice,
+    Straggler,
+    poison_request,
+)
+from repro.distributed.fault import (
+    DeviceLossError,
+    RetryPolicy,
+    ServingFaultSupervisor,
+    StragglerMonitor,
+)
+from repro.launch.mesh import make_mesh
+from repro.launch.serve_gp import GPFieldServer, GPRequest, demo_posterior
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHART = regular_chart(32, 3, boundary="reflect")
+
+
+def _post(rho=8.0, chart=CHART):
+    return demo_posterior(chart, rho)
+
+
+# -- retry / timeout / backoff ---------------------------------------------------
+def test_transient_errors_retry_with_backoff():
+    sup = ServingFaultSupervisor(
+        retry=RetryPolicy(max_retries=3, backoff_s=0.001))
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient collective failure")
+        return 42
+
+    assert sup.execute(flaky) == 42
+    assert sup.transient_retries == 2
+    assert sup.monitor._times  # successful attempt fed the monitor
+
+
+def test_retries_exhausted_reraises():
+    sup = ServingFaultSupervisor(
+        retry=RetryPolicy(max_retries=1, backoff_s=0.001))
+    with pytest.raises(RuntimeError, match="persistent"):
+        sup.execute(lambda: (_ for _ in ()).throw(
+            RuntimeError("persistent failure")))
+    assert sup.transient_retries == 1
+
+
+def test_device_loss_is_never_retried_in_place():
+    sup = ServingFaultSupervisor(retry=RetryPolicy(max_retries=5))
+    calls = {"n": 0}
+
+    def dead():
+        calls["n"] += 1
+        raise DeviceLossError([3])
+
+    with pytest.raises(DeviceLossError):
+        sup.execute(dead)
+    assert calls["n"] == 1  # no in-place retry on a dead mesh
+    assert sup.device_losses == 1
+
+
+def test_posthoc_timeout_counted():
+    sup = ServingFaultSupervisor(retry=RetryPolicy(timeout_s=0.0))
+    sup.execute(lambda: 1)
+    assert sup.timeouts == 1
+
+
+# -- remesh degradation reports --------------------------------------------------
+def test_remesh_report_flags_missing_axis_and_indivisible():
+    mesh = make_mesh((1,), ("data",))
+    from jax.sharding import PartitionSpec as P
+
+    tree = {"w": np.zeros((8, 4)), "b": np.zeros(3)}
+    specs = {"w": P("model"), "b": P("data")}
+    out, report = elastic.remesh_report(tree, mesh, specs)
+    assert out["w"].shape == (8, 4)  # placed (replicated), not dropped
+    assert len(report) == 1
+    d = report[0]
+    assert d.path == "['w']" or "w" in d.path
+    assert "model" in d.reason and d.applied == str(P(None, None))
+    # divisible specs are honored silently
+    _, clean = elastic.remesh_report({"b": np.zeros(3)}, mesh,
+                                     {"b": P("data")})
+    assert clean == []
+
+
+def test_remesh_logs_and_callbacks_on_degrade():
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((1,), ("data",))
+    seen = []
+    elastic.remesh({"w": np.zeros(4)}, mesh, {"w": P("model")},
+                   on_degrade=seen.append)
+    assert len(seen) == 1 and isinstance(seen[0], elastic.Degradation)
+    assert "model" in str(seen[0])
+
+
+def test_shrink_mesh():
+    mesh = make_mesh((1,), ("data",))
+    dev_id = int(np.asarray(mesh.devices).flat[0].id)
+    assert elastic.shrink_mesh(mesh, [dev_id + 999]) is None  # 1 survivor
+    with pytest.raises(RuntimeError, match="no devices survive"):
+        elastic.shrink_mesh(mesh, [dev_id])
+
+
+# -- admission validation (request-level isolation) ------------------------------
+def test_poisoned_request_cannot_touch_healthy_neighbors():
+    """Regression (ISSUE 8): a NaN-ξ request packed next to a healthy one
+    is rejected at admission; the neighbor's moments are bit-identical to
+    a run without the poisoned request in the queue."""
+    post = _post()
+    clean = GPRequest(kind="moments", n=6, seed=2)
+    GPFieldServer(post, slab=8).run([clean])
+
+    bad = poison_request(post.icr)
+    good = GPRequest(kind="moments", n=6, seed=2)
+    GPFieldServer(post, slab=8).run([bad, good])
+
+    assert bad.done and bad.error is not None
+    assert bad.error.code == "xi-nonfinite"
+    assert good.error is None
+    assert np.isfinite(good.mean).all() and np.isfinite(good.std).all()
+    np.testing.assert_array_equal(good.mean, clean.mean)
+    np.testing.assert_array_equal(good.std, clean.std)
+
+
+def test_xi_geometry_mismatch_rejected():
+    srv = GPFieldServer(_post(), slab=2)
+    wrong = GPRequest(kind="sample", n=1,
+                      xi=[np.zeros(3, np.float32)])
+    srv.run([wrong])
+    assert wrong.error is not None and wrong.error.code == "xi-geometry"
+    assert "xi_shapes" in wrong.error.message
+
+
+def test_theta_pinning():
+    srv = GPFieldServer(_post(rho=8.0), slab=2)
+    nan = GPRequest(kind="sample", n=1, theta={"rho": float("nan")})
+    stale = GPRequest(kind="sample", n=1, theta={"rho": 99.0})
+    ok = GPRequest(kind="sample", n=1, theta={"rho": 8.0})
+    srv.run([nan, stale, ok])
+    assert nan.error.code == "theta-nonfinite"
+    assert stale.error.code == "theta-mismatch"
+    assert ok.error is None and len(ok.fields) == 1
+
+
+def test_xi_override_draws_around_client_excitation():
+    """A request's ξ replaces the posterior mean for its rows only."""
+    import jax.numpy as jnp
+
+    post = _post()
+    icr = post.icr
+    rng = np.random.RandomState(0)
+    xi = [rng.randn(*s).astype(np.float32) for s in icr.xi_shapes()]
+    req = GPRequest(kind="sample", n=1, seed=7, xi=xi)
+    plain = GPRequest(kind="sample", n=1, seed=7)
+    GPFieldServer(post, slab=4).run([req, plain])
+    assert req.error is None and plain.error is None
+
+    k = jax.random.fold_in(jax.random.PRNGKey(7), 0)
+    ks = jax.random.split(k, len(xi))
+    mats = icr.matrices_cached(post.theta)
+    xs = [jnp.asarray(x) + s * jax.random.normal(kk, x.shape, jnp.float32)
+          for kk, x, s in zip(ks, xi, post.std())]
+    want = np.asarray(icr.apply_sqrt(mats, xs))
+    np.testing.assert_allclose(req.fields[0], want, rtol=1e-5, atol=1e-5)
+    assert np.abs(req.fields[0] - plain.fields[0]).max() > 1e-3
+
+
+def test_nonfinite_posterior_rejected_at_install():
+    post = _post()
+    poisoned = post.mean[0].at[0].set(np.nan)
+    bad = type(post)(icr=post.icr, mean=[poisoned, *post.mean[1:]],
+                     log_std=post.log_std, theta=post.theta)
+    with pytest.raises(ValueError, match="non-finite"):
+        GPFieldServer(bad, slab=2)
+
+
+# -- mesh-aware executable cache -------------------------------------------------
+def test_mesh_is_part_of_the_cache_key_and_fingerprint():
+    post = _post()
+    plain = GPFieldServer(post, slab=4)
+    mesh = make_mesh((1,), ("data",))
+    meshed = GPFieldServer(post, slab=4, mesh=mesh)
+    fp_plain = plain.cache_key_fingerprint()
+    fp_mesh = meshed.cache_key_fingerprint()
+    assert fp_plain["mesh"] == "unsharded"
+    assert fp_mesh["mesh"].startswith("samples:1:")
+    assert fp_plain["digest"] != fp_mesh["digest"]
+    assert plain._cache_key(post) != meshed._cache_key(post)
+    # chart sharding is a third distinct key
+    charted = GPFieldServer(post, slab=4,
+                            mesh=make_mesh((1,), ("space",)), shard="chart")
+    assert charted.cache_key_fingerprint()["digest"] not in (
+        fp_plain["digest"], fp_mesh["digest"])
+
+
+def test_plan_cached_mesh_key():
+    from repro.kernels import dispatch
+
+    dispatch.plan_cache_clear()
+    p1 = dispatch.plan_cached(CHART, samples=4)
+    p2 = dispatch.plan_cached(CHART, samples=4,
+                              mesh_key=("samples", ("data",), (8,)))
+    assert p1 is not p2  # a re-mesh re-plans, never a stale hit
+    assert p1 == p2      # ...but the per-device routing is unchanged
+    assert dispatch.plan_cache_stats["misses"] == 2
+
+
+def test_single_device_mesh_matches_unsharded_bitwise():
+    """shard="samples" on a trivial 1-device mesh reduces to the plain
+    server exactly — (seed, row) keying is mesh-independent."""
+    post = _post()
+    mesh = make_mesh((1,), ("data",))
+    a = GPRequest(kind="sample", n=3, seed=11)
+    b = GPRequest(kind="sample", n=3, seed=11)
+    GPFieldServer(post, slab=4).run([a])
+    srv = GPFieldServer(post, slab=4, mesh=mesh)
+    srv.run([b])
+    assert srv.serving_mode.startswith("sharded-samples")
+    for fa, fb in zip(a.fields, b.fields):
+        np.testing.assert_array_equal(fa, fb)
+
+
+def test_chart_sharded_single_device_matches_unsharded():
+    post = _post()
+    mesh = make_mesh((1,), ("space",))
+    a = GPRequest(kind="moments", n=5, seed=3)
+    b = GPRequest(kind="moments", n=5, seed=3)
+    GPFieldServer(post, slab=4).run([a])
+    GPFieldServer(post, slab=4, mesh=mesh, shard="chart").run([b])
+    np.testing.assert_allclose(a.mean, b.mean, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(a.std, b.std, rtol=1e-5, atol=1e-5)
+
+
+# -- fault injection on the single real device -----------------------------------
+def test_straggler_detection_from_serving_step_times():
+    sup = ServingFaultSupervisor(monitor=StragglerMonitor(min_samples=6))
+    inj = ChaosInjector([Straggler(at_slab=8, delay_s=0.4)])
+    srv = GPFieldServer(_post(), slab=4, supervisor=sup, fault_injector=inj)
+    srv.run([GPRequest(kind="sample", n=40, seed=5)])  # 10 slabs of 4
+    assert inj.fired
+    assert sup.monitor.stragglers >= 1
+
+
+def test_device_loss_without_mesh_is_fatal():
+    inj = ChaosInjector([KillDevice(at_slab=0)])
+    srv = GPFieldServer(_post(), slab=2, fault_injector=inj)
+    with pytest.raises(DeviceLossError):
+        srv.run([GPRequest(kind="sample", n=1, seed=1)])
+
+
+def test_metrics_surface_fault_and_degradation_state():
+    srv = GPFieldServer(_post(), slab=2)
+    srv.run([GPRequest(kind="sample", n=1, seed=1)])
+    m = srv.metrics()
+    for key in ("slabs_run", "replans", "replayed_slabs", "degradations",
+                "mesh", "mode", "fault_device_losses", "fault_stragglers",
+                "last_recovery_s", "capacity"):
+        assert key in m, key
+    assert m["mesh"] == "unsharded" and m["replans"] == 0
+
+
+# -- the 8-virtual-device acceptance suite ---------------------------------------
+@pytest.mark.slow
+def test_chaos_acceptance_suite_8dev():
+    """Kill-mid-stream (mesh 8 -> 7, bit-identical replay, cache-miss
+    assertion), collapse-to-1 degradation, straggler detection, chart-ring
+    shrink and poison isolation — in a subprocess, because XLA_FLAGS must
+    be set before jax initializes."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("REPRO_BACKEND", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.chaos", "--check"],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert out.stdout.count("PASS") == 5, out.stdout
+    assert "FAIL" not in out.stdout, out.stdout
