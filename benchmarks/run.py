@@ -14,6 +14,9 @@
   serving_mesh — mesh serving (DESIGN.md §15): samples/s at mesh 1 vs 8
               virtual CPU devices + fault-recovery time (device kill ->
               first completed slab), via repro.distributed.chaos --bench
+  cg        — data-conditioning solvers (DESIGN.md §16): batched CG on
+              (W K Wᵀ + σ²I) — iterations-to-rtol + solves/s, ICR-whitened
+              preconditioner vs unpreconditioned vs dense (BENCH_PR9.json)
   scaling   — paper Eq. 13 (O(N) check, log-log slope)
   vi        — §3.2 end-to-end: standardized GP regression (MAP)
   grad      — one value_and_grad step of the §3.2 loss: fused adjoint
@@ -200,6 +203,7 @@ def main() -> None:
         "serving": lambda: speed.run_serving(_report, quick=args.quick),
         "serving_mesh": lambda: speed.run_serving_mesh(_report,
                                                        quick=args.quick),
+        "cg": lambda: speed.run_cg(_report, quick=args.quick),
         "scaling": lambda: speed.run_scaling(
             _report, sizes=(1024, 4096, 16384) if args.quick
             else (1024, 4096, 16384, 65536, 262144)),

@@ -363,3 +363,58 @@ def run_dtype(report, *, quick: bool = False):
     report("dtype/pyramid_bytes_reduction",
            totals[("bfloat16", False)] / totals[("bfloat16", True)],
            "modeled HBM bytes per-level/pyramid at bf16")
+
+
+def run_cg(report, *, quick: bool = False):
+    """Data-conditioning solver table (§16; BENCH_PR9.json): batched CG on
+    the observation system (W K Wᵀ + σ²I) for the 1-D TOD and 2-D image
+    scenarios — iterations-to-rtol and warm solves/s for the ICR-whitened
+    preconditioner vs unpreconditioned CG vs the dense direct solve. The
+    acceptance bar is the iteration ratio row: icr must need <=0.5x the
+    unpreconditioned iterations."""
+    from repro.core import ICR, matern32, regular_chart
+    from repro.solvers import CGConfig, build_condition_system, pcg_solve
+    from repro.solvers.gp_system import obs_operator
+
+    cases = [
+        ("tod", regular_chart(64, 2 if quick else 3, boundary="reflect"),
+         8.0),
+        ("image", regular_chart((8, 8), 2, boundary="reflect"), 4.0),
+    ]
+    k_rhs = 4 if quick else 8
+    for name, chart, rho in cases:
+        icr = ICR(chart=chart, kernel=matern32.with_defaults(rho=rho),
+                  use_pallas=True)
+        n = int(np.prod(chart.final_shape))
+        obs_idx = np.arange(0, n, 2)
+        noise = 0.25
+        system = build_condition_system(
+            icr, obs_operator(icr, obs_idx=obs_idx), noise ** 2)
+        rng = np.random.default_rng(0)
+        b = jnp.asarray(rng.standard_normal((k_rhs, obs_idx.size)),
+                        jnp.float32)
+        cfg = CGConfig(rtol=1e-6, max_iters=4 * obs_idx.size)
+
+        iters = {}
+        for variant, pc in (("icr", system.precond), ("none", None)):
+            x, stats, _, _ = pcg_solve(system.matvec, b, precond=pc,
+                                       cfg=cfg)
+            its = int(np.max(np.asarray(stats["iters"])))
+            iters[variant] = its
+            t = _bench(lambda: pcg_solve(system.matvec, b, precond=pc,
+                                         cfg=cfg)[0],
+                       repeats=2 if quick else 5)
+            report(f"cg/{name}/{variant}/solve", t * 1e6,
+                   f"N={n} n_obs={obs_idx.size} k={k_rhs} iters={its} "
+                   f"{k_rhs / t:.1f} solves/s")
+        t_d = _bench(lambda: system.dense_solve(b),
+                     repeats=2 if quick else 5)
+        report(f"cg/{name}/dense/solve", t_d * 1e6,
+               f"N={n} n_obs={obs_idx.size} k={k_rhs} "
+               f"{k_rhs / t_d:.1f} solves/s")
+        ratio = iters["icr"] / iters["none"]
+        report(f"cg/{name}/iter_ratio", ratio,
+               f"icr {iters['icr']} vs unpreconditioned {iters['none']} "
+               f"iterations to rtol=1e-6 (bar: <=0.5)")
+        assert ratio <= 0.5, \
+            f"ICR preconditioner ratio {ratio:.2f} misses the 0.5x bar"

@@ -330,6 +330,10 @@ def lint_scenario(scn, *, backend: str = "interpret") -> list:
     for name, low in sorted(lowered.items()):
         findings += lint_dtype_hlo(
             low.compile().as_text(), chart=chart, policy=scn.policy,
-            samples=scn.samples, batched="batch" in name or "slab" in name,
+            samples=scn.samples,
+            # condition_matvec is slab-shaped too: k RHS columns ride the
+            # sample axis through apply_sqrt_batch and its VJP
+            batched=("batch" in name or "slab" in name
+                     or name == "condition_matvec"),
             label=scn.label, entry=name)
     return findings

@@ -14,6 +14,9 @@ via ``jax.eval_shape`` where possible):
                             applications + the VJP)
   ``apply_sqrt_batch``      the native sample-slab forward (§10)
   ``apply_sqrt_batch_vjp``  its ξ-gradient
+  ``condition_matvec``      the §16 data-conditioning CG hot loop body:
+                            (W K Wᵀ + σ²I) v on a batch of RHS vectors
+                            (two sqrt applications per iteration)
   ``serve_slab``            the §12 serving slab step through a real
                             ``GPFieldServer`` (draw + refine + f32 cast),
                             plus the executable-cache key fingerprint
@@ -39,7 +42,7 @@ _UNSET = object()
 
 # entry points every scenario lowers and fingerprints (module doc above)
 ENTRY_POINTS = ("apply_sqrt", "apply_sqrt_vjp", "apply_sqrt_batch",
-                "apply_sqrt_batch_vjp", "serve_slab")
+                "apply_sqrt_batch_vjp", "condition_matvec", "serve_slab")
 
 
 @contextlib.contextmanager
@@ -160,6 +163,18 @@ def lower_entries(scn: Scenario, *, backend: str = "interpret",
             icr.apply_sqrt_batch).lower(mats_s, xib_s)
         out["apply_sqrt_batch_vjp"] = jax.jit(
             jax.grad(loss_batch, argnums=1)).lower(mats_s, xib_s)
+
+        # §16 conditioning matvec: observe every other finest-grid pixel
+        from repro.solvers.gp_system import condition_matvec, obs_operator
+
+        import numpy as np
+
+        n_pix = int(np.prod(icr.chart.final_shape))
+        op = obs_operator(icr, obs_idx=np.arange(0, n_pix, 2))
+        v_s = jax.ShapeDtypeStruct((scn.samples, op.n_obs), jnp.float32)
+        out["condition_matvec"] = jax.jit(
+            lambda mats, v: condition_matvec(icr, mats, op, 0.05 ** 2, v)
+        ).lower(mats_s, v_s)
 
         from repro.core.vi import Posterior
         from repro.launch.serve_gp import GPFieldServer

@@ -38,6 +38,7 @@ from .vi import (
     Posterior,
     advi_fit,
     advi_posterior,
+    cg_posterior,
     gaussian_log_likelihood,
     map_fit,
     map_posterior,
@@ -60,5 +61,5 @@ __all__ = [
     "uniform_prior",
     "map_fit", "advi_fit", "neg_log_joint", "gaussian_log_likelihood",
     "poisson_log_likelihood",
-    "Posterior", "map_posterior", "advi_posterior",
+    "Posterior", "map_posterior", "advi_posterior", "cg_posterior",
 ]

@@ -115,27 +115,43 @@ class KissGP:
         return jnp.asarray(w @ kuu @ w.T)
 
     # -- paper §5.2 forward pass -------------------------------------------------
-    def solve_cg(self, y: Array, iters: int = 40, p: Array | None = None) -> Array:
-        """K⁻¹ y with a fixed CG iteration budget (paper: 40)."""
+    def solve(self, y: Array, *, rtol: float = 1e-6, max_iters: int = 40,
+              p: Array | None = None) -> tuple:
+        """K⁻¹ y through the guarded batched CG core (solvers.pcg).
+
+        Bounded ``while_loop`` with a tolerance early-exit (the paper's
+        40-iteration budget stays as the cap) plus the §16 monitors:
+        breakdown (pᵀAp ≤ 0 freezes the column instead of the old
+        ``+ 1e-30`` silent garbage), divergence/NaN quarantine and
+        stagnation. Returns ``(x, stats)`` with per-solve ``status`` /
+        ``iters`` / ``relres`` scalars; fully jit-traceable.
+        """
+        from repro.solvers import CGConfig, pcg_iterate
+
         p = self.spectrum() if p is None else p
 
         def mv(v):
-            return self.matvec(v, p)
+            return jax.vmap(lambda c: self.matvec(c, p))(v)
 
-        def body(_, carry):
-            xk, rk, pk, rs = carry
-            ap = mv(pk)
-            alpha = rs / (pk @ ap + 1e-30)
-            xk = xk + alpha * pk
-            rk = rk - alpha * ap
-            rs_new = rk @ rk
-            pk = rk + (rs_new / (rs + 1e-30)) * pk
-            return xk, rk, pk, rs_new
+        cfg = CGConfig(rtol=rtol, max_iters=max_iters)
+        x, stats, _ = pcg_iterate(mv, y[None, :], cfg=cfg)
+        return x[0], {k: v[0] if getattr(v, "ndim", 0) else v
+                      for k, v in stats.items()}
 
-        x0 = jnp.zeros_like(y)
-        carry = (x0, y, y, y @ y)
-        carry = jax.lax.fori_loop(0, iters, body, carry)
-        return carry[0]
+    def solve_cg(self, y: Array, iters: int = 40, p: Array | None = None) -> Array:
+        """Deprecated shim: pre-§16 signature of :meth:`solve`.
+
+        The fixed ``fori_loop(0, iters)`` body is gone — this now runs
+        the guarded core with ``iters`` as the cap and the default rtol
+        early-exit, returning only x as before.
+        """
+        import warnings
+
+        warnings.warn("KissGP.solve_cg is deprecated; use KissGP.solve "
+                      "(guarded CG with tolerance early-exit and "
+                      "breakdown reporting)", DeprecationWarning,
+                      stacklevel=2)
+        return self.solve(y, max_iters=iters, p=p)[0]
 
     def logdet_slq(self, key, probes: int = 10, lanczos_iters: int = 15,
                    p: Array | None = None) -> Array:
@@ -152,21 +168,32 @@ class KissGP:
             m_it = lanczos_iters
 
             def body(i, carry):
-                q_prev, q, alpha, beta = carry
+                q_prev, q, alpha, beta, live = carry
                 w = mv(q) - beta[i] * q_prev
                 a = w @ q
                 w = w - a * q
                 # one-shot full reorthogonalization is skipped (matches the
                 # cheap setting the paper grants KISS-GP)
                 b = jnp.linalg.norm(w)
-                alpha = alpha.at[i].set(a)
-                beta = beta.at[i + 1].set(b)
-                return q, w / (b + 1e-30), alpha, beta
+                # Lanczos breakdown: ||w|| ≈ 0 means the Krylov space is
+                # exhausted (K effectively low-rank). Normalizing w/(b+eps)
+                # would emit a junk direction and poison every later step;
+                # instead truncate — zero the coupling β so T becomes block
+                # diagonal, park the dead block's diagonal at 1 (log 1 = 0,
+                # so even degenerate-eigenvalue leakage contributes nothing
+                # to the quadrature) and stop iterating this probe.
+                ok = live & (b > 1e-6 * (jnp.abs(a) + beta[i] + 1e-30))
+                alpha = alpha.at[i].set(jnp.where(live, a, 1.0))
+                beta = beta.at[i + 1].set(jnp.where(ok, b, 0.0))
+                q_next = jnp.where(ok, w / jnp.where(b == 0, 1.0, b),
+                                   jnp.zeros_like(w))
+                return q, q_next, alpha, beta, ok
 
             alpha = jnp.zeros(m_it, p.dtype)
             beta = jnp.zeros(m_it + 1, p.dtype)
-            carry = (jnp.zeros_like(q0), q0, alpha, beta)
-            _, _, alpha, beta = jax.lax.fori_loop(0, m_it, body, carry)
+            carry = (jnp.zeros_like(q0), q0, alpha, beta,
+                     jnp.asarray(True))
+            _, _, alpha, beta, _ = jax.lax.fori_loop(0, m_it, body, carry)
             t = (jnp.diag(alpha) + jnp.diag(beta[1:m_it], 1)
                  + jnp.diag(beta[1:m_it], -1))
             evals, evecs = jnp.linalg.eigh(t)
@@ -179,4 +206,5 @@ class KissGP:
     def forward_pass(self, y: Array, key) -> tuple:
         """The §5.2 timed unit: K⁻¹y (40 CG) + logdet (10×15 SLQ)."""
         p = self.spectrum()
-        return self.solve_cg(y, 40, p), self.logdet_slq(key, 10, 15, p)
+        return (self.solve(y, max_iters=40, p=p)[0],
+                self.logdet_slq(key, 10, 15, p))

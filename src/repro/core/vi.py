@@ -184,6 +184,67 @@ def advi_posterior(icr, params, theta=None) -> Posterior:
                      theta=theta)
 
 
+def cg_posterior(icr, obs, y, *, noise_std: float = 0.05, theta=None,
+                 config=None, use_precond: bool = True,
+                 dense_fallback: bool = True, mesh=None, manager=None,
+                 checkpoint_every: int = 0) -> tuple:
+    """Exact data-conditioned posterior via guarded batched CG (§16).
+
+    Solves ``(W K Wᵀ + σ²I) α = y`` matrix-free — the covariance action
+    is two ICR square-root applications per matvec — then whitens the
+    correction: ``ξ̂ = Sᵀ Wᵀ α``, so the returned delta
+    :class:`Posterior` (``mean = ξ̂``, ``log_std = None``) reproduces the
+    exact GP regression posterior mean ``K Wᵀ α`` through the ordinary
+    serving path (``sqrt(K)(ξ̂)``), with θ/chart/caching semantics
+    unchanged.
+
+    ``obs`` is an observation spec: flat finest-grid indices (any
+    dimension), off-grid 1-D locations (float array — KISS-GP sparse
+    interpolation rows), or a prebuilt operator from
+    ``solvers.gp_system``. The solve runs the fallback ladder
+    (ICR-whitened preconditioner → unpreconditioned → dense for small
+    charts) with per-RHS quarantine isolation; ``manager`` +
+    ``checkpoint_every`` opt into preemption-safe checkpointing and
+    ``mesh`` shards the matvec over the RHS axis.
+
+    Returns ``(posterior, report)`` — the report is the structured
+    :class:`~repro.solvers.SolveReport` (iterations, residuals, fallback
+    path, quarantined RHS).
+    """
+    import numpy as np
+
+    from repro.solvers import (CGConfig, build_condition_system,
+                               solve_guarded)
+    from repro.solvers.gp_system import obs_operator
+
+    if hasattr(obs, "apply") and hasattr(obs, "apply_t"):
+        op = obs
+    else:
+        arr = np.asarray(obs)
+        if np.issubdtype(arr.dtype, np.integer):
+            op = obs_operator(icr, obs_idx=arr)
+        else:
+            op = obs_operator(icr, x_obs=arr)
+    y = jnp.asarray(y, jnp.float32).reshape(1, -1)
+    if y.shape[1] != op.n_obs:
+        raise ValueError(f"y has {y.shape[1]} entries but the observation "
+                         f"operator expects {op.n_obs}")
+    system = build_condition_system(icr, op, float(noise_std) ** 2,
+                                    theta=theta, mesh=mesh,
+                                    use_precond=use_precond)
+    cfg = config or CGConfig(rtol=1e-7, max_iters=max(4 * op.n_obs, 200))
+    ladder = ([("icr", system.precond)] if system.precond is not None
+              else []) + [("none", None)]
+    alpha, report = solve_guarded(
+        system.matvec, y, preconds=ladder,
+        dense_solve=system.dense_solve if dense_fallback else None,
+        cfg=cfg, manager=manager, checkpoint_every=checkpoint_every,
+        tag="cg_posterior")
+    xi_hat = system.project_xi(jnp.asarray(alpha))
+    mean = [leaf[0] for leaf in xi_hat]
+    return Posterior(icr=icr, mean=mean, theta=theta), report
+
+
 def gaussian_log_likelihood(noise_std: float, obs_idx=None):
     """Factory: Gaussian likelihood on (a subset of) the field."""
 

@@ -19,6 +19,11 @@ The acceptance suite (``--check``) runs on 8 virtual CPU devices:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.distributed.chaos --check
 
+``--check-solvers`` runs the §16 *solver* chaos suite on the same mesh:
+kill a device mid-CG-solve (checkpoint/resume on the shrunk mesh, zero
+dropped RHS) and NaN-poison one RHS column of a sharded batched solve
+(quarantine isolation — siblings bit-identical to the clean run).
+
 ``--bench`` emits JSON benchmark rows (mesh 1 vs 8 throughput and the
 fault → first-completed-slab recovery time) consumed by
 ``benchmarks.speed.run_serving_mesh``.
@@ -258,18 +263,111 @@ CHECKS = [check_kill_midstream, check_collapse_to_single_device,
           check_poison_isolation]
 
 
-def run_checks() -> int:
+# -- §16 solver chaos (kind="condition" / guarded batched CG) -------------------
+def _condition_inputs(srv):
+    icr = srv.posterior.icr
+    n = int(np.prod(icr.chart.final_shape))
+    obs_idx = np.arange(0, n, 4)
+    rng = np.random.default_rng(3)
+    y = (np.sin(np.linspace(0.0, 6.0, obs_idx.size))
+         + 0.05 * rng.standard_normal(obs_idx.size))
+    return y, obs_idx
+
+
+def check_solver_kill_midsolve() -> str:
+    """Kill one of 8 devices mid-CG-solve: the solve must checkpoint,
+    re-plan onto the 7-survivor mesh, resume from the saved carry and
+    finish with zero dropped RHS — the posterior mean matching the
+    unfaulted run (fp tolerance: shard reductions reorder on 7 vs 8)."""
     import jax
+    from repro.launch.serve_gp import GPRequest
 
     n_dev = len(jax.devices())
-    print(f"chaos acceptance suite on {n_dev} {jax.default_backend()} "
+    base_srv = _mk_server(_full_mesh())
+    base_srv.solver_checkpoint_every = 2
+    y, obs_idx = _condition_inputs(base_srv)
+    base = GPRequest(kind="condition", n=7, seed=21, y=y, obs_idx=obs_idx)
+    base_srv.run([base])
+    assert base.error is None and base.report.ok, base.report
+
+    inj = ChaosInjector([KillDevice(at_slab=1, device_indices=(3,))])
+    srv = _mk_server(_full_mesh(), injector=inj)
+    srv.solver_checkpoint_every = 2
+    req = GPRequest(kind="condition", n=7, seed=21, y=y, obs_idx=obs_idx)
+    srv.run([req])
+
+    assert inj.fired, "fault never fired"
+    assert req.error is None, req.error
+    assert req.report.ok, f"dropped RHS: {req.report.summary()}"
+    assert req.report.resumes, "no checkpoint resume recorded"
+    assert srv.mesh is not None, "mesh collapsed instead of shrinking"
+    live = int(np.asarray(srv.mesh.devices).size)
+    assert live == n_dev - 1, f"expected mesh of {n_dev - 1}, got {live}"
+    rel = (np.linalg.norm(req.mean - base.mean)
+           / np.linalg.norm(base.mean))
+    assert rel < 1e-5, f"resumed mean off by rel {rel:.2e}"
+    np.testing.assert_allclose(req.std, base.std, atol=1e-4)
+    ev = req.report.resumes[0]
+    return (f"solver-kill: mesh {n_dev}->{live} at iter {ev.at_iter}, "
+            f"resumed from checkpoint step {ev.restored_step}, "
+            f"{req.report.n_rhs} RHS all converged (mean rel {rel:.1e})")
+
+
+def check_solver_divergence_isolation() -> str:
+    """NaN-poison one RHS column of a mesh-sharded batched solve: the
+    column is quarantined (iterate zeroed, status nonfinite) and every
+    sibling column is bit-identical to the clean run."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.serve_gp import (SCENARIOS, demo_posterior,
+                                      scenario_chart)
+    from repro.solvers import (CGConfig, build_condition_system,
+                               obs_operator, pcg_solve)
+
+    mesh = _full_mesh()
+    chart = scenario_chart("tod", quick=True)
+    post = demo_posterior(chart, SCENARIOS["tod"])
+    icr = post.icr
+    n = int(np.prod(chart.final_shape))
+    op = obs_operator(icr, obs_idx=np.arange(0, n, 4))
+    system = build_condition_system(icr, op, 0.05 ** 2, mesh=mesh)
+    k = len(jax.devices())
+    rng = np.random.default_rng(5)
+    b = rng.standard_normal((k, op.n_obs)).astype(np.float32)
+    cfg = CGConfig(rtol=1e-7, max_iters=200)
+    x_clean, _, _, _ = pcg_solve(system.matvec, jnp.asarray(b),
+                                 precond=system.precond, cfg=cfg)
+    bad = b.copy()
+    bad[3, 0] = np.nan
+    x_bad, st_bad, _, _ = pcg_solve(system.matvec, jnp.asarray(bad),
+                                    precond=system.precond, cfg=cfg)
+    keep = [i for i in range(k) if i != 3]
+    assert np.array_equal(np.asarray(x_clean)[keep],
+                          np.asarray(x_bad)[keep]), \
+        "sibling columns perturbed by the poisoned RHS"
+    assert int(np.asarray(st_bad["status"])[3]) == 2, st_bad  # NONFINITE
+    assert np.all(np.asarray(x_bad)[3] == 0.0), "quarantine not zeroed"
+    return (f"solver-isolation: NaN column quarantined on mesh {k}, "
+            f"{len(keep)} siblings bit-identical to the clean run")
+
+
+SOLVER_CHECKS = [check_solver_kill_midsolve,
+                 check_solver_divergence_isolation]
+
+
+def run_checks(checks=None, label: str = "chaos") -> int:
+    import jax
+
+    checks = CHECKS if checks is None else checks
+    n_dev = len(jax.devices())
+    print(f"{label} acceptance suite on {n_dev} {jax.default_backend()} "
           "devices")
     if n_dev < 2:
         print("FAIL need >= 2 devices (set XLA_FLAGS="
               "--xla_force_host_platform_device_count=8)")
         return 1
     failed = 0
-    for check in CHECKS:
+    for check in checks:
         try:
             msg = check()
         except Exception as exc:  # noqa: BLE001 — report every check
@@ -323,6 +421,9 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--check", action="store_true",
                     help="run the chaos acceptance suite")
+    ap.add_argument("--check-solvers", action="store_true",
+                    help="run the §16 solver chaos suite (mid-solve kill "
+                         "+ sharded divergence isolation)")
     ap.add_argument("--bench", action="store_true",
                     help="emit mesh-throughput + recovery benchmark rows")
     ap.add_argument("--full", action="store_true")
@@ -330,9 +431,11 @@ def main():
     rc = 0
     if args.check:
         rc = run_checks()
+    if args.check_solvers:
+        rc = max(rc, run_checks(SOLVER_CHECKS, label="solver chaos"))
     if args.bench:
         run_bench(quick=not args.full)
-    if not (args.check or args.bench):
+    if not (args.check or args.check_solvers or args.bench):
         rc = run_checks()
     raise SystemExit(rc)
 

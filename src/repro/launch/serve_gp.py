@@ -103,11 +103,21 @@ class GPRequest:
     seed: int = 0
     xi: Optional[list] = None
     theta: Optional[dict] = None
+    # kind="condition" inputs: observed values plus exactly one of
+    # on-grid flat indices (obs_idx) or off-grid 1-D locations (x_obs);
+    # noise_std is the observation noise σ. ``n`` is the Matheron
+    # pathwise-sample budget for the predictive std (n >= 2 for a
+    # non-trivial std; the mean is exact either way).
+    y: Optional[np.ndarray] = None
+    obs_idx: Optional[np.ndarray] = None
+    x_obs: Optional[np.ndarray] = None
+    noise_std: float = 0.05
     done: bool = False
     error: Optional[object] = None  # RequestError (or legacy str)
     fields: list = dataclasses.field(default_factory=list)
     mean: Optional[np.ndarray] = None
     std: Optional[np.ndarray] = None
+    report: Optional[object] = None  # solvers.SolveReport (condition)
     # internal: rows drawn so far (the per-request eps stream index),
     # the streaming Welford state (count, running mean, running M2),
     # and whether admission validation already ran
@@ -180,7 +190,10 @@ class GPFieldServer:
     def __init__(self, posterior: Posterior, slab: int = 8,
                  max_cached: int = 8, mesh=None, shard: str = "samples",
                  supervisor: Optional[ServingFaultSupervisor] = None,
-                 fault_injector: Optional[Callable] = None):
+                 fault_injector: Optional[Callable] = None,
+                 ckpt_root: Optional[str] = None,
+                 solver_checkpoint_every: int = 8,
+                 solver_config=None):
         if shard not in ("samples", "chart"):
             raise ValueError(f"shard={shard!r}: expected 'samples' or "
                              "'chart'")
@@ -215,6 +228,16 @@ class GPFieldServer:
         self.dead_devices: set = set()
         self.degradations: list = []  # elastic.Degradation records
         self.last_recovery_s: Optional[float] = None  # fault -> first slab
+        # data-conditioned solves (kind="condition", DESIGN.md §16)
+        self.ckpt_root = ckpt_root
+        self.solver_checkpoint_every = int(solver_checkpoint_every)
+        self.solver_config = solver_config
+        self.condition_requests = 0
+        self.condition_rhs = 0       # real (unpadded) RHS columns solved
+        self.solve_segments = 0      # CG segment attempts (chaos hook)
+        self.solve_reports: list = []  # last few SolveReports
+        self._cond_cache: dict = {}
+        self._cond_seq = 0
         self.posterior = None
         self.set_posterior(posterior)
 
@@ -471,7 +494,7 @@ class GPFieldServer:
             if req.done or req.error or req._admitted:
                 continue
             req._admitted = True
-            if req.kind not in ("sample", "moments") \
+            if req.kind not in ("sample", "moments", "condition") \
                     or not isinstance(req.n, (int, np.integer)) \
                     or req.n <= 0 or not 0 <= int(req.seed) < 2**31:
                 self._reject(req, "bad-request",
@@ -507,6 +530,57 @@ class GPFieldServer:
                     self._reject(req, "xi-nonfinite",
                                  "xi contains NaN/Inf values")
                     continue
+            if req.kind == "condition":
+                self._admit_condition(req)
+
+    def _admit_condition(self, req: GPRequest):
+        """Conditioning inputs are validated before any solve work runs:
+        a non-finite y or a malformed observation spec is a structured
+        rejection at the queue, while runtime divergence/NaN *inside* the
+        solve is the solver quarantine's job (per-RHS isolation) — either
+        way no other request's answer is perturbed."""
+        y = None if req.y is None else np.asarray(req.y, np.float64).ravel()
+        if y is None or y.size == 0:
+            return self._reject(req, "y-missing",
+                                "kind='condition' requires observed "
+                                "values y")
+        if not np.isfinite(y).all():
+            return self._reject(req, "y-nonfinite",
+                                "y contains NaN/Inf values")
+        if (req.obs_idx is None) == (req.x_obs is None):
+            return self._reject(req, "obs-spec",
+                                "pass exactly one of obs_idx (on-grid) "
+                                "or x_obs (off-grid 1-D)")
+        chart = self.posterior.icr.chart
+        n_grid = int(np.prod(chart.final_shape))
+        if req.obs_idx is not None:
+            idx = np.asarray(req.obs_idx)
+            if idx.size and not np.issubdtype(idx.dtype, np.integer):
+                return self._reject(req, "obs-dtype",
+                                    "obs_idx must be integer flat indices")
+            if idx.size == 0 or idx.min() < 0 or idx.max() >= n_grid:
+                return self._reject(req, "obs-range",
+                                    "obs_idx empty or out of range for a "
+                                    f"{n_grid}-pixel chart")
+            n_obs = idx.size
+        else:
+            x = np.asarray(req.x_obs, np.float64).ravel()
+            if chart.ndim != 1:
+                return self._reject(req, "obs-ndim",
+                                    "off-grid x_obs interpolation is 1-D "
+                                    "only; use obs_idx for N-D charts")
+            if x.size == 0 or not np.isfinite(x).all():
+                return self._reject(req, "obs-nonfinite",
+                                    "x_obs is empty or non-finite")
+            n_obs = x.size
+        if y.size != n_obs:
+            return self._reject(req, "obs-length",
+                                f"y has {y.size} entries but the "
+                                f"observation spec has {n_obs}")
+        if not (np.isfinite(req.noise_std) and float(req.noise_std) > 0):
+            return self._reject(req, "noise-invalid",
+                                f"noise_std={req.noise_std!r} must be a "
+                                "finite positive float")
 
     # -- slab execution --------------------------------------------------------
     def _slab_args(self, entry: dict, rows: list) -> tuple:
@@ -623,11 +697,178 @@ class GPFieldServer:
             i += len(chunk)
         return outs[0] if len(outs) == 1 else np.concatenate(outs, axis=0)
 
+    # -- data-conditioned solves (kind="condition", DESIGN.md §16) -------------
+    def _cond_mesh(self):
+        """RHS-axis sharding mesh for the conditioning matvec: the serving
+        mesh in "samples" mode (the RHS batch *is* a sample batch, split
+        the same way); chart-sharded serving solves unsharded — the
+        conditioning batch is small and the halo-exchange body has no RHS
+        axis to split."""
+        return self.mesh if self.shard == "samples" else None
+
+    def _condition_system(self, op, noise_var: float):
+        """LRU-cached ConditionSystem keyed like the executable cache plus
+        the observation fingerprint and σ² — a re-fit, re-mesh or new
+        observation pattern is a deliberate miss."""
+        from repro.solvers import build_condition_system
+
+        post = self.posterior
+        key = (self._cache_key(post), op.fingerprint(), float(noise_var))
+        sys_ = self._cond_cache.pop(key, None)
+        if sys_ is None:
+            sys_ = build_condition_system(post.icr, op, noise_var,
+                                          theta=post.theta,
+                                          mesh=self._cond_mesh())
+        self._cond_cache[key] = sys_
+        while len(self._cond_cache) > self.max_cached:
+            self._cond_cache.pop(next(iter(self._cond_cache)))
+        return sys_
+
+    def _solver_manager(self):
+        """Per-solve CheckpointManager rooted under ``ckpt_root`` (lazily
+        a tempdir): every solve gets its own directory so a resumed carry
+        can never alias another request's checkpoints."""
+        if self.solver_checkpoint_every <= 0:
+            return None
+        import os
+        import tempfile
+
+        from repro.checkpoint.checkpointer import CheckpointManager
+
+        if self.ckpt_root is None:
+            self.ckpt_root = tempfile.mkdtemp(prefix="gp-serve-solve-")
+        self._cond_seq += 1
+        return CheckpointManager(
+            os.path.join(self.ckpt_root, f"solve_{self._cond_seq}"))
+
+    def _run_condition(self, req: GPRequest):
+        """Serve one kind="condition" request end to end (§16).
+
+        RHS layout: column 0 solves the posterior-mean system
+        ``(W K Wᵀ + σ²I) α = y``; columns 1..n are Matheron pathwise
+        targets ``y − W f_j − σ ε_j`` for prior draws ``f_j = S ξ_j``
+        keyed ``fold_in(seed, row)`` exactly like the sampling slab — a
+        re-meshed replay reproduces the same draws. The batch is padded
+        to a multiple of the mesh size (zero-RHS columns converge at
+        iteration 0) and re-padded after an elastic shrink. The solve
+        runs the guarded fallback ladder under the fault supervisor with
+        checkpoint/resume; the structured SolveReport rides back on the
+        request and in ``metrics()``."""
+        from repro.solvers import CGConfig, solve_guarded
+        from repro.solvers.gp_system import obs_operator
+
+        self.condition_requests += 1
+        post = self.posterior
+        icr = post.icr
+        try:
+            op = obs_operator(icr, obs_idx=req.obs_idx, x_obs=req.x_obs)
+        except ValueError as e:  # race-proofing: _admit already checks
+            return self._reject(req, "obs-invalid", str(e))
+        noise_std = float(req.noise_std)
+        noise_var = noise_std ** 2
+        state = {"system": self._condition_system(op, noise_var)}
+        shapes = icr.xi_shapes()
+        shape = tuple(icr.chart.final_shape)
+        n = int(req.n)
+        k_real = 1 + n
+
+        def draw(row):
+            k = jax.random.fold_in(jax.random.PRNGKey(req.seed), row)
+            ks = jax.random.split(k, len(shapes) + 1)
+            xi = [jax.random.normal(kk, tuple(s), jnp.float32)
+                  for kk, s in zip(ks[:-1], shapes)]
+            eps = jax.random.normal(ks[-1], (op.n_obs,), jnp.float32)
+            return xi, eps
+
+        xi, eps = jax.vmap(draw)(jnp.arange(n))
+        fields = np.asarray(
+            icr.apply_sqrt_batch(state["system"].mats, xi)
+        ).astype(np.float32).reshape(n, -1)
+        y = jnp.asarray(np.asarray(req.y, np.float32).ravel())[None, :]
+        b = jnp.concatenate(
+            [y, y - op.apply(jnp.asarray(fields)) - noise_std * eps],
+            axis=0)
+
+        def shards_of(sys_):
+            return (1 if sys_.mesh is None
+                    else int(np.asarray(sys_.mesh.devices).size))
+
+        k_pad = -(-k_real // shards_of(state["system"])) \
+            * shards_of(state["system"])
+        if k_pad > k_real:
+            b = jnp.concatenate(
+                [b, jnp.zeros((k_pad - k_real, op.n_obs), b.dtype)],
+                axis=0)
+
+        def fault_hook(it):
+            self.solve_segments += 1
+            if self.fault_injector is not None:
+                self.fault_injector(self)
+
+        def on_device_loss(exc):
+            # shrink the mesh + rewarm the sampling entry, then rebuild
+            # the conditioning system on the survivors; the new width
+            # pads *up* to the survivors' multiple so the already-running
+            # solve_guarded ladder never narrows below its batch
+            self._on_device_loss(exc)
+            sys_ = self._condition_system(op, noise_var)
+            state["system"] = sys_
+            n_sh = shards_of(sys_)
+            k_new = -(-max(k_real, k_pad) // n_sh) * n_sh
+            return sys_.matvec, {"icr": sys_.precond, "none": None}, k_new
+
+        cfg = self.solver_config or CGConfig(
+            rtol=1e-7, max_iters=max(4 * op.n_obs, 200))
+        ladder = ([("icr", state["system"].precond)]
+                  if state["system"].precond is not None else []) \
+            + [("none", None)]
+        alpha, report = solve_guarded(
+            state["system"].matvec, b, preconds=ladder, cfg=cfg,
+            dense_solve=lambda bb: state["system"].dense_solve(bb),
+            manager=self._solver_manager(),
+            checkpoint_every=self.solver_checkpoint_every or None,
+            fault_hook=fault_hook, on_device_loss=on_device_loss,
+            executor=self.supervisor.execute,
+            n_report=k_real, tag=f"condition:{op.n_obs}obs")
+
+        req.report = report
+        self.solve_reports.append(report)
+        del self.solve_reports[:-16]
+        self.condition_rhs += k_real
+        if report.status[0] not in ("converged", "dense"):
+            req.done = True
+            req.error = RequestError(
+                "solve-failed",
+                f"posterior-mean solve ended '{report.status[0]}' "
+                f"(relres {report.relres[0]:.2e}) after rungs "
+                f"{list(report.rungs)}")
+            return
+        corr = np.asarray(state["system"].correct(
+            jnp.asarray(alpha[:k_real], jnp.float32))).reshape(k_real, -1)
+        req.mean = corr[0].reshape(shape)
+        # predictive std over the *non-quarantined* Matheron samples: a
+        # diverged/NaN sample column is excluded, never averaged in
+        good = [j for j in range(1, k_real)
+                if report.status[j] in ("converged", "dense")]
+        if len(good) >= 2:
+            samples = np.stack([fields[j - 1] + corr[j] for j in good])
+            req.std = samples.std(axis=0).reshape(shape)
+        else:
+            req.std = np.zeros(shape, np.float32)
+        self.fields_delivered += 2
+        req.done = True
+
     # -- serving loop ----------------------------------------------------------
     def step(self, queue: List[GPRequest]) -> bool:
         """Pack one slab from the queue, execute it, scatter the results.
+        Condition requests are served one per step (a whole batched solve
+        is one unit of work); sample/moments rows pack into slabs.
         Returns False when no request had demand (queue drained)."""
         self._admit(queue)
+        for req in queue:
+            if not req.done and req.kind == "condition":
+                self._run_condition(req)
+                return True
         cap = self._entry["capacity"]
         rows = []  # (request, row index in its eps stream)
         for req in queue:
@@ -713,6 +954,14 @@ class GPFieldServer:
             "capacity": self.capacity,
             "last_recovery_s": self.last_recovery_s,
             "degradations": [str(d) for d in self.degradations],
+            "condition_requests": self.condition_requests,
+            "condition_rhs": self.condition_rhs,
+            "solve_segments": self.solve_segments,
+            "solve_fallbacks": sum(len(r.fallbacks)
+                                   for r in self.solve_reports),
+            "solve_resumes": sum(len(r.resumes)
+                                 for r in self.solve_reports),
+            "solve_reports": [r.summary() for r in self.solve_reports[-4:]],
             **{f"fault_{k}": v
                for k, v in self.supervisor.metrics().items()},
         }

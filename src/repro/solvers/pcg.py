@@ -1,0 +1,521 @@
+"""Batched, guarded preconditioned conjugate gradients (DESIGN.md §16).
+
+One batched solve runs every right-hand side of ``A x = b`` (RHS-leading
+layout ``b: (k, n)``) through a single jitted ``lax.while_loop`` — the
+matvec is the fused pyramid/megakernel hot path, so batching the RHS is
+exactly the §10 sample-slab trick applied to inference. Robustness is
+the design center:
+
+  * **per-RHS masking** — every column carries its own status; converged
+    columns freeze (``alpha = beta = 0``: their iterate is bit-identical
+    from then on), and NaN/Inf or diverging columns are *quarantined* —
+    their iterate is explicitly zeroed the moment the status flips, so a
+    poisoned column can never re-enter the batched matvec and perturb
+    its slab-mates (the PR 8 ``_admit`` isolation contract, enforced at
+    the solver level);
+  * **monitors** — residual tolerance (rtol·‖b‖ ∨ atol), divergence
+    (‖r‖ > divergence_factor·‖b‖), stagnation (no relative improvement
+    for ``stall_window`` iterations) and curvature/breakdown guards
+    (pᵀAp ≤ 0, rᵀz ≤ 0) instead of the classic ``+ 1e-30`` silent-garbage
+    denominators;
+  * **fallback ladder** (:func:`solve_guarded`) — failed columns are
+    re-solved down a rung sequence (ICR-whitened preconditioner →
+    Jacobi/unpreconditioned → dense direct solve for small systems),
+    each transition recorded as a :class:`~.reports.FallbackEvent`;
+  * **preemption-safe state** (:func:`pcg_solve`) — the CG carry
+    checkpoints through ``checkpoint.CheckpointManager`` every
+    ``checkpoint_every`` iterations; a ``DeviceLossError`` raised by the
+    fault hook or the runtime triggers the caller's re-plan callback
+    (``elastic.shrink_mesh`` in serving), restores the latest
+    checkpoint, re-pads the carry to the surviving mesh's capacity and
+    continues — zero dropped RHS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.fault import DeviceLossError
+from .reports import (ACTIVE, BREAKDOWN, CONVERGED, DENSE, DIVERGED,
+                      MAXITER, NONFINITE, QUARANTINED, RETRYABLE, STALLED,
+                      STATUS_NAMES, FallbackEvent, ResumeEvent, SolveReport)
+
+Array = jnp.ndarray
+_TINY = 1e-30  # rel-residual denominators only — never inside an update
+
+
+@dataclasses.dataclass(frozen=True)
+class CGConfig:
+    """Solver policy knobs (hashable — closed over by jitted segments)."""
+
+    rtol: float = 1e-6
+    atol: float = 0.0
+    max_iters: int = 1000
+    divergence_factor: float = 1e4   # ‖r‖ > factor·‖b‖ ⇒ quarantine
+    stall_window: int = 30           # iters without improvement ⇒ stalled
+    stall_drop: float = 1e-3         # "improvement" = best shrinks by this
+    checkpoint_every: int = 0        # iters between carry checkpoints (0: off)
+    dense_max: int = 4096            # largest n the dense rung will factor
+
+
+# -- the jittable core ----------------------------------------------------------
+def _pcg_init(matvec, b: Array, precond, cfg: CGConfig,
+              x0: Optional[Array] = None) -> dict:
+    """Build the CG carry. Non-finite RHS columns are quarantined here
+    (status NONFINITE, everything zeroed) so not even the first matvec
+    sees them; trivially-zero columns converge at iteration 0."""
+    b = jnp.asarray(b)
+    finite = jnp.all(jnp.isfinite(b), axis=1)
+    b0 = jnp.where(finite[:, None], b, 0.0)
+    if x0 is None:
+        x = jnp.zeros_like(b0)
+        r = b0
+    else:
+        x = jnp.where(finite[:, None], jnp.asarray(x0, b0.dtype), 0.0)
+        r = b0 - matvec(x)
+    bnorm = jnp.sqrt(jnp.sum(b0 * b0, axis=1))
+    tol = jnp.maximum(cfg.rtol * bnorm, cfg.atol)
+    rnorm = jnp.sqrt(jnp.sum(r * r, axis=1))
+    status = jnp.where(~finite, NONFINITE,
+                       jnp.where(rnorm <= tol, CONVERGED, ACTIVE))
+    status = status.astype(jnp.int32)
+    z = precond(r) if precond is not None else r
+    rz = jnp.sum(r * z, axis=1)
+    active = status == ACTIVE
+    # a preconditioner that returns NaN or a non-SPD direction is caught
+    # before the first step, not after it has poisoned the iterate
+    status = jnp.where(active & ~jnp.isfinite(rz), NONFINITE, status)
+    status = jnp.where((status == ACTIVE) & (rz <= 0), BREAKDOWN, status)
+    quar = (status == NONFINITE)[:, None]
+    x = jnp.where(quar, 0.0, x)
+    r = jnp.where(quar, 0.0, r)
+    p = jnp.where((status == ACTIVE)[:, None], z, 0.0)
+    k = b.shape[0]
+    return {
+        "x": x, "r": r, "p": p, "rz": rz,
+        "bnorm": bnorm, "tol": tol, "rnorm": rnorm,
+        "best": rnorm, "since": jnp.zeros(k, jnp.int32),
+        "status": status, "iters": jnp.zeros(k, jnp.int32),
+        "it": jnp.asarray(0, jnp.int32),
+        "limit": jnp.asarray(cfg.max_iters, jnp.int32),
+    }
+
+
+def _pcg_cond(c: dict):
+    return (c["it"] < c["limit"]) & jnp.any(c["status"] == ACTIVE)
+
+
+def _pcg_body(matvec, precond, cfg: CGConfig) -> Callable[[dict], dict]:
+    """One masked PCG iteration over the whole RHS batch.
+
+    Frozen columns take exact zero steps (``alpha = beta = 0`` with
+    finite directions), so their iterate is bit-identical to a run where
+    they were solved alone — the isolation contract the solver tests pin.
+    """
+
+    def body(c: dict) -> dict:
+        active = c["status"] == ACTIVE
+        ap = matvec(c["p"])
+        pap = jnp.sum(c["p"] * ap, axis=1)
+        curv_ok = (pap > 0) & jnp.isfinite(pap)
+        breakdown = active & ~curv_ok
+        step = active & curv_ok
+        alpha = jnp.where(step,
+                          c["rz"] / jnp.where(pap == 0, 1.0, pap), 0.0)
+        x = c["x"] + alpha[:, None] * c["p"]
+        r = c["r"] - alpha[:, None] * ap
+        rnorm = jnp.sqrt(jnp.sum(r * r, axis=1))
+        z = precond(r) if precond is not None else r
+        rz_new = jnp.sum(r * z, axis=1)
+
+        nonfin = step & (~jnp.isfinite(rnorm) | ~jnp.isfinite(rz_new))
+        conv = step & ~nonfin & (rnorm <= c["tol"])
+        div = step & ~nonfin & ~conv & \
+            (rnorm > cfg.divergence_factor * jnp.maximum(c["bnorm"], _TINY))
+        improved = rnorm < c["best"] * (1.0 - cfg.stall_drop)
+        best = jnp.where(step & ~nonfin & improved, rnorm, c["best"])
+        since = jnp.where(step,
+                          jnp.where(improved & ~nonfin, 0, c["since"] + 1),
+                          c["since"])
+        stall = step & ~nonfin & ~conv & ~div & \
+            (since >= cfg.stall_window)
+        pz_bad = step & ~nonfin & ~conv & ~div & ~stall & (rz_new <= 0)
+
+        status = c["status"]
+        for mask, code in ((breakdown, BREAKDOWN), (nonfin, NONFINITE),
+                           (conv, CONVERGED), (div, DIVERGED),
+                           (stall, STALLED), (pz_bad, BREAKDOWN)):
+            status = jnp.where(mask & (status == ACTIVE), code, status)
+
+        still = status == ACTIVE
+        beta = jnp.where(still,
+                         rz_new / jnp.where(c["rz"] == 0, 1.0, c["rz"]), 0.0)
+        p = jnp.where(still[:, None], z + beta[:, None] * c["p"], c["p"])
+        # quarantine: a poisoned or runaway column is zeroed *now* —
+        # 0·NaN = NaN, so masking alone would let it leak back through the
+        # batched matvec on the next iteration
+        quar = (nonfin | div)[:, None]
+        x = jnp.where(quar, 0.0, x)
+        r = jnp.where(quar, 0.0, r)
+        p = jnp.where(quar, 0.0, p)
+        return {
+            "x": x, "r": r, "p": p,
+            "rz": jnp.where(still, rz_new, c["rz"]),
+            "bnorm": c["bnorm"], "tol": c["tol"],
+            "rnorm": jnp.where(step, rnorm, c["rnorm"]),
+            "best": best, "since": since,
+            "status": status,
+            "iters": jnp.where(active, c["iters"] + 1, c["iters"]),
+            "it": c["it"] + 1, "limit": c["limit"],
+        }
+
+    return body
+
+
+def _finalize(c: dict) -> dict:
+    c = dict(c)
+    c["status"] = jnp.where(c["status"] == ACTIVE, MAXITER, c["status"])
+    return c
+
+
+def _stats(c: dict) -> dict:
+    status = c["status"]
+    relres = c["rnorm"] / jnp.maximum(c["bnorm"], _TINY)
+    quarantined = (status == NONFINITE) | (status == DIVERGED)
+    relres = jnp.where(quarantined, jnp.inf, relres)
+    return {"status": status, "iters": c["iters"], "relres": relres,
+            "it": c["it"]}
+
+
+def pcg_iterate(matvec: Callable[[Array], Array], b: Array, *,
+                precond: Optional[Callable] = None,
+                cfg: CGConfig = CGConfig(),
+                x0: Optional[Array] = None,
+                carry: Optional[dict] = None,
+                finalize: bool = True) -> Tuple[Array, dict, dict]:
+    """The pure, jit-traceable solve: init (unless ``carry`` resumes one)
+    + one bounded ``while_loop``. Returns ``(x, stats, carry)`` where
+    ``stats`` holds per-RHS ``status``/``iters``/``relres`` arrays.
+
+    This is what ``KissGP.solve`` and other in-graph callers use; the
+    checkpoint/fallback drivers below wrap it with host-side control.
+    """
+    if carry is None:
+        carry = _pcg_init(matvec, b, precond, cfg, x0=x0)
+    carry = jax.lax.while_loop(_pcg_cond, _pcg_body(matvec, precond, cfg),
+                               carry)
+    if finalize:
+        carry = _finalize(carry)
+    return carry["x"], _stats(carry), carry
+
+
+# -- carry plumbing (checkpoint/re-pad) ------------------------------------------
+_SCALAR_KEYS = ("it", "limit")
+
+
+def _repad_carry(carry: dict, k_new: int, cfg: CGConfig) -> dict:
+    """Resize the RHS axis to ``k_new`` (elastic re-mesh changed the
+    sharding capacity). Added columns are zero-RHS padding: status
+    CONVERGED, everything zero — they take no steps and cost nothing but
+    their share of the batched matvec."""
+    k = int(np.shape(carry["status"])[0])
+    if k_new == k:
+        return carry
+    out = {}
+    for key, val in carry.items():
+        if key in _SCALAR_KEYS:
+            out[key] = val
+            continue
+        arr = jnp.asarray(val)
+        if k_new < k:
+            out[key] = arr[:k_new]
+            continue
+        pad_shape = (k_new - k,) + arr.shape[1:]
+        if key == "status":
+            pad = jnp.full(pad_shape, CONVERGED, arr.dtype)
+        else:
+            pad = jnp.zeros(pad_shape, arr.dtype)
+        out[key] = jnp.concatenate([arr, pad], axis=0)
+    return out
+
+
+def pcg_solve(matvec, b: Array, *,
+              precond: Optional[Callable] = None,
+              cfg: CGConfig = CGConfig(),
+              x0: Optional[Array] = None,
+              manager=None,
+              checkpoint_every: Optional[int] = None,
+              fault_hook: Optional[Callable[[int], None]] = None,
+              on_device_loss: Optional[Callable] = None,
+              executor: Optional[Callable] = None) -> tuple:
+    """Host driver: segmented :func:`pcg_iterate` with checkpoint/resume.
+
+    The solve runs in segments of ``checkpoint_every`` iterations (one
+    jitted ``while_loop`` each); between segments the carry is saved
+    through ``manager`` (a ``checkpoint.CheckpointManager``). A
+    ``DeviceLossError`` — raised by ``fault_hook`` (chaos injection) or
+    the runtime — invokes ``on_device_loss(exc)``, which re-plans and
+    returns ``(matvec, precond, k_pad)`` for the surviving mesh
+    (``k_pad=None`` keeps the width); the carry is restored from the
+    latest checkpoint (or the initial state), re-padded, and the solve
+    continues. ``executor`` wraps each segment attempt (the serving
+    layer passes ``ServingFaultSupervisor.execute`` for transient-retry
+    + straggler accounting).
+
+    Returns ``(x, stats, resumes, n_checkpoints)``.
+    """
+    executor = executor or (lambda fn: fn())
+    seg = cfg.checkpoint_every if checkpoint_every is None \
+        else checkpoint_every
+
+    def make_seg_fn(mv, pc):
+        def run(carry):
+            carry = jax.lax.while_loop(_pcg_cond, _pcg_body(mv, pc, cfg),
+                                       carry)
+            return carry
+        return jax.jit(run)
+
+    seg_fn = make_seg_fn(matvec, precond)
+    carry = _pcg_init(matvec, b, precond, cfg, x0=x0)
+    k_cur = int(b.shape[0])
+    resumes: list = []
+    n_ckpt = 0
+    # host template mirrors the latest durable state: the restore target
+    # after a loss, and the restart point when no checkpoint exists yet
+    host = jax.tree.map(np.asarray, carry)
+    if manager is not None and seg:
+        manager.save(0, carry, blocking=True)
+        n_ckpt += 1
+    while True:
+        it = int(np.asarray(carry["it"]))
+        still = np.any(np.asarray(carry["status"]) == ACTIVE)
+        if not (still and it < cfg.max_iters):
+            break
+        limit = cfg.max_iters if not seg else min(it + seg, cfg.max_iters)
+        carry = dict(carry)
+        carry["limit"] = jnp.asarray(limit, jnp.int32)
+
+        def attempt(carry=carry, it=it):
+            if fault_hook is not None:
+                fault_hook(it)
+            out = seg_fn(carry)
+            jax.block_until_ready(out)
+            return out
+
+        try:
+            carry = executor(attempt)
+        except DeviceLossError as exc:
+            if on_device_loss is None:
+                raise
+            new_mv, new_pc, k_pad = on_device_loss(exc)
+            matvec = new_mv if new_mv is not None else matvec
+            precond = new_pc
+            if manager is not None and manager.latest_step() is not None:
+                step, carry = manager.restore(like=host)
+            else:
+                step, carry = 0, jax.tree.map(jnp.asarray, host)
+            resumes.append(ResumeEvent(
+                at_iter=it, restored_step=int(step),
+                reason=f"device-loss {sorted(exc.device_ids)}"))
+            if k_pad is not None:
+                k_cur = int(k_pad)
+            carry = _repad_carry(carry, k_cur, cfg)
+            seg_fn = make_seg_fn(matvec, precond)
+            continue
+        if manager is not None and seg:
+            manager.save(int(np.asarray(carry["it"])), carry,
+                         blocking=True)
+            n_ckpt += 1
+            host = jax.tree.map(np.asarray, carry)
+    carry = _finalize(carry)
+    return carry["x"], _stats(carry), resumes, n_ckpt
+
+
+# -- the fallback ladder ---------------------------------------------------------
+def jacobi_precond(diag: Array) -> Callable[[Array], Array]:
+    """Diagonal (Jacobi) preconditioner ``z = r / diag`` — the middle
+    rung when a structured preconditioner misbehaves but scaling still
+    helps. ``diag`` must be strictly positive."""
+    inv = 1.0 / jnp.asarray(diag)
+
+    def precond(r: Array) -> Array:
+        return r * inv[None, :]
+
+    return precond
+
+
+def solve_guarded(matvec, b: Array, *,
+                  preconds: Sequence[tuple] = (("none", None),),
+                  cfg: CGConfig = CGConfig(),
+                  dense_solve: Optional[Callable] = None,
+                  manager=None,
+                  checkpoint_every: Optional[int] = None,
+                  fault_hook: Optional[Callable] = None,
+                  on_device_loss: Optional[Callable] = None,
+                  executor: Optional[Callable] = None,
+                  n_report: Optional[int] = None,
+                  tag: str = "pcg") -> Tuple[np.ndarray, SolveReport]:
+    """Run the fallback ladder over a batched solve; returns
+    ``(x, SolveReport)``.
+
+    ``preconds`` is the rung sequence, ``(name, precond_fn_or_None)``
+    best-first (e.g. ICR-whitened → Jacobi → unpreconditioned). Columns
+    that end a rung with a retryable status (diverged, breakdown,
+    stalled, maxiter) are re-solved on the next rung; *non-retried*
+    columns ride along as zero-RHS padding (shapes — and therefore the
+    compiled segment and any RHS sharding — never change between rungs),
+    and their already-good results are kept. Columns still failing after
+    the last rung go to ``dense_solve`` when the system is small enough
+    (``cfg.dense_max``). Every transition emits a
+    :class:`~.reports.FallbackEvent`; ``n_report`` trims the report to
+    the first n columns (the serving layer's real, unpadded RHS count).
+
+    ``on_device_loss(exc)`` may return its new preconditioner as a
+    **dict** ``{rung_name: precond}`` — the ladder is updated in place so
+    a loss on one rung re-plans every later rung too, and the returned
+    ``k_pad`` (which must stay >= the original width — pad *up* to the
+    new mesh's multiple) widens all subsequent rungs and the dense
+    residual check.
+    """
+    t0 = time.perf_counter()
+    b = jnp.asarray(b)
+    k, n = b.shape
+    finite = np.asarray(jnp.all(jnp.isfinite(b), axis=1))
+    x_full = np.zeros(b.shape, np.dtype(str(b.dtype)))
+    status_full = np.full(k, NONFINITE, np.int32)
+    status_full[finite] = ACTIVE
+    iters_full = np.zeros(k, np.int64)
+    relres_full = np.full(k, np.inf)
+    relres_full[finite] = 0.0
+
+    rung_names = [name for name, _ in preconds]
+    remaining = np.where(finite)[0]
+    fallbacks: list = []
+    resumes: list = []
+    n_ckpt = 0
+    total_it = 0
+    rungs_tried: list = []
+
+    # live operator state: a device loss mid-rung re-plans the matvec,
+    # the preconditioners and the padded width, and *later* rungs (and
+    # the dense residual check) must see the re-planned versions — never
+    # the stale pre-loss operators
+    cur = {"mv": matvec, "pcs": dict(preconds), "k": k}
+
+    def _wrap_odl(rung):
+        if on_device_loss is None:
+            return None
+
+        def odl(exc):
+            new_mv, new_pc, k_pad = on_device_loss(exc)
+            if new_mv is not None:
+                cur["mv"] = new_mv
+            if isinstance(new_pc, dict):
+                cur["pcs"].update(new_pc)
+                new_pc = cur["pcs"].get(rung)
+            else:
+                cur["pcs"][rung] = new_pc
+            if k_pad is not None:
+                cur["k"] = int(k_pad)
+            return cur["mv"], new_pc, cur["k"]
+
+        return odl
+
+    def _pad_rows(arr):
+        if cur["k"] == arr.shape[0]:
+            return arr
+        pad = jnp.zeros((cur["k"] - arr.shape[0],) + arr.shape[1:],
+                        arr.dtype)
+        return jnp.concatenate([arr, pad], axis=0)
+
+    for ri, (name, _) in enumerate(list(preconds)):
+        if remaining.size == 0:
+            break
+        rungs_tried.append(name)
+        mask = np.zeros(k, bool)
+        mask[remaining] = True
+        b_r = _pad_rows(jnp.where(jnp.asarray(mask)[:, None], b, 0.0))
+        # a fresh checkpoint namespace per rung: a later rung's restore
+        # must never resurrect an earlier rung's (stale) carry
+        mgr = manager if manager is None else type(manager)(
+            os.path.join(manager.root, f"rung{ri}-{name}"),
+            keep=manager.keep)
+        x_r, stats, res, ck = pcg_solve(
+            cur["mv"], b_r, precond=cur["pcs"].get(name), cfg=cfg,
+            manager=mgr, checkpoint_every=checkpoint_every,
+            fault_hook=fault_hook, on_device_loss=_wrap_odl(name),
+            executor=executor)
+        resumes.extend(res)
+        n_ckpt += ck
+        st = np.asarray(stats["status"])[:k]
+        it = np.asarray(stats["iters"])[:k]
+        rr = np.asarray(stats["relres"])[:k]
+        x_np = np.asarray(x_r)[:k]
+        x_full[mask] = x_np[mask]
+        status_full[mask] = st[mask]
+        iters_full[mask] += it[mask]
+        relres_full[mask] = rr[mask]
+        total_it += int(np.asarray(stats["it"]))
+        retry = np.array([i for i in remaining if st[i] in RETRYABLE],
+                         np.int64)
+        if retry.size and ri + 1 < len(preconds):
+            reasons: dict = {}
+            for i in retry:
+                nm = STATUS_NAMES[int(st[i])]
+                reasons[nm] = reasons.get(nm, 0) + 1
+            fallbacks.append(FallbackEvent(
+                rung_from=name, rung_to=rung_names[ri + 1],
+                at_iter=total_it, cols=tuple(int(i) for i in retry),
+                reasons=tuple(sorted(reasons.items()))))
+        remaining = retry
+
+    if remaining.size and dense_solve is not None and n <= cfg.dense_max:
+        rungs_tried.append("dense")
+        reasons = {}
+        for i in remaining:
+            nm = STATUS_NAMES[int(status_full[i])]
+            reasons[nm] = reasons.get(nm, 0) + 1
+        fallbacks.append(FallbackEvent(
+            rung_from=rungs_tried[-2] if len(rungs_tried) > 1 else "none",
+            rung_to="dense", at_iter=total_it,
+            cols=tuple(int(i) for i in remaining),
+            reasons=tuple(sorted(reasons.items()))))
+        mask = np.zeros(k, bool)
+        mask[remaining] = True
+        b_d = jnp.where(jnp.asarray(mask)[:, None], b, 0.0)
+        x_d = np.asarray(dense_solve(b_d))[:k]
+        r_d = np.asarray(_pad_rows(b_d)
+                         - cur["mv"](_pad_rows(jnp.asarray(x_d))))[:k]
+        rr_d = (np.linalg.norm(r_d, axis=1)
+                / np.maximum(np.linalg.norm(np.asarray(b_d)[:k], axis=1),
+                             _TINY))
+        good = mask & np.isfinite(x_d).all(axis=1)
+        x_full[good] = x_d[good]
+        status_full[good] = DENSE
+        relres_full[good] = rr_d[good]
+        bad = mask & ~good
+        status_full[bad] = NONFINITE
+        x_full[bad] = 0.0
+
+    m = k if n_report is None else int(n_report)
+    quarantined = tuple(int(i) for i in range(m)
+                        if status_full[i] in QUARANTINED)
+    report = SolveReport(
+        tag=tag, n_rhs=m, n_unknowns=n,
+        rungs=tuple(rungs_tried),
+        status=tuple(STATUS_NAMES[int(s)] for s in status_full[:m]),
+        iterations=tuple(int(i) for i in iters_full[:m]),
+        relres=tuple(float(r) for r in relres_full[:m]),
+        quarantined=quarantined,
+        fallbacks=tuple(fallbacks),
+        resumes=tuple(resumes),
+        checkpoints=n_ckpt,
+        wall_s=time.perf_counter() - t0,
+    )
+    return x_full, report

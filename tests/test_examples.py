@@ -49,3 +49,11 @@ def test_serve_example():
     out = _run(["examples/serve_lm.py", "--requests", "3",
                 "--max-new", "4"])
     assert "tok/s" in out
+
+
+@pytest.mark.slow
+def test_gp_regression_cg_example():
+    out = _run(["examples/gp_regression_cg.py", "--n0", "16",
+                "--levels", "3", "--samples", "8"])
+    assert "cg_posterior:" in out
+    assert "conditioned posterior served OK" in out

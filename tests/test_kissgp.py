@@ -80,3 +80,44 @@ def test_singularity_contrast_with_icr(setup):
     ev_icr = np.linalg.eigvalsh(icr_cov)
     # ICR minimum eigenvalue is orders of magnitude healthier
     assert ev_icr.min() > 1e3 * max(ev_kiss.min(), 0.0) or ev_kiss.min() <= 0
+
+
+def test_solve_early_exit_reports_convergence():
+    """§16: `solve` exits on rtol instead of burning the full budget."""
+    from repro.solvers.reports import CONVERGED
+
+    xs = np.sort(np.random.default_rng(0).uniform(0, 10, 128))
+    k = matern32.with_defaults(rho=1.0)()
+    kiss = KissGP(x=xs, kernel_fn=k, jitter=1e-1)
+    y = jnp.asarray(np.random.default_rng(1).normal(size=128))
+    x, stats = kiss.solve(y, rtol=1e-4, max_iters=200)
+    assert int(stats["status"]) == CONVERGED
+    assert int(stats["iters"]) < 200  # early exit, not budget exhaustion
+    res = float(jnp.linalg.norm(kiss.matvec(x) - y) / jnp.linalg.norm(y))
+    assert res < 2e-4
+
+
+def test_solve_cg_shim_warns_and_matches_solve():
+    xs = np.sort(np.random.default_rng(0).uniform(0, 10, 64))
+    k = matern32.with_defaults(rho=1.0)()
+    kiss = KissGP(x=xs, kernel_fn=k, jitter=1e-1)
+    y = jnp.asarray(np.random.default_rng(1).normal(size=64))
+    with pytest.warns(DeprecationWarning, match="solve_cg is deprecated"):
+        x_shim = kiss.solve_cg(y, 40)
+    x_new, _ = kiss.solve(y, max_iters=40)
+    assert np.array_equal(np.asarray(x_shim), np.asarray(x_new))
+
+
+def test_slq_logdet_survives_lanczos_breakdown():
+    """Constant kernel => K = 11ᵀ (rank 1), the Krylov space saturates at
+    dim 2 and Lanczos breaks down. The truncated recurrence must still
+    return a finite estimate near the dense log-det (the old
+    normalize-by-eps path emitted junk directions)."""
+    xs = np.sort(np.random.default_rng(0).uniform(0, 10, 80))
+    kiss = KissGP(x=xs, kernel_fn=lambda d: jnp.ones_like(d), jitter=1e-4)
+    est = float(kiss.logdet_slq(jax.random.PRNGKey(1), probes=10,
+                                lanczos_iters=15))
+    dense = np.asarray(kiss.dense_cov()) + kiss.jitter * np.eye(len(xs))
+    exact = float(np.linalg.slogdet(dense)[1])
+    assert np.isfinite(est)
+    assert abs(est - exact) / abs(exact) < 0.05

@@ -1,0 +1,480 @@
+"""Guarded batched CG + data-conditioned posteriors (ISSUE 9; DESIGN.md §16).
+
+Covers the per-RHS masking/quarantine isolation contract (a NaN or
+diverging column must leave its slab-mates bit-identical to a clean
+run), the monitor statuses (breakdown, stagnation, maxiter), the
+fallback ladder with structured FallbackEvents and the dense last rung,
+checkpoint/resume across an injected device loss, the ICR-whitened
+preconditioner's iteration advantage, `core.vi.cg_posterior` against
+the dense exact posterior on the ICR covariance, and `kind="condition"`
+serving end to end (admission codes, SolveReport in metrics, Matheron
+predictive std). The 8-virtual-device solver chaos suite (mid-solve
+kill + sharded divergence isolation) runs in a subprocess because
+XLA_FLAGS must be set before jax initializes.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import matern32, regular_chart
+from repro.core.vi import cg_posterior
+from repro.distributed.fault import DeviceLossError
+from repro.launch.serve_gp import GPFieldServer, GPRequest, demo_posterior
+from repro.solvers import (
+    CGConfig,
+    build_condition_system,
+    obs_operator,
+    pcg_iterate,
+    pcg_solve,
+    solve_guarded,
+)
+from repro.solvers.reports import BREAKDOWN, CONVERGED, DIVERGED, NONFINITE
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _spd_system(n=40, k=5, seed=0, cond=50.0):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    evals = np.geomspace(1.0, cond, n)
+    a = (q * evals) @ q.T
+    b = rng.standard_normal((k, n))
+    return (jnp.asarray(a, jnp.float32),
+            jnp.asarray(b, jnp.float32),
+            np.linalg.solve(a, b.T).T)
+
+
+def _mv(a):
+    return lambda v: v @ a.T
+
+
+# -- core engine ----------------------------------------------------------------
+def test_batched_pcg_converges_against_dense():
+    a, b, x_ref = _spd_system()
+    x, stats, _ = pcg_iterate(_mv(a), b, cfg=CGConfig(rtol=1e-6))
+    assert np.all(np.asarray(stats["status"]) == CONVERGED)
+    np.testing.assert_allclose(np.asarray(x), x_ref, rtol=2e-4, atol=1e-5)
+    assert np.all(np.asarray(stats["relres"]) <= 1e-5)
+
+
+def test_pcg_is_jit_traceable():
+    a, b, x_ref = _spd_system()
+
+    @jax.jit
+    def solve(bb):
+        x, stats, _ = pcg_iterate(_mv(a), bb, cfg=CGConfig(rtol=1e-6))
+        return x, stats["status"]
+
+    x, st = solve(b)
+    assert np.all(np.asarray(st) == CONVERGED)
+    np.testing.assert_allclose(np.asarray(x), x_ref, rtol=2e-4, atol=1e-5)
+
+
+def test_zero_rhs_converges_at_iteration_zero():
+    a, b, _ = _spd_system()
+    b = b.at[2].set(0.0)
+    _, stats, _ = pcg_iterate(_mv(a), b)
+    assert int(np.asarray(stats["iters"])[2]) == 0
+    assert int(np.asarray(stats["status"])[2]) == CONVERGED
+
+
+# -- isolation: the §16 quarantine contract --------------------------------------
+def test_nonfinite_rhs_column_is_quarantined_and_siblings_bit_identical():
+    a, b, _ = _spd_system(k=6)
+    x_clean, _, _ = pcg_iterate(_mv(a), b)
+    bad = np.asarray(b).copy()
+    bad[3, 1] = np.nan
+    x_bad, stats, _ = pcg_iterate(_mv(a), jnp.asarray(bad))
+    st = np.asarray(stats["status"])
+    assert st[3] == NONFINITE
+    assert np.all(np.asarray(x_bad)[3] == 0.0)
+    assert np.isinf(np.asarray(stats["relres"])[3])
+    keep = [i for i in range(6) if i != 3]
+    assert np.array_equal(np.asarray(x_clean)[keep],
+                          np.asarray(x_bad)[keep]), \
+        "a poisoned RHS perturbed its slab-mates"
+
+
+def test_divergent_column_is_quarantined_and_siblings_bit_identical():
+    """A per-column operator whose column 2 is a scaled rotation
+    (nonsymmetric, positive pᵀAp, spectral radius > 1): CG on it runs
+    away, the divergence monitor quarantines it, and the SPD siblings
+    are bit-identical to a clean run."""
+    a, b, x_ref = _spd_system(n=40, k=5)
+    rot = np.eye(40, dtype=np.float32)
+    c, s = np.cos(1.2), np.sin(1.2)
+    for i in range(0, 40, 2):
+        rot[i:i + 2, i:i + 2] = [[c, -s], [s, c]]
+    rot = jnp.asarray(3.0 * rot)
+
+    def mv_mixed(v):
+        sane = v @ a.T
+        crazy = v @ rot.T
+        col = jnp.arange(v.shape[0])[:, None] == 2
+        return jnp.where(col, crazy, sane)
+
+    def mv_clean(v):
+        sane = v @ a.T
+        col = jnp.arange(v.shape[0])[:, None] == 2
+        return jnp.where(col, 0.0 * sane, sane)
+
+    cfg = CGConfig(rtol=1e-6, divergence_factor=10.0, stall_window=100,
+                   max_iters=300)
+    b_clean = jnp.asarray(np.asarray(b)).at[2].set(0.0)
+    x_clean, _, _ = pcg_iterate(mv_clean, b_clean, cfg=cfg)
+    x_bad, stats, _ = pcg_iterate(mv_mixed, b, cfg=cfg)
+    st = np.asarray(stats["status"])
+    assert st[2] == DIVERGED, st
+    keep = [i for i in range(5) if i != 2]
+    assert np.all(st[keep] == CONVERGED)
+    assert np.array_equal(np.asarray(x_clean)[keep],
+                          np.asarray(x_bad)[keep]), \
+        "a runaway column perturbed its slab-mates"
+    assert np.all(np.asarray(x_bad)[2] == 0.0)  # quarantined ⇒ zeroed
+
+
+# -- monitors and the fallback ladder --------------------------------------------
+def test_breakdown_guard_freezes_column_without_nan():
+    """pᵀAp <= 0 (indefinite operator) must freeze with status
+    breakdown — never the classic silent-garbage division."""
+    a, b, _ = _spd_system(k=3)
+    neg = -jnp.eye(40, dtype=jnp.float32)
+
+    def mv(v):
+        col = jnp.arange(v.shape[0])[:, None] == 1
+        return jnp.where(col, v @ neg.T, v @ a.T)
+
+    _, stats, _ = pcg_iterate(mv, b)
+    st = np.asarray(stats["status"])
+    assert st[1] == BREAKDOWN
+    assert st[0] == CONVERGED and st[2] == CONVERGED
+
+
+def test_bad_preconditioner_falls_back_down_the_ladder():
+    """A non-SPD preconditioner breaks every column at init; the ladder
+    retries them unpreconditioned and the report records the transition."""
+    a, b, x_ref = _spd_system()
+    x, report = solve_guarded(
+        _mv(a), b, preconds=[("bad", lambda r: -r), ("none", None)],
+        cfg=CGConfig(rtol=1e-6))
+    assert report.rungs == ("bad", "none")
+    assert all(s == "converged" for s in report.status)
+    assert len(report.fallbacks) == 1
+    ev = report.fallbacks[0]
+    assert ev.rung_from == "bad" and ev.rung_to == "none"
+    assert dict(ev.reasons) == {"breakdown": 5}
+    np.testing.assert_allclose(x, x_ref, rtol=2e-4, atol=1e-5)
+    assert report.ok
+
+
+def test_maxiter_columns_fall_through_to_dense_rung():
+    a, b, x_ref = _spd_system(cond=1e4)
+    dense = lambda bb: jnp.linalg.solve(a, jnp.asarray(bb).T).T
+    x, report = solve_guarded(
+        _mv(a), b, preconds=[("none", None)],
+        cfg=CGConfig(rtol=1e-7, max_iters=3), dense_solve=dense)
+    assert report.rungs == ("none", "dense")
+    assert all(s == "dense" for s in report.status)
+    assert report.ok
+    # f32 direct solve at cond 1e4 vs the f64 numpy oracle
+    np.testing.assert_allclose(x, x_ref, rtol=5e-3, atol=2e-4)
+
+
+def test_nonfinite_rhs_never_reaches_the_dense_rung():
+    a, b, _ = _spd_system(k=4)
+    bad = np.asarray(b).copy()
+    bad[1, 0] = np.inf
+    dense = lambda bb: jnp.linalg.solve(a, jnp.asarray(bb).T).T
+    x, report = solve_guarded(_mv(a), jnp.asarray(bad),
+                              preconds=[("none", None)],
+                              cfg=CGConfig(rtol=1e-6), dense_solve=dense)
+    assert report.status[1] == "nonfinite"
+    assert report.quarantined == (1,)
+    assert np.all(x[1] == 0.0)
+    assert not report.ok
+
+
+# -- checkpoint / resume ----------------------------------------------------------
+def test_midsolve_device_loss_resumes_from_checkpoint(tmp_path):
+    from repro.checkpoint.checkpointer import CheckpointManager
+
+    a, b, x_ref = _spd_system(cond=500.0)
+    x_ref_run, stats_ref, _, _ = pcg_solve(
+        _mv(a), b, cfg=CGConfig(rtol=1e-7, max_iters=200))
+
+    fired = {"n": 0}
+
+    def fault_hook(it):
+        if it >= 6 and not fired["n"]:
+            fired["n"] += 1
+            raise DeviceLossError([0])
+
+    def on_device_loss(exc):
+        return None, None, None  # same operator, same width
+
+    mgr = CheckpointManager(str(tmp_path / "cg"))
+    x, stats, resumes, n_ckpt = pcg_solve(
+        _mv(a), b, cfg=CGConfig(rtol=1e-7, max_iters=200),
+        manager=mgr, checkpoint_every=3, fault_hook=fault_hook,
+        on_device_loss=on_device_loss)
+    assert fired["n"] == 1
+    assert len(resumes) == 1
+    assert resumes[0].restored_step == 6
+    assert n_ckpt >= 3
+    assert np.all(np.asarray(stats["status"]) == CONVERGED)
+    # the restored carry is the saved carry: the continuation reproduces
+    # the uninterrupted solve bit-for-bit
+    assert np.array_equal(np.asarray(x), np.asarray(x_ref_run))
+
+
+def test_device_loss_without_manager_restarts_from_init():
+    a, b, _ = _spd_system()
+    fired = {"n": 0}
+
+    def fault_hook(it):
+        if it >= 2 and not fired["n"]:
+            fired["n"] += 1
+            raise DeviceLossError([1])
+
+    x, stats, resumes, _ = pcg_solve(
+        _mv(a), b, cfg=CGConfig(rtol=1e-6, max_iters=200),
+        checkpoint_every=2, fault_hook=fault_hook,
+        on_device_loss=lambda exc: (None, None, None))
+    assert resumes and resumes[0].restored_step == 0
+    assert np.all(np.asarray(stats["status"]) == CONVERGED)
+
+
+# -- cg_posterior vs the dense exact posterior ------------------------------------
+@pytest.mark.parametrize("chart,rho", [
+    (regular_chart(32, 2, boundary="reflect"), 8.0),          # 128-pt tod
+    (regular_chart((8, 8), 2, boundary="reflect"), 4.0),      # 32x32 image
+], ids=["tod", "image"])
+def test_cg_posterior_matches_dense_reference(chart, rho):
+    """Acceptance: CG posterior mean matches the dense exact posterior on
+    the materialized ICR covariance at rel <= 1e-5 (tod and image)."""
+    from repro.core import ICR, exact_posterior
+
+    icr = ICR(chart=chart, kernel=matern32.with_defaults(rho=rho))
+    n = int(np.prod(chart.final_shape))
+    rng = np.random.default_rng(1)
+    obs_idx = np.sort(rng.choice(n, size=n // 2, replace=False))
+    cov = np.asarray(icr.implicit_cov(dtype=jnp.float32))
+    truth = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (n,)))
+    y = ((cov @ truth)[obs_idx]
+         + 0.05 * rng.standard_normal(obs_idx.size)).astype(np.float32)
+    noise = 0.25
+
+    post, report = cg_posterior(icr, obs_idx, y, noise_std=noise)
+    assert report.ok, report.summary()
+    mean = np.asarray(
+        icr.apply_sqrt(post.matrices(), post.mean)).reshape(-1)
+    m_ref, _ = exact_posterior(jnp.asarray(cov), jnp.asarray(obs_idx),
+                               jnp.asarray(y), noise ** 2)
+    m_ref = np.asarray(m_ref).reshape(-1)
+    rel = np.linalg.norm(mean - m_ref) / np.linalg.norm(m_ref)
+    assert rel <= 1e-5, f"CG posterior mean off by rel {rel:.2e}"
+
+
+def test_icr_preconditioner_halves_iterations():
+    """Acceptance: the ICR-whitened rung must need <= 0.5x the
+    unpreconditioned iteration count (it is typically 10-30x better)."""
+    from repro.core import ICR
+
+    chart = regular_chart(32, 3, boundary="reflect")
+    icr = ICR(chart=chart, kernel=matern32.with_defaults(rho=8.0),
+              use_pallas=True)
+    n = int(np.prod(chart.final_shape))
+    obs_idx = np.arange(0, n, 2)
+    rng = np.random.default_rng(2)
+    y = rng.standard_normal(obs_idx.size).astype(np.float32)
+
+    _, rep_pre = cg_posterior(icr, obs_idx, y, use_precond=True)
+    _, rep_raw = cg_posterior(icr, obs_idx, y, use_precond=False)
+    assert rep_pre.ok and rep_raw.ok
+    assert rep_pre.rungs[0] == "icr"
+    ratio = rep_pre.max_iterations / max(rep_raw.max_iterations, 1)
+    assert ratio <= 0.5, \
+        (f"icr precond took {rep_pre.max_iterations} iters vs "
+         f"{rep_raw.max_iterations} unpreconditioned (ratio {ratio:.2f})")
+
+
+def test_cg_posterior_offgrid_interpolation_1d():
+    from repro.core import ICR
+
+    chart = regular_chart(32, 3, boundary="reflect")
+    icr = ICR(chart=chart, kernel=matern32.with_defaults(rho=8.0),
+              use_pallas=True)
+    grid = np.asarray(chart.axis_coords(chart.n_levels, 0))
+    rng = np.random.default_rng(3)
+    x_obs = rng.uniform(grid[2], grid[-3], 40)
+    y = np.sin(x_obs / 8.0).astype(np.float32)
+    post, report = cg_posterior(icr, x_obs.astype(np.float32), y,
+                                noise_std=0.05)
+    assert report.ok, report.summary()
+    mats = icr.matrices_cached(None)
+    mean = np.asarray(icr.apply_sqrt(mats, post.mean)).reshape(-1)
+    # the posterior mean interpolated back at the observation points
+    # explains the data to within a few noise sigma
+    op = obs_operator(icr, x_obs=x_obs)
+    pred = np.asarray(op.apply(jnp.asarray(mean)[None, :]))[0]
+    assert np.sqrt(np.mean((pred - y) ** 2)) < 0.1
+
+
+# -- kind="condition" serving -----------------------------------------------------
+CHART = regular_chart(32, 3, boundary="reflect")
+
+
+def _cond_req(y, obs_idx, n=6, seed=9, **kw):
+    kw.setdefault("noise_std", 0.05)
+    return GPRequest(kind="condition", n=n, seed=seed, y=y,
+                     obs_idx=obs_idx, **kw)
+
+
+def _obs_y(chart=CHART, step=4, seed=0):
+    n = int(np.prod(chart.final_shape))
+    obs_idx = np.arange(0, n, step)
+    rng = np.random.default_rng(seed)
+    y = (np.sin(np.linspace(0.0, 6.0, obs_idx.size))
+         + 0.05 * rng.standard_normal(obs_idx.size)).astype(np.float32)
+    return y, obs_idx
+
+
+def test_condition_request_serves_exact_mean_and_report():
+    post = demo_posterior(CHART, 8.0)
+    icr = post.icr
+    y, obs_idx = _obs_y()
+    srv = GPFieldServer(post, slab=4)
+    req = _cond_req(y, obs_idx)
+    srv.run([req])
+    assert req.done and req.error is None, req.error
+    assert req.report is not None and req.report.ok
+    assert req.report.rungs[0] == "icr"
+
+    op = obs_operator(icr, obs_idx=obs_idx)
+    system = build_condition_system(icr, op, 0.05 ** 2)
+    alpha_d = system.dense_solve(jnp.asarray(y)[None, :])
+    m_ref = np.asarray(system.correct(alpha_d)).reshape(-1)
+    rel = (np.linalg.norm(req.mean.reshape(-1) - m_ref)
+           / np.linalg.norm(m_ref))
+    assert rel <= 1e-5, rel
+
+    met = srv.metrics()
+    assert met["condition_requests"] == 1
+    assert met["condition_rhs"] == 1 + req.n
+    assert met["solve_reports"] and \
+        met["solve_reports"][-1]["tag"].startswith("condition:")
+    assert met["solve_reports"][-1]["ok"]
+
+
+def test_condition_matheron_std_tracks_exact_posterior():
+    """Pathwise (Matheron) predictive std must track the exact posterior
+    std and be depressed at observed pixels."""
+    from repro.core import ICR, exact_posterior
+
+    post = demo_posterior(CHART, 8.0)
+    y, obs_idx = _obs_y(step=8)
+    srv = GPFieldServer(post, slab=4)
+    req = _cond_req(y, obs_idx, n=64)
+    srv.run([req])
+    assert req.error is None and np.isfinite(req.std).all()
+    std = req.std.reshape(-1)
+    unobs = np.setdiff1d(np.arange(std.size), obs_idx)
+    assert std[obs_idx].mean() < std[unobs].mean()
+
+    # non-pallas twin: implicit_cov differentiates the sqrt, which the
+    # pallas pyramid forbids (custom_vjp has no jvp)
+    ref = ICR(chart=CHART, kernel=matern32.with_defaults(rho=8.0))
+    cov = ref.implicit_cov(post.theta, dtype=jnp.float32)
+    _, cov_post = exact_posterior(cov, jnp.asarray(obs_idx),
+                                  jnp.asarray(y), 0.05 ** 2)
+    exact_std = np.sqrt(np.asarray(jnp.diagonal(cov_post)))
+    # 64 Matheron draws: the pixel-mean std has ~9% MC error
+    ratio = std.mean() / exact_std.mean()
+    assert 0.75 < ratio < 1.25, f"Matheron std off exact by x{ratio:.3f}"
+
+
+def test_condition_admission_rejects_structured():
+    post = demo_posterior(CHART, 8.0)
+    srv = GPFieldServer(post, slab=4)
+    y, obs_idx = _obs_y()
+    n = int(np.prod(CHART.final_shape))
+    cases = [
+        (_cond_req(None, obs_idx), "y-missing"),
+        (_cond_req(np.array([np.nan] * len(obs_idx)), obs_idx),
+         "y-nonfinite"),
+        (GPRequest(kind="condition", n=4, y=y), "obs-spec"),
+        (GPRequest(kind="condition", n=4, y=y, obs_idx=obs_idx,
+                   x_obs=np.zeros(len(y))), "obs-spec"),
+        (_cond_req(y[:3], np.array([0, 5, n + 7])), "obs-range"),
+        (_cond_req(y[:3], np.array([0.5, 1.5, 2.5])), "obs-dtype"),
+        (_cond_req(y[:4], obs_idx[:3]), "obs-length"),
+        (_cond_req(y, obs_idx, noise_std=0.0), "noise-invalid"),
+        (_cond_req(y, obs_idx, noise_std=float("nan")), "noise-invalid"),
+    ]
+    reqs = [r for r, _ in cases]
+    srv.run(reqs)
+    for (req, code) in cases:
+        assert req.done and req.error is not None, code
+        assert req.error.code == code, (req.error, code)
+    assert srv.condition_requests == 0  # rejected before any solve work
+
+
+def test_condition_rides_with_sampling_traffic():
+    """A mixed queue: the condition solve and the sampling slabs both
+    complete, and the sampling results are unaffected by the solve."""
+    post = demo_posterior(CHART, 8.0)
+    y, obs_idx = _obs_y()
+
+    # baseline: the same sampling queue WITHOUT the condition request
+    # (slab packing depends on queue composition, so the baseline must
+    # keep the sampling rows identical)
+    clean = GPRequest(kind="moments", n=6, seed=2)
+    GPFieldServer(post, slab=4).run(
+        [GPRequest(kind="sample", n=3, seed=1), clean])
+
+    srv = GPFieldServer(post, slab=4)
+    mixed = [GPRequest(kind="sample", n=3, seed=1),
+             _cond_req(y, obs_idx),
+             GPRequest(kind="moments", n=6, seed=2)]
+    srv.run(mixed)
+    assert all(r.done and r.error is None for r in mixed), \
+        [r.error for r in mixed]
+    assert np.array_equal(mixed[2].mean, clean.mean)
+    assert np.array_equal(mixed[2].std, clean.std)
+
+
+def test_condition_system_cache_hits_on_repeat_traffic():
+    post = demo_posterior(CHART, 8.0)
+    y, obs_idx = _obs_y()
+    srv = GPFieldServer(post, slab=4)
+    srv.run([_cond_req(y, obs_idx)])
+    sys_first = next(iter(srv._cond_cache.values()))
+    srv.run([_cond_req(2.0 * y, obs_idx, seed=5)])
+    assert len(srv._cond_cache) == 1
+    assert next(iter(srv._cond_cache.values())) is sys_first
+
+
+# -- 8-virtual-device solver chaos (subprocess) -----------------------------------
+@pytest.mark.slow
+def test_solver_chaos_suite_8dev():
+    """Mid-solve device kill (checkpoint/resume on the 7-survivor mesh,
+    zero dropped RHS) and sharded divergence isolation — in a subprocess
+    because XLA_FLAGS must be set before jax initializes."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("REPRO_BACKEND", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.chaos",
+         "--check-solvers"],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert out.stdout.count("PASS") == 2, out.stdout
+    assert "FAIL" not in out.stdout, out.stdout
