@@ -3,6 +3,7 @@
     python -m repro.analysis                 # lint + diff vs tests/golden/
     python -m repro.analysis check           # same (explicit)
     python -m repro.analysis verify          # launch-plan verifier (§14)
+    python -m repro.analysis shardcheck      # mesh-safety analyzer (§17)
     python -m repro.analysis --update        # regenerate the goldens
     python -m repro.analysis --scenario tod-bf16
     python -m repro.analysis --out DIR       # also dump current docs
@@ -21,11 +22,21 @@ LaunchPlan, the VMEM + roofline byte cross-checks, the custom-VJP
 transpose proof (jaxpr linearity walk + interpret-mode dot test at the
 verified tile config) and the jaxpr hygiene passes. Exits non-zero on
 any finding.
+
+``shardcheck`` runs ``mesh_verify.shardcheck_all`` over every
+shard_map'd entry point (DistributedICR sqrt apply, the GPFieldServer
+slab step in samples/chart shard modes, the PCG conditioning matvec):
+collective soundness, determinism, remesh invariance and cache-key
+soundness (DESIGN.md §17). It forces 8 virtual CPU host devices (set
+before jax initializes a backend) so the mesh sweep is real; findings
+go to stdout and — with ``--out`` — to a JSON artifact. Exits non-zero
+on any finding.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 
@@ -47,14 +58,64 @@ def golden_path(golden_dir: pathlib.Path, label: str) -> pathlib.Path:
     return golden_dir / f"fingerprint-{label}.json"
 
 
+def run_shardcheck(args) -> int:
+    """The §17 mesh-safety analyzer over every shard_map'd entry point."""
+    # the mesh sweep needs real devices to shard over; force virtual CPU
+    # devices *before* jax initializes a backend (no-op once initialized
+    # or when the caller already set XLA_FLAGS)
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    from .mesh_verify import SERVING_SCENARIOS, shardcheck_scenario
+
+    names = list(SERVING_SCENARIOS)
+    if args.scenario:
+        # accept serving-scenario names; tolerate fingerprint labels
+        # ("tod-fp32") so one --scenario flag works for every command
+        want = {s.split("-")[0] for s in args.scenario}
+        unknown = want - set(names)
+        if unknown:
+            print(f"unknown scenario(s) {sorted(unknown)}; have {names}")
+            return 2
+        names = [n for n in names if n in want]
+
+    failed = False
+    report = {"entries": [], "findings": []}
+    for name in names:
+        print(f"== {name} ==", flush=True)
+        checked: list = []
+        findings = shardcheck_scenario(name, checked=checked)
+        report["entries"] += checked
+        for f in findings:
+            print(f"  FAIL: {f}")
+            report["findings"].append(f.to_dict())
+        if findings:
+            failed = True
+        else:
+            print(f"  {len(checked)} entry point(s) verified (collective, "
+                  "determinism, remesh, cache-key)")
+
+    if args.out is not None:
+        args.out.mkdir(parents=True, exist_ok=True)
+        (args.out / "shardcheck-findings.json").write_text(
+            json.dumps(report, indent=2, sort_keys=True))
+
+    if failed:
+        print("\nshardcheck FAILED", flush=True)
+        return 1
+    print("\nshardcheck OK", flush=True)
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="HLO/route fingerprint diff + Pallas lint passes")
-    ap.add_argument("command", nargs="?", choices=("check", "verify"),
+    ap.add_argument("command", nargs="?",
+                    choices=("check", "verify", "shardcheck"),
                     default="check",
                     help="check: fingerprint diff + lint (default); "
-                         "verify: the DESIGN.md §14 launch-plan verifier")
+                         "verify: the DESIGN.md §14 launch-plan verifier; "
+                         "shardcheck: the §17 mesh-safety analyzer")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the goldens instead of diffing")
     ap.add_argument("--golden-dir", type=pathlib.Path,
@@ -71,6 +132,9 @@ def main(argv=None) -> int:
     ap.add_argument("--samples", type=int, default=4,
                     help="slab/batch height of the batched entries")
     args = ap.parse_args(argv)
+
+    if args.command == "shardcheck":
+        return run_shardcheck(args)
 
     cells = SCENARIOS(samples=args.samples)
     if args.scenario:

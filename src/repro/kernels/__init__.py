@@ -10,10 +10,9 @@
   policy.py     — storage/accumulation dtype policy (DESIGN.md §11)
   dispatch.py   — per-level backend/route selection + VMEM autotune +
                   launch-plan export (level_launch_plans / chart_launch_plans)
-  ops.py        — DEPRECATED shim over dispatch.refine
   ref.py        — pure-jnp oracles the kernels are validated against
 """
-from . import dispatch, launch, nd, ops, policy, pyramid, ref
+from . import dispatch, launch, nd, policy, pyramid, ref
 from .icr_refine import (
     refine_charted_adjoint_pallas,
     refine_charted_pallas,
@@ -26,7 +25,7 @@ from .policy import BF16, FP32, DtypePolicy
 from .pyramid import refine_pyramid
 
 __all__ = [
-    "dispatch", "launch", "nd", "ops", "policy", "pyramid", "ref",
+    "dispatch", "launch", "nd", "policy", "pyramid", "ref",
     "refine_stationary_pallas", "refine_charted_pallas", "refine_axes",
     "refine_stationary_adjoint_pallas", "refine_charted_adjoint_pallas",
     "refine_pyramid", "DtypePolicy", "BF16", "FP32",

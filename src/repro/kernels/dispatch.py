@@ -35,8 +35,8 @@ the storage itemsize (bf16 halves it, doubling what fits per tile) and
 ``plan(dtype=...)`` reports HBM bytes at the policy's storage dtype —
 the byte model grows a dtype column.
 
-This replaces the ad-hoc shape guards that used to live in
-``repro.kernels.ops``. VMEM tile sizes (``block_families`` for the 1-D
+This replaces the ad-hoc shape guards that used to live in the retired
+``repro.kernels.ops`` shim. VMEM tile sizes (``block_families`` for the 1-D
 kernels, the ``(b_f, s_b)`` family/sample blocks for the N-D megakernel)
 are autotuned against a per-core VMEM budget instead of being hard-coded.
 

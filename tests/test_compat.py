@@ -35,7 +35,6 @@ PUBLIC_MODULES = [
     "repro.kernels.launch",
     "repro.kernels.nd",
     "repro.kernels.nd_fused",
-    "repro.kernels.ops",
     "repro.kernels.policy",
     "repro.kernels.pyramid",
     "repro.kernels.ref",

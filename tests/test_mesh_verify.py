@@ -1,0 +1,287 @@
+"""Mesh-safety analyzer (DESIGN.md §17): injected-regression fixtures.
+
+One fixture per pass, each proving the analyzer catches exactly its
+target defect and nothing else:
+
+  dropped psum                    -> collective
+  unkeyed / mesh-dependent PRNG   -> determinism
+  mesh-size-dependent local gemm  -> remesh
+  theta dropped from _cache_key   -> cachekey
+
+plus clean-entry-point checks over the real serving shard modes (the
+zero-false-positive matrix) and the 8-virtual-device CLI acceptance run.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.analysis.mesh_verify import (
+    MeshFinding,
+    analyze_entry,
+    cachekey_audit,
+    check_remesh,
+    local_dot_signatures,
+    plan_key_audit,
+    shardcheck_scenario,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mesh(n=1, axis="d"):
+    return Mesh(np.asarray(jax.devices()[:n]), (axis,))
+
+
+def _passes(findings):
+    return sorted({f.pass_name for f in findings})
+
+
+# -- pass (a): collective soundness ----------------------------------------------
+def test_collective_clean_when_psum_backs_the_claim():
+    mesh = _mesh()
+
+    def entry(v):
+        body = lambda u: jax.lax.psum(u.sum(), "d")
+        return shard_map(body, mesh=mesh, in_specs=P("d"), out_specs=P(),
+                         check_vma=False)(v)
+
+    assert analyze_entry(entry, (jnp.arange(8.0),), entry="good") == []
+
+
+def test_collective_catches_dropped_psum():
+    """The injected regression: out_specs claim replication, but the
+    reducing collective was dropped from the body."""
+    mesh = _mesh()
+
+    def entry(v):
+        body = lambda u: u.sum()  # psum dropped
+        return shard_map(body, mesh=mesh, in_specs=P("d"), out_specs=P(),
+                         check_vma=False)(v)
+
+    findings = analyze_entry(entry, (jnp.arange(8.0),), entry="bad")
+    assert _passes(findings) == ["collective"]
+    assert any(f.severity == "error" and "claim replication" in f.message
+               for f in findings)
+    # the finding carries a jaxpr path into the shard_map
+    assert all("shard_map" in f.location for f in findings)
+
+
+def test_collective_flags_redundant_psum_as_warning():
+    mesh = _mesh()
+
+    def entry(v):
+        body = lambda u: jax.lax.psum(jnp.float32(1.0), "d") * u
+        return shard_map(body, mesh=mesh, in_specs=P("d"),
+                         out_specs=P("d"), check_vma=False)(v)
+
+    findings = analyze_entry(entry, (jnp.arange(8.0),), entry="red")
+    assert _passes(findings) == ["collective"]
+    assert [f.severity for f in findings] == ["warning"]
+    assert "redundant psum" in findings[0].message
+
+
+# -- pass (b): determinism -------------------------------------------------------
+def test_determinism_catches_unkeyed_prng():
+    """The injected regression: a draw keyed by a baked-in PRNGKey(0)
+    instead of the request's traced seed."""
+    mesh = _mesh()
+
+    def entry(v):
+        def body(u):
+            return u + jax.random.normal(jax.random.PRNGKey(0), u.shape)
+        return shard_map(body, mesh=mesh, in_specs=P("d"),
+                         out_specs=P("d"), check_vma=False)(v)
+
+    findings = analyze_entry(entry, (jnp.arange(8.0),), entry="unkeyed",
+                             replay_sensitive=True)
+    assert _passes(findings) == ["determinism"]
+    assert any("unkeyed PRNG" in f.message for f in findings)
+    # caught even off the replay-sensitive path: constant keys are wrong
+    # in every serving mode
+    assert _passes(analyze_entry(entry, (jnp.arange(8.0),),
+                                 entry="unkeyed")) == ["determinism"]
+
+
+def test_determinism_clean_for_seed_keyed_draws():
+    mesh = _mesh()
+
+    def entry(seed, v):
+        def body(s, u):
+            k = jax.random.fold_in(jax.random.PRNGKey(s[0]), 3)
+            return u + jax.random.normal(k, u.shape)
+        return shard_map(body, mesh=mesh, in_specs=(P(), P("d")),
+                         out_specs=P("d"), check_vma=False)(seed, v)
+
+    findings = analyze_entry(entry, (jnp.zeros(1, jnp.int32),
+                                     jnp.arange(8.0)),
+                             entry="keyed", replay_sensitive=True)
+    assert findings == []
+
+
+def test_determinism_catches_mesh_dependent_prng_on_replay_path():
+    mesh = _mesh()
+
+    def entry(seed, v):
+        def body(s, u):
+            i = jax.lax.axis_index("d")
+            k = jax.random.fold_in(jax.random.PRNGKey(s[0]), i)
+            return u + jax.random.normal(k, u.shape)
+        return shard_map(body, mesh=mesh, in_specs=(P(), P("d")),
+                         out_specs=P("d"), check_vma=False)(seed, v)
+
+    args = (jnp.zeros(1, jnp.int32), jnp.arange(8.0))
+    findings = analyze_entry(entry, args, entry="meshy",
+                             replay_sensitive=True)
+    assert _passes(findings) == ["determinism"]
+    assert any("mesh-dependent PRNG" in f.message for f in findings)
+    # chart-style entries only promise fp tolerance: not flagged there
+    assert analyze_entry(entry, args, entry="meshy") == []
+
+
+def test_determinism_flags_collectives_only_on_replay_path():
+    mesh = _mesh()
+
+    def entry(v):
+        def body(u):
+            return u - jax.lax.pmax(u.max(), "d")
+        return shard_map(body, mesh=mesh, in_specs=P("d"),
+                         out_specs=P("d"), check_vma=False)(v)
+
+    args = (jnp.arange(8.0),)
+    findings = analyze_entry(entry, args, entry="replay",
+                             replay_sensitive=True)
+    assert _passes(findings) == ["determinism"]
+    assert any("cross-device collective" in f.message for f in findings)
+    assert analyze_entry(entry, args, entry="tolerant") == []
+
+
+# -- pass (c): remesh invariance -------------------------------------------------
+def _sigs_for_local_rows(rows):
+    """Local dot signatures of a slab body whose per-device gemm height is
+    ``rows`` — the quantity GPFieldServer pins via ``_local_rows``."""
+    mesh = _mesh()
+    W = jnp.ones((16, 16))
+
+    def entry(v):
+        body = lambda u: u @ W
+        return shard_map(body, mesh=mesh, in_specs=P("d"),
+                         out_specs=P("d"), check_vma=False)(v)
+
+    return local_dot_signatures(
+        jax.make_jaxpr(entry)(jnp.ones((rows, 16))))
+
+
+def test_remesh_catches_mesh_size_dependent_local_shape():
+    """The injected regression: local rows derived from capacity // n_dev
+    at build time instead of pinned — the local gemm height changes when
+    the mesh shrinks (8 rows over 8, 4, 2 devices -> 1, 2, 4 local)."""
+    sigs = {n: _sigs_for_local_rows(8 // n) for n in (8, 4, 2)}
+    findings = check_remesh("serve[samples]:fixture", sigs)
+    assert _passes(findings) == ["remesh"]
+    assert len(findings) == 2  # 8-vs-4 and 8-vs-2
+    assert all("depend on the mesh size" in f.message for f in findings)
+
+
+def test_remesh_clean_when_local_rows_pinned():
+    sigs = {n: _sigs_for_local_rows(4) for n in (8, 4, 2)}
+    assert check_remesh("serve[samples]:fixture", sigs) == []
+
+
+def test_remesh_contract_only_tolerates_scaled_batch_extents():
+    """Chart-sharded bodies scale spatial/batch extents with the ring;
+    the contraction extents (matrix dims) are the invariant there."""
+    mesh = _mesh()
+    W = jnp.ones((16, 16))
+
+    def entry_with_rows(rows):
+        def entry(v):
+            body = lambda u: u @ W
+            return shard_map(body, mesh=mesh, in_specs=P("d"),
+                             out_specs=P("d"), check_vma=False)(v)
+        return jax.make_jaxpr(entry)(jnp.ones((rows, 16)))
+
+    full = {n: local_dot_signatures(entry_with_rows(16 // n))
+            for n in (1, 2, 4)}
+    contract = {n: local_dot_signatures(entry_with_rows(16 // n),
+                                        contract_only=True)
+                for n in (1, 2, 4)}
+    assert check_remesh("chart", full) != []
+    assert check_remesh("chart", contract) == []
+
+
+# -- pass (d): cache-key soundness -----------------------------------------------
+def test_cachekey_catches_theta_dropped_from_key():
+    """The injected regression: a server whose _cache_key drops every
+    theta-bearing component — two fits at different rho collide on the
+    key while their baked-in matrices differ."""
+    from repro.launch.serve_gp import GPFieldServer
+
+    class Doctored(GPFieldServer):
+        def _cache_key(self, post):
+            k = super()._cache_key(post)
+            # strip the kernel fingerprint and the theta key
+            return k[:1] + ("<no-kernel>",) + k[2:3] + ("<no-theta>",) \
+                + k[4:]
+
+    findings = cachekey_audit("tod", server_cls=Doctored)
+    assert _passes(findings) == ["cachekey"]
+    assert any("mats" in f.message and "collide" in f.message
+               for f in findings)
+
+
+def test_cachekey_clean_on_the_real_server():
+    assert cachekey_audit("tod") == []
+
+
+def test_plan_cached_key_covers_every_input():
+    assert plan_key_audit("tod") == []
+
+
+# -- finding records -------------------------------------------------------------
+def test_finding_record_shape():
+    f = MeshFinding("collective", "serve[samples]:tod", "top/eqn0",
+                    "error", "msg")
+    assert "[collective/error]" in str(f)
+    assert f.to_dict() == {"pass_name": "collective",
+                           "entry": "serve[samples]:tod",
+                           "location": "top/eqn0", "severity": "error",
+                           "message": "msg"}
+
+
+# -- clean entry points over the real serving shard modes ------------------------
+def test_shardcheck_clean_on_tod_all_modes():
+    """All four passes over the real entry points (samples + chart
+    serving, DistributedICR, PCG matvec, cache-key audits) — the
+    zero-false-positive guarantee on the current device set."""
+    checked = []
+    findings = shardcheck_scenario("tod", checked=checked)
+    assert findings == [], [str(f) for f in findings]
+    assert "serve[samples]:tod" in checked
+    assert "pcg_matvec:tod" in checked
+    assert "cachekey:tod" in checked
+
+
+@pytest.mark.slow
+def test_shardcheck_cli_8dev():
+    """The CI step: ``python -m repro.analysis shardcheck`` on 8 virtual
+    devices (the CLI forces them itself) — full sweep, zero findings,
+    JSON artifact written."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_BACKEND", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "shardcheck"],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "shardcheck OK" in out.stdout
+    assert "FAIL" not in out.stdout, out.stdout

@@ -10,12 +10,16 @@ then review the git diff of the JSON goldens like any other code change.
 
 Extra arguments are forwarded to ``repro.analysis`` verbatim.
 
-Before rewriting anything, the launch-plan verifier (DESIGN.md §14,
-``python -m repro.analysis verify``) runs over the scenarios being
-re-baselined: goldens must never be regenerated on top of a launch the
-verifier can prove broken (coverage gap, out-of-bounds halo, swapped
-adjoint, ...), because that would bless the defect as the new baseline.
-``--force`` skips the gate — the findings are still printed.
+Before rewriting anything, two gates run over the scenarios being
+re-baselined: the launch-plan verifier (DESIGN.md §14, ``python -m
+repro.analysis verify``) and the mesh-safety analyzer (DESIGN.md §17,
+``python -m repro.analysis shardcheck``). Goldens must never be
+regenerated on top of a launch the verifier can prove broken (coverage
+gap, out-of-bounds halo, swapped adjoint, ...) or a sharded layer the
+analyzer can prove unsound (unbacked replication claim, unkeyed PRNG,
+mesh-size-dependent local gemms, uncovered cache-key input), because
+that would bless the defect as the new baseline. ``--force`` skips both
+gates — the findings are still printed.
 """
 import pathlib
 import sys
@@ -49,10 +53,39 @@ def _verifier_gate(argv) -> int:
     return 1
 
 
+def _shardcheck_gate(argv) -> int:
+    """Refuse to re-baseline while the mesh-safety analyzer has findings."""
+    from repro.analysis.mesh_verify import (SERVING_SCENARIOS,
+                                            shardcheck_scenario)
+
+    want = [argv[i + 1] for i, a in enumerate(argv) if a == "--scenario"]
+    names = list(SERVING_SCENARIOS)
+    if want:
+        # fingerprint labels are "<name>-<dtype>"; shardcheck sweeps per
+        # serving scenario name
+        picked = {w.split("-")[0] for w in want}
+        names = [n for n in names if n in picked]
+    findings = []
+    for name in names:
+        findings += shardcheck_scenario(name)
+    if not findings:
+        return 0
+    print("update_fingerprints: the mesh-safety analyzer reports "
+          f"{len(findings)} finding(s) — refusing to re-baseline the "
+          "goldens on top of a provably unsound sharded layer:",
+          file=sys.stderr)
+    for f in findings:
+        print(f"  {f}", file=sys.stderr)
+    print("fix the sharded entry points (or pass --force to override).",
+          file=sys.stderr)
+    return 1
+
+
 if __name__ == "__main__":
     argv = [a for a in sys.argv[1:] if a != "--force"]
     force = len(argv) != len(sys.argv) - 1
     gate = _verifier_gate(argv)
+    gate = _shardcheck_gate(argv) or gate
     if gate and not force:
         sys.exit(gate)
     if gate:
